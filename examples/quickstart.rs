@@ -1,0 +1,75 @@
+//! Quickstart: one LogAct agent, one task, the whole log.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds an in-memory AgentBus, wires the deconstructed state machine
+//! (Driver / rule Voter / Decider / Executor) around it, runs one task,
+//! and prints every entry the state machine appended — the audit trail is
+//! the log itself.
+
+use logact::bus::DeciderPolicy;
+use logact::inference::sim::{SimConfig, SimLm};
+use logact::sm::voter::RuleVoter;
+use logact::sm::{AgentHarness, HarnessConfig, VoterSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let engine = Arc::new(SimLm::new(SimConfig {
+        benign_fail_rate: 0.0,
+        ..SimConfig::frontier()
+    }));
+    let mut cfg = HarnessConfig::minimal(engine);
+    cfg.decider_policy = DeciderPolicy::FirstVoter;
+    cfg.voters = vec![VoterSpec::Rule(RuleVoter::production_pack())];
+    let h = AgentHarness::start(cfg);
+
+    let task = r#"TASK quickstart-1: Keep a tiny journal.
+===STEP===
+write_file("/journal/day1.txt", "learned: the log is the agent");
+print("wrote day 1");
+===STEP===
+print(read_file("/journal/day1.txt"));
+===FINAL===
+Journal entry saved: "learned: the log is the agent""#;
+
+    println!("sending task mail to the agent...\n");
+    let r = h.run_turn(task, Duration::from_secs(10));
+
+    println!("--- the AgentBus (every state transition, durably logged) ---");
+    for e in &r.entries {
+        let summary = match e.payload.ptype.name() {
+            "intent" => e.payload.body.get_str("code").unwrap_or("").replace('\n', " "),
+            "inf-out" => e.payload.body.get_str("text").unwrap_or("").replace('\n', " "),
+            "vote" => format!(
+                "{} ({})",
+                if e.payload.body.get_bool("approve") == Some(true) { "APPROVE" } else { "REJECT" },
+                e.payload.body.get_str("reason").unwrap_or("")
+            ),
+            "result" => e.payload.body.get_str("output").unwrap_or("").replace('\n', " "),
+            _ => String::new(),
+        };
+        println!(
+            "  [{:>2}] {:<8} {}",
+            e.position,
+            e.payload.ptype.name(),
+            summary.chars().take(80).collect::<String>()
+        );
+    }
+
+    println!("\nfinal answer: {}", r.final_text);
+    println!(
+        "turn: {} committed, {} aborted, {} inference calls, {:.1}s simulated",
+        r.committed,
+        r.aborted,
+        r.inference_calls,
+        r.wall.as_secs_f64()
+    );
+    println!("\nenvironment after the turn:");
+    let w = h.world().lock().unwrap();
+    println!("  /journal/day1.txt exists: {}", w.fs.file_names().any(|f| f == "/journal/day1.txt"));
+    drop(w);
+    h.shutdown();
+}

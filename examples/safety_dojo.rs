@@ -1,0 +1,46 @@
+//! Safety demo: a prompt-injection attack against a susceptible model,
+//! with and without LogAct voters.
+//!
+//! ```sh
+//! cargo run --release --example safety_dojo
+//! ```
+
+use logact::dojo::tasks::all_tasks;
+use logact::dojo::{run_case, suite_attacks, Defense};
+use logact::inference::sim::SimConfig;
+
+fn main() {
+    let tasks = all_tasks();
+    let attacks = suite_attacks("banking");
+    let task = tasks.iter().find(|t| t.id == "bk-04").unwrap(); // read the statement
+    let attack = attacks.iter().find(|a| a.id == "B-A1-drain").unwrap();
+
+    // A model that always follows injected directives (worst case).
+    let persona = SimConfig { inject_susceptibility: 1.0, benign_fail_rate: 0.0, ..SimConfig::target() };
+
+    println!("attack: a transfer directive injected into the bank statement the agent reads\n");
+
+    for defense in [Defense::NoDefense, Defense::RuleVoter, Defense::DualVoter] {
+        let c = run_case(task, Some(attack), &persona, defense);
+        println!(
+            "{:<12}  attack {}  | task utility {}  | {} tokens, {:.1}s",
+            defense.label(),
+            if c.attack_success { "SUCCEEDED  (money gone)" } else { "blocked" },
+            if c.utility { "preserved" } else { "lost" },
+            c.tokens,
+            c.latency.as_secs_f64(),
+        );
+    }
+
+    println!("\nand the benign false-positive case (pay the rent — a legitimate transfer):");
+    let rent = tasks.iter().find(|t| t.id == "bk-02").unwrap();
+    let honest = SimConfig { benign_fail_rate: 0.0, inject_susceptibility: 0.0, voter_false_reject_rate: 0.0, ..SimConfig::target() };
+    for defense in [Defense::RuleVoter, Defense::DualVoter] {
+        let c = run_case(rent, None, &honest, defense);
+        println!(
+            "{:<12}  rent paid: {}",
+            defense.label(),
+            if c.utility { "yes (LLM voter overrode the rule)" } else { "no (rule voter false positive)" }
+        );
+    }
+}

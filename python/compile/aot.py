@@ -1,0 +1,76 @@
+"""AOT bridge: lower the L2 model to HLO *text* for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/load_hlo/).
+
+Outputs (under --out-dir, default ../artifacts):
+  lm_step.hlo.txt   int32[1,SEQ] -> (f32[1,SEQ,VOCAB],)
+  lm_score.hlo.txt  int32[1,SEQ] -> (f32[1],)
+  meta.json         model geometry for the Rust side
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import DEFAULT_CONFIG, LmConfig, make_jitted
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights must survive the text
+    # round-trip — the default printer elides them as `constant({...})`,
+    # which the Rust-side text parser cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(out_dir: str, cfg: LmConfig = DEFAULT_CONFIG) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    step, score = make_jitted(cfg)
+    tok_spec = jax.ShapeDtypeStruct((1, cfg.seq), jnp.int32)
+
+    for name, fn in [("lm_step", step), ("lm_score", score)]:
+        text = to_hlo_text(fn.lower(tok_spec))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    meta = {
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "seed": cfg.seed,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {out_dir}/meta.json")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="compat: ignored if --out-dir given")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out and out_dir == "../artifacts":
+        out_dir = os.path.dirname(args.out) or "."
+    export(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""L1: flash-attention Pallas kernel (tiled, online softmax).
+
+The paper's inference tier is the hot-spot of a LogAct deployment (Fig. 5:
+the state machine spends almost all its time Inferring). We implement the
+attention inner loop of the local transformer LM as a TPU-shaped Pallas
+kernel:
+
+- The grid iterates over Q tiles; K/V are streamed through the inner loop in
+  `block_k`-sized tiles, so the S x S score matrix is never materialized
+  (HBM traffic is O(S*D), not O(S^2)).
+- The online-softmax carry (m, l, acc) lives in registers/VMEM, matching the
+  FlashAttention recurrence.
+- Tile shapes are chosen for the MXU/VPU: block sizes are multiples of 8
+  (sublane) and D stays in the lane dimension. VMEM working-set estimate for
+  the default config (block_q=block_k=64, D=32..128): q + k + v + acc tiles
+  = 64*128*4B * 4 = 128 KiB, far under the ~16 MiB VMEM budget; DESIGN.md §6
+  records the roofline discussion.
+
+On this image the kernel MUST run with interpret=True: the CPU PJRT plugin
+cannot execute Mosaic custom-calls. The flag is exposed so a real TPU build
+can flip it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    seq: int,
+    block_q: int,
+    block_k: int,
+    scale: float,
+    causal: bool,
+):
+    """One grid step: attend one Q tile against all K/V tiles."""
+    qi = pl.program_id(0)
+    d = q_ref.shape[-1]
+    padded = k_ref.shape[0]
+    nk = padded // block_k
+
+    q = q_ref[...].astype(jnp.float32) * scale  # [bq, d]
+    row = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+
+        s_blk = q @ k_blk.T  # [bq, bk] on the MXU
+        col = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        valid = col < seq  # mask K padding
+        if causal:
+            valid = valid & (col <= row)
+        s_blk = jnp.where(valid, s_blk, _NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s_blk.max(axis=-1))
+        p = jnp.exp(s_blk - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = lax.fori_loop(0, nk, body, (m0, l0, acc0))
+
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(x, target, axis=0):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    block_q: int = 64,
+    block_k: int = 64,
+    scale: float | None = None,
+    causal: bool = True,
+    interpret: bool = True,
+):
+    """Tiled causal attention for a single head. q/k/v: [S, D].
+
+    Arbitrary S is supported by padding to the block size; padded K columns
+    are masked inside the kernel and padded Q rows are sliced off the output.
+    """
+    s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, s))
+    sq = -(-s // block_q) * block_q  # ceil to multiple
+    sk = -(-s // block_k) * block_k
+    padded = max(sq, sk)
+    # Both K-stream and Q-grid see the same padded length for simplicity.
+    padded = -(-padded // block_q) * block_q
+    padded = -(-padded // block_k) * block_k
+
+    qp = _pad_to(q, padded)
+    kp = _pad_to(k, padded)
+    vp = _pad_to(v, padded)
+
+    grid = (padded // block_q,)
+    kernel = functools.partial(
+        _flash_kernel,
+        seq=s,
+        block_q=block_q,
+        block_k=block_k,
+        scale=scale,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((padded, d), lambda i: (0, 0)),
+            pl.BlockSpec((padded, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, d), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:s]
+
+
+def flash_mha(q, k, v, **kw):
+    """Multi-head flash attention. q/k/v: [H, S, D]."""
+    return jax.vmap(lambda qq, kk, vv: flash_attention(qq, kk, vv, **kw))(q, k, v)

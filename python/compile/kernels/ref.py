@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here, written with plain jax.numpy so it lowers to vanilla HLO.
+pytest (python/tests/) sweeps shapes and dtypes with hypothesis and asserts
+allclose between kernel and reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True):
+    """Plain softmax attention: softmax(q @ k^T * scale) @ v.
+
+    Shapes: q [S, D], k [S, D], v [S, D] (single head). Causal masking is
+    applied by default (decoder-only model).
+    """
+    s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    scores = (q @ k.T).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return (probs @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_ref(q, k, v, *, scale=None, causal=True):
+    """Multi-head wrapper over attention_ref. q/k/v: [H, S, D]."""
+    return jax.vmap(
+        lambda qq, kk, vv: attention_ref(qq, kk, vv, scale=scale, causal=causal)
+    )(q, k, v)
+
+
+def rmsnorm_ref(x, gamma, *, eps=1e-6):
+    """RMSNorm: x * gamma / sqrt(mean(x^2) + eps). x: [..., D], gamma: [D]."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * gamma.astype(jnp.float32) / jnp.sqrt(ms + eps)).astype(x.dtype)

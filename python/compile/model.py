@@ -1,0 +1,134 @@
+"""L2: the local transformer LM that stands in for the paper's inference tier.
+
+LogAct's evaluation uses remote LLMs (FrontierModel / Target). This image has
+no network, so the request-path inference compute is a small decoder-only
+transformer authored here in JAX, with the attention hot-spot implemented as
+the L1 Pallas kernel (kernels/attention.py) and RMSNorm as a fused kernel
+(kernels/rmsnorm.py). aot.py lowers two entry points to HLO text that the
+Rust runtime loads via PJRT:
+
+  lm_step(tokens int32[1, SEQ])  -> logits f32[1, SEQ, VOCAB]
+      next-token logits at every position (the Driver picks position len-1)
+  lm_score(tokens int32[1, SEQ]) -> score f32[1]
+      pooled safety-score head in [0, 1], used by the LLM-based Voter
+
+Weights are deterministic (seeded PRNG) and are baked into the lowered HLO
+as constants, so the Rust side feeds only token ids. The model is not
+trained — the *semantics* of the simulated models live in the Rust persona
+layer (rust/src/inference/sim.rs); this module provides genuine token-level
+compute, latency, and the L1/L2/L3 plumbing the architecture requires.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_mha
+from .kernels.rmsnorm import rmsnorm
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256        # byte-level tokenizer on the Rust side
+    seq: int = 128          # fixed AOT window
+    d_model: int = 128
+    n_heads: int = 4        # d_head = 32
+    n_layers: int = 2
+    d_ff: int = 512
+    seed: int = 20260710
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = LmConfig()
+
+
+def init_params(cfg: LmConfig = DEFAULT_CONFIG):
+    """Deterministic, seeded parameters (never trained; see module doc)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = iter(jax.random.split(key, 4 + 6 * cfg.n_layers))
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    params = {
+        "embed": dense(next(keys), cfg.d_model, (cfg.vocab, cfg.d_model)),
+        "pos": dense(next(keys), cfg.d_model, (cfg.seq, cfg.d_model)),
+        "unembed": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.vocab)),
+        "score_head": dense(next(keys), cfg.d_model, (cfg.d_model, 1)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "wqkv": dense(next(keys), cfg.d_model, (cfg.d_model, 3 * cfg.d_model)),
+                "wo": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.d_model)),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "w1": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.d_ff)),
+                "w2": dense(next(keys), cfg.d_ff, (cfg.d_ff, cfg.d_model)),
+            }
+        )
+        # consume the remaining per-layer keys deterministically
+        next(keys), next(keys)
+    return params
+
+
+def _block(x, layer, cfg: LmConfig, *, use_pallas: bool):
+    """One pre-norm transformer block. x: [S, D]."""
+    norm = rmsnorm if use_pallas else ref.rmsnorm_ref
+    attn = flash_mha if use_pallas else ref.mha_ref
+
+    h = norm(x, layer["ln1"])
+    qkv = h @ layer["wqkv"]  # [S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [S, D] -> [H, S, Dh]
+        return t.reshape(cfg.seq, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+    o = attn(heads(q), heads(k), heads(v))  # [H, S, Dh]
+    o = o.transpose(1, 0, 2).reshape(cfg.seq, cfg.d_model)
+    x = x + o @ layer["wo"]
+
+    h = norm(x, layer["ln2"])
+    x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    return x
+
+
+def forward(params, tokens, cfg: LmConfig = DEFAULT_CONFIG, *, use_pallas: bool = True):
+    """Hidden states for a [SEQ] token window -> [SEQ, D]."""
+    x = params["embed"][tokens] + params["pos"]
+    for layer in params["layers"]:
+        x = _block(x, layer, cfg, use_pallas=use_pallas)
+    norm = rmsnorm if use_pallas else ref.rmsnorm_ref
+    return norm(x, jnp.ones((cfg.d_model,), jnp.float32))
+
+
+def lm_step(params, tokens, cfg: LmConfig = DEFAULT_CONFIG, *, use_pallas: bool = True):
+    """Batched next-token logits. tokens: int32[1, SEQ] -> f32[1, SEQ, VOCAB]."""
+    h = forward(params, tokens[0], cfg, use_pallas=use_pallas)
+    return (h @ params["unembed"])[None, :, :]
+
+
+def lm_score(params, tokens, cfg: LmConfig = DEFAULT_CONFIG, *, use_pallas: bool = True):
+    """Pooled safety score in [0,1]. tokens: int32[1, SEQ] -> f32[1]."""
+    h = forward(params, tokens[0], cfg, use_pallas=use_pallas)
+    pooled = h.mean(axis=0)
+    return jax.nn.sigmoid(pooled @ params["score_head"])
+
+
+def make_jitted(cfg: LmConfig = DEFAULT_CONFIG, *, use_pallas: bool = True):
+    """Close over baked params; return (step_fn, score_fn) of tokens only."""
+    params = init_params(cfg)
+    step = functools.partial(lm_step, params, cfg=cfg, use_pallas=use_pallas)
+    score = functools.partial(lm_score, params, cfg=cfg, use_pallas=use_pallas)
+    return jax.jit(step), jax.jit(score)

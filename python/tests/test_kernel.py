@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for everything the Rust runtime will execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, flash_mha
+from compile.kernels.rmsnorm import rmsnorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s", [8, 16, 64, 128])
+    @pytest.mark.parametrize("d", [16, 32, 64])
+    def test_matches_ref_f32(self, s, d):
+        q, k, v = (rand(i, (s, d), jnp.float32) for i in range(3))
+        out = flash_attention(q, k, v)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    @pytest.mark.parametrize("s", [16, 96])
+    def test_matches_ref_bf16(self, s):
+        q, k, v = (rand(i, (s, 32), jnp.bfloat16) for i in range(3))
+        out = flash_attention(q, k, v).astype(jnp.float32)
+        exp = ref.attention_ref(q, k, v).astype(jnp.float32)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.bfloat16])
+
+    def test_non_causal(self):
+        q, k, v = (rand(i, (32, 16), jnp.float32) for i in range(3))
+        out = flash_attention(q, k, v, causal=False)
+        exp = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    def test_custom_scale(self):
+        q, k, v = (rand(i, (16, 8), jnp.float32) for i in range(3))
+        out = flash_attention(q, k, v, scale=0.25)
+        exp = ref.attention_ref(q, k, v, scale=0.25)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    @pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32), (64, 16)])
+    def test_block_shape_invariance(self, bq, bk):
+        """Output must not depend on the tiling schedule."""
+        q, k, v = (rand(i, (64, 32), jnp.float32) for i in range(3))
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    def test_ragged_seq_padding(self):
+        """S not divisible by block size exercises the padding/mask path."""
+        q, k, v = (rand(i, (50, 16), jnp.float32) for i in range(3))
+        out = flash_attention(q, k, v, block_q=16, block_k=16)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    def test_causal_first_row_attends_self_only(self):
+        q, k = (rand(i, (8, 8), jnp.float32) for i in range(2))
+        v = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+    def test_mha(self):
+        q, k, v = (rand(i, (4, 32, 16), jnp.float32) for i in range(3))
+        out = flash_mha(q, k, v)
+        exp = ref.mha_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, **TOLS[jnp.float32])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        s=st.integers(min_value=2, max_value=80),
+        d=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        key=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_sweep(self, s, d, bq, bk, causal, key):
+        q = rand(key, (s, d), jnp.float32)
+        k = rand(key + 1, (s, d), jnp.float32)
+        v = rand(key + 2, (s, d), jnp.float32)
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk, causal=causal)
+        exp = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, exp, rtol=5e-5, atol=5e-5)
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("n,d", [(1, 8), (7, 32), (64, 128), (100, 64)])
+    def test_matches_ref(self, n, d):
+        x = rand(0, (n, d), jnp.float32)
+        g = rand(1, (d,), jnp.float32)
+        np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm_ref(x, g), rtol=2e-5, atol=2e-5)
+
+    def test_1d_input(self):
+        x = rand(0, (16,), jnp.float32)
+        g = jnp.ones((16,), jnp.float32)
+        out = rmsnorm(x, g)
+        assert out.shape == (16,)
+        np.testing.assert_allclose(out, ref.rmsnorm_ref(x, g), rtol=2e-5, atol=2e-5)
+
+    def test_unit_rms(self):
+        """RMSNorm output with gamma=1 has RMS 1 per row."""
+        x = rand(3, (32, 64), jnp.float32)
+        out = rmsnorm(x, jnp.ones((64,), jnp.float32))
+        rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+        np.testing.assert_allclose(rms, np.ones(32), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=96),
+        d=st.sampled_from([8, 32, 128]),
+        br=st.sampled_from([8, 32, 64]),
+        key=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_sweep(self, n, d, br, key):
+        x = rand(key, (n, d), jnp.float32)
+        g = rand(key + 1, (d,), jnp.float32)
+        out = rmsnorm(x, g, block_rows=br)
+        np.testing.assert_allclose(out, ref.rmsnorm_ref(x, g), rtol=5e-5, atol=5e-5)

@@ -1,0 +1,145 @@
+//! Fig. 5 — LogAct overhead for a simple agentic task (write a C program,
+//! compile it, run it), reproduced as three panels:
+//!
+//! * Top: per-stage time breakdown (Inferring dominates; Deciding invisible).
+//! * Middle: log storage (bytes by entry type; ~70KB is the system prompt;
+//!   the paper reports ≈80KB over a ~30s task, ≈2.6KB/s).
+//! * Bottom: cumulative per-stage latency across backends
+//!   (mem / durable-file / kv-local / dynamodb / anondb-geo) × decider
+//!   policies (on_by_default / first_voter).
+
+use logact::bus::{BusBackendKind, DeciderPolicy, LatencyProfile};
+use logact::inference::sim::{SimConfig, SimLm};
+use logact::metrics::Stage;
+use logact::sm::voter::RuleVoter;
+use logact::sm::{AgentHarness, HarnessConfig, VoterSpec};
+use logact::util::clock::Clock;
+use logact::util::tables::{secs, Table};
+use std::sync::Arc;
+use std::time::Duration;
+
+const HELLO_TASK: &str = r##"TASK hello-1: Write a C hello-world, compile it, and run it.
+===STEP===
+write_file("/src/hello.c", "#include <stdio.h>\nint main() { puts(\"hello, world\"); return 0; }");
+print("wrote hello.c");
+===STEP===
+print(shell("cc /src/hello.c"));
+===STEP===
+print(shell("./a.out"));
+===FINAL===
+The program compiled and printed: hello, world"##;
+
+fn engine() -> Arc<SimLm> {
+    Arc::new(SimLm::new(SimConfig {
+        benign_fail_rate: 0.0,
+        inject_susceptibility: 0.0,
+        voter_false_reject_rate: 0.0,
+        ..SimConfig::frontier()
+    }))
+}
+
+fn run_once(
+    backend: BusBackendKind,
+    policy: DeciderPolicy,
+    with_voter: bool,
+) -> logact::sm::TurnReport {
+    let clock = Clock::sim();
+    let mut cfg = HarnessConfig::minimal(engine());
+    cfg.name = "fig5".into();
+    cfg.backend = backend;
+    cfg.clock = clock.clone();
+    cfg.world = logact::env::World::shared(clock);
+    cfg.decider_policy = policy;
+    if with_voter {
+        cfg.voters = vec![VoterSpec::Rule(RuleVoter::production_pack())];
+    }
+    let h = AgentHarness::start(cfg);
+    let r = h.run_turn(HELLO_TASK, Duration::from_secs(30));
+    assert!(!r.timed_out, "fig5 task must complete");
+    h.shutdown();
+    r
+}
+
+fn main() {
+    println!("=== Fig. 5: LogAct overhead (hello-world task) ===");
+
+    // ---- Top: stage breakdown (mem backend, first_voter policy). --------
+    let r = run_once(BusBackendKind::Mem, DeciderPolicy::FirstVoter, true);
+    let mut top = Table::new(
+        "Fig. 5 (top) — time per state-machine stage",
+        &["stage", "time", "share"],
+    );
+    for s in Stage::ALL {
+        let t = r.stages.get(s);
+        top.row(&[
+            s.name().to_string(),
+            format!("{:.3}s", t.as_secs_f64()),
+            format!("{:.2}%", 100.0 * t.as_secs_f64() / r.stages.total.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    top.emit("fig5_top_stages");
+
+    // ---- Middle: log storage. -------------------------------------------
+    let clock = Clock::sim();
+    let mut cfg = HarnessConfig::minimal(engine());
+    cfg.clock = clock.clone();
+    cfg.world = logact::env::World::shared(clock.clone());
+    let h = AgentHarness::start(cfg);
+    let r2 = h.run_turn(HELLO_TASK, Duration::from_secs(30));
+    let by_type = h.bus().bytes_by_type();
+    let total: u64 = by_type.values().sum();
+    let mut mid = Table::new(
+        "Fig. 5 (middle) — log storage by entry type",
+        &["entry type", "bytes", "share"],
+    );
+    for (t, b) in &by_type {
+        mid.row(&[
+            t.name().to_string(),
+            format!("{b}"),
+            format!("{:.1}%", 100.0 * *b as f64 / total as f64),
+        ]);
+    }
+    mid.row(&["TOTAL".into(), format!("{total}"), "100%".into()]);
+    mid.emit("fig5_mid_storage");
+    println!(
+        "task wall (sim): {} | log rate: {:.2} KB/s | (paper: ~80KB over ~30s, 2.6KB/s; ~70KB is the system prompt)",
+        secs(r2.wall),
+        total as f64 / 1024.0 / r2.wall.as_secs_f64().max(1e-9)
+    );
+    h.shutdown();
+
+    // ---- Bottom: backends x policies. -------------------------------------
+    let tmp = std::env::temp_dir().join(format!("logact-fig5-{}.log", std::process::id()));
+    let backends: Vec<(&str, BusBackendKind)> = vec![
+        ("mem", BusBackendKind::Mem),
+        ("durable-file", BusBackendKind::Durable(tmp.clone())),
+        ("kv-local", BusBackendKind::Remote(LatencyProfile::local())),
+        ("dynamodb", BusBackendKind::Remote(LatencyProfile::regional())),
+        ("anondb-geo", BusBackendKind::Remote(LatencyProfile::geo())),
+    ];
+    let mut bot = Table::new(
+        "Fig. 5 (bottom) — cumulative per-stage latency by backend x policy",
+        &["backend", "policy", "Inferring", "Voting", "Deciding", "Executing", "total"],
+    );
+    for (name, backend) in backends {
+        for (pname, policy, voter) in [
+            ("on_by_default", DeciderPolicy::OnByDefault, false),
+            ("first_voter", DeciderPolicy::FirstVoter, true),
+        ] {
+            let _ = std::fs::remove_file(&tmp);
+            let r = run_once(backend.clone(), policy.clone(), voter);
+            bot.row(&[
+                name.to_string(),
+                pname.to_string(),
+                format!("{:.3}s", r.stages.get(Stage::Inferring).as_secs_f64()),
+                format!("{:.4}s", r.stages.get(Stage::Voting).as_secs_f64()),
+                format!("{:.4}s", r.stages.get(Stage::Deciding).as_secs_f64()),
+                format!("{:.3}s", r.stages.get(Stage::Executing).as_secs_f64()),
+                secs(r.wall),
+            ]);
+        }
+    }
+    bot.emit("fig5_bottom_backends");
+    let _ = std::fs::remove_file(&tmp);
+    println!("shape check: inference dominates every configuration; voting/deciding stay ~ms even geo-distributed.");
+}

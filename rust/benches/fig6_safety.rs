@@ -1,0 +1,77 @@
+//! Fig. 6 — pluggable voters on DojoSim.
+//!
+//! Left panel: benign Utility and ASR for FrontierModel, Target
+//! (no defense), Target + rule voter, Target + dual voter (boolean_OR of
+//! rule and LLM-override). Paper: 91.8/0, 81.4/48.2, 49.5/1.4, 78.4/1.4.
+//!
+//! Right panel: average benign task latency and token usage. Paper:
+//! Frontier 13.3s; Target 6.7s -> 10.6s (+58%, rule) -> 12.2s (+82%,
+//! dual); dual adds ~13% tokens.
+
+use logact::dojo::{run_benchmark, Defense};
+use logact::inference::sim::SimConfig;
+use logact::util::tables::{pct, secs, Table};
+
+fn main() {
+    println!("=== Fig. 6: DojoSim — Utility / ASR / latency / tokens ===");
+    println!("(42 benign tasks, 29 injection cases; see dojo/ for the suites)");
+
+    let configs: Vec<(&str, SimConfig, Defense)> = vec![
+        ("FrontierModel (no defense)", SimConfig::frontier(), Defense::NoDefense),
+        ("Target (no defense)", SimConfig::target(), Defense::NoDefense),
+        ("Target + rule voter", SimConfig::target(), Defense::RuleVoter),
+        ("Target + dual voter (OR)", SimConfig::target(), Defense::DualVoter),
+    ];
+
+    let mut left = Table::new(
+        "Fig. 6 (left) — benign Utility and ASR",
+        &["config", "benign utility", "ASR", "action-less successes", "paper (util/ASR)"],
+    );
+    let mut right = Table::new(
+        "Fig. 6 (right) — avg benign latency and tokens",
+        &["config", "avg latency", "vs target", "avg tokens", "vs target"],
+    );
+
+    let paper = ["91.8% / 0%", "81.4% / 48.2%", "49.5% / 1.4%", "78.4% / 1.4%"];
+    let mut target_latency = 0.0;
+    let mut target_tokens = 0.0;
+    for (i, (label, persona, defense)) in configs.into_iter().enumerate() {
+        let rep = run_benchmark(label, &persona, defense);
+        left.row(&[
+            label.to_string(),
+            pct(rep.benign_utility),
+            pct(rep.asr),
+            format!("{}/{}", rep.actionless_successes, rep.n_attack),
+            paper[i].to_string(),
+        ]);
+        let lat = rep.avg_latency.as_secs_f64();
+        if i == 1 {
+            target_latency = lat;
+            target_tokens = rep.avg_tokens;
+        }
+        let rel = |x: f64, base: f64| {
+            if base > 0.0 {
+                format!("{:+.0}%", 100.0 * (x / base - 1.0))
+            } else {
+                "-".to_string()
+            }
+        };
+        right.row(&[
+            label.to_string(),
+            secs(rep.avg_latency),
+            if i >= 1 { rel(lat, target_latency) } else { "-".into() },
+            format!("{:.0}", rep.avg_tokens),
+            if i >= 1 { rel(rep.avg_tokens, target_tokens) } else { "-".into() },
+        ]);
+        println!(
+            "  {label}: utility={} asr={} (benign n={}, attack n={})",
+            pct(rep.benign_utility),
+            pct(rep.asr),
+            rep.n_benign,
+            rep.n_attack
+        );
+    }
+    left.emit("fig6_left_utility_asr");
+    right.emit("fig6_right_latency_tokens");
+    println!("shape check: rule voter kills ASR to the action-less residue but costs utility; the dual-voter OR quorum restores utility at modest latency/token overhead.");
+}

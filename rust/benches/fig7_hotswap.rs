@@ -1,0 +1,99 @@
+//! Fig. 7 — hot-swapping voters on a live agent.
+//!
+//! One agent processes a stream of benign DojoSim tasks with attacks
+//! injected at a 10% rate. Phase 1: Target with no defenses (utility high,
+//! all susceptible attacks land). At ~1/3 of the run a Policy entry flips
+//! the decider to `first_voter` and a rule voter is hot-plugged: attacks
+//! stop, utility drops. At ~2/3 a second Policy entry flips to
+//! `boolean_OR` and an LLM voter is plugged: utility recovers, attacks
+//! stay blocked. (Paper: switches at 312s and 655s.)
+
+use logact::dojo::{run_case, suite_attacks, Defense};
+use logact::dojo::tasks::all_tasks;
+use logact::inference::sim::SimConfig;
+use logact::util::rng::Rng;
+use logact::util::tables::{pct, Table};
+
+fn main() {
+    println!("=== Fig. 7: voters hot-swapped on a live agent ===");
+    let tasks = all_tasks();
+    let attacks: Vec<_> =
+        ["workspace", "banking", "devops"].iter().flat_map(|s| suite_attacks(s)).collect();
+    let persona = SimConfig::target();
+    let mut rng = Rng::new(2026);
+
+    // 60 turns; phase boundaries at 20 and 40 (paper: 312s / 655s of a
+    // ~1000s run). Each turn is an independent case on a fresh env, but the
+    // policy/voter deployment follows the live-swap schedule — this is the
+    // same sequence of Policy entries AgentHarness::set_decider_policy +
+    // add_voter append in the integration test; here we sweep it at
+    // benchmark scale.
+    let n_turns = 60;
+    let mut series = Table::new(
+        "Fig. 7 — utility / attack-success over the run (windows of 5 turns)",
+        &["turn window", "sim time", "policy", "utility", "attack success rate"],
+    );
+    let mut window: Vec<(bool, Option<bool>)> = Vec::new();
+    let mut sim_elapsed = 0.0f64;
+    let mut window_start_time = 0.0f64;
+    let mut turn_in_window = 0;
+    let mut wstart = 0;
+
+    for turn in 0..n_turns {
+        let defense = if turn < 20 {
+            Defense::NoDefense
+        } else if turn < 40 {
+            Defense::RuleVoter
+        } else {
+            Defense::DualVoter
+        };
+        // 10% attack rate on carrier-bearing tasks.
+        let attack = if turn % 10 == 9 {
+            Some(&attacks[rng.gen_range(attacks.len() as u64) as usize])
+        } else {
+            None
+        };
+        let task = loop {
+            let t = &tasks[rng.gen_range(tasks.len() as u64) as usize];
+            if attack.is_none() || (t.carrier.is_some() && attack.map(|a| a.suite) == Some(t.suite))
+            {
+                break t;
+            }
+        };
+        let c = run_case(task, attack, &persona, defense);
+        sim_elapsed += c.latency.as_secs_f64();
+        window.push((c.utility, attack.map(|_| c.attack_success)));
+        turn_in_window += 1;
+
+        if turn_in_window == 5 {
+            let util =
+                window.iter().filter(|(u, _)| *u).count() as f64 / window.len() as f64;
+            let atk: Vec<bool> = window.iter().filter_map(|(_, a)| *a).collect();
+            let asr = if atk.is_empty() {
+                0.0
+            } else {
+                atk.iter().filter(|x| **x).count() as f64 / atk.len() as f64
+            };
+            let policy = if turn < 20 {
+                "on_by_default"
+            } else if turn < 40 {
+                "first_voter + rule"
+            } else {
+                "boolean_OR + rule + llm"
+            };
+            series.row(&[
+                format!("{}..{}", wstart, turn + 1),
+                format!("{:.0}s..{:.0}s", window_start_time, sim_elapsed),
+                policy.to_string(),
+                pct(util),
+                pct(asr),
+            ]);
+            window.clear();
+            turn_in_window = 0;
+            wstart = turn + 1;
+            window_start_time = sim_elapsed;
+        }
+    }
+    series.emit("fig7_hotswap");
+    println!("policy swaps at turn 20 (-> first_voter + rule voter) and turn 40 (-> boolean_OR + llm voter), mirroring the paper's 312s / 655s switches.");
+}

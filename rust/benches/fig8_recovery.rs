@@ -1,0 +1,90 @@
+//! Fig. 8 — semantic recovery / health check / optimization.
+//!
+//! A worker checksums 2000 top-level folders on a network-mounted FS with
+//! the pathological `sorted(rglob(...))` implementation; it is killed
+//! after 1184 folders. A recovery agent introspects the crashed bus,
+//! resumes without repeating work, health-checks a scandir-based
+//! implementation, and finishes the remaining folders hundreds of times
+//! faster. (Paper: 1184 done at kill; 31s recovery window; remaining 816
+//! folders in 0.36s — 290x.)
+
+use logact::bus::PayloadType;
+use logact::recovery::run_fig8;
+use logact::util::tables::Table;
+
+fn main() {
+    println!("=== Fig. 8: semantic recovery on the checksum task ===");
+    let folders = 2000;
+    let kill_after = 1184;
+    let o = run_fig8(folders, 1, kill_after);
+
+    // ---- Left panel: per-folder latency by phase. -----------------------
+    let mut left = Table::new(
+        "Fig. 8 (left) — phases of the run",
+        &["phase", "folders", "sim time", "per-folder"],
+    );
+    left.row(&[
+        "phase 1 (rglob worker, killed)".into(),
+        format!("{}", o.phase1_folders),
+        format!("{:.1}s", o.phase1_time.as_secs_f64()),
+        format!("{:.1}ms", 1000.0 * o.phase1_time.as_secs_f64() / o.phase1_folders.max(1) as f64),
+    ]);
+    left.row(&[
+        "recovery window (introspection + health check)".into(),
+        "-".into(),
+        format!("{:.1}s", o.recovery_inspect_time.as_secs_f64()),
+        "-".into(),
+    ]);
+    left.row(&[
+        "phase 2 (scandir recovery worker)".into(),
+        format!("{}", o.phase2_folders),
+        format!("{:.2}s", o.phase2_loop_time.as_secs_f64()),
+        format!("{:.3}ms", 1000.0 * o.phase2_loop_time.as_secs_f64() / o.phase2_folders.max(1) as f64),
+    ]);
+    left.emit("fig8_left_phases");
+    println!(
+        "speedup: {:.0}x per folder (paper: 290x) | verified: {} | {} + {} = {} folders, none redone",
+        o.speedup,
+        o.verified,
+        o.phase1_folders,
+        o.phase2_folders,
+        o.total_folders
+    );
+
+    // Progress samples as the latency series (CSV for plotting).
+    let mut prog = Table::new(
+        "Fig. 8 (left, series) — slow-phase progress samples",
+        &["sim_time_s", "folders_done"],
+    );
+    for s in o.phase1_samples.iter().step_by(o.phase1_samples.len().max(40) / 40) {
+        prog.row(&[format!("{:.2}", s.sim_time.as_secs_f64()), format!("{}", s.folders_done)]);
+    }
+    prog.emit("fig8_progress_series");
+
+    // ---- Right panel: the recovery agent's bus trace. -------------------
+    let mut trace = Table::new(
+        "Fig. 8 (right) — recovery agent AgentBus trace",
+        &["#", "sim time", "type", "content"],
+    );
+    for e in &o.recovery_entries {
+        let content = match e.payload.ptype {
+            PayloadType::InfOut => e.payload.body.get_str("text").unwrap_or("").to_string(),
+            PayloadType::Intent => {
+                format!("Code: {}", e.payload.body.get_str("code").unwrap_or("").lines().next().unwrap_or(""))
+            }
+            PayloadType::Commit => "ON_BY_DEFAULT policy (auto-commit)".into(),
+            PayloadType::Result => e.payload.body.get_str("output").unwrap_or("").to_string(),
+            PayloadType::Mail => "Task + crashed agent's bus intentions".into(),
+            PayloadType::InfIn => "Full message history sent to LLM (delta logged)".into(),
+            _ => String::new(),
+        };
+        let first_line = content.lines().next().unwrap_or("").chars().take(70).collect::<String>();
+        trace.row(&[
+            format!("{}", e.position),
+            format!("{:.1}s", e.realtime_ts as f64 / 1000.0),
+            e.payload.ptype.name().to_string(),
+            first_line,
+        ]);
+    }
+    trace.emit("fig8_right_trace");
+}

@@ -1,0 +1,53 @@
+//! Fig. 9 — agentic introspection makes swarms faster and cheaper.
+//!
+//! 6 worker agents add type annotations to a synthetic Python codebase,
+//! coordinating via mailbox entries. Base: gossip only. Supervisor: an
+//! extra agent introspects every worker's bus and mails consolidated infra
+//! fixes + claim summaries. (Paper: +17% work, −41% tokens.)
+
+use logact::swarm::run_fig9;
+use logact::util::tables::{pct, Table};
+
+fn main() {
+    println!("=== Fig. 9: swarm with and without an introspecting supervisor ===");
+    let (base, sup) = run_fig9(2026);
+
+    let mut t = Table::new(
+        "Fig. 9 — 6-agent swarm, fixed time budget",
+        &[
+            "config",
+            "files type-fixed",
+            "duplicate work",
+            "discovery rounds",
+            "total tokens",
+            "supervisor tokens",
+        ],
+    );
+    for o in [&base, &sup] {
+        t.row(&[
+            o.label.clone(),
+            format!("{}", o.files_fixed),
+            format!("{}", o.duplicate_work),
+            format!("{}", o.discovery_rounds),
+            format!("{}", o.total_tokens),
+            format!("{}", o.supervisor_tokens),
+        ]);
+    }
+    t.emit("fig9_swarm");
+
+    let work_gain = sup.files_fixed as f64 / base.files_fixed as f64 - 1.0;
+    let token_cut = 1.0 - sup.total_tokens as f64 / base.total_tokens as f64;
+    println!(
+        "supervisor vs base: {} more work, {} fewer tokens (paper: +17% / −41%)",
+        pct(work_gain),
+        pct(token_cut)
+    );
+
+    let mut per = Table::new("per-worker files fixed", &["config", "w0", "w1", "w2", "w3", "w4", "w5"]);
+    for o in [&base, &sup] {
+        let mut row = vec![o.label.clone()];
+        row.extend(o.per_worker_files.iter().map(|n| n.to_string()));
+        per.row(&row);
+    }
+    per.emit("fig9_per_worker");
+}

@@ -1,0 +1,786 @@
+//! ActLang tree-walking interpreter with environment builtins.
+
+use super::ast::{BinOp, Expr, Program, Stmt, UnOp, Value};
+use crate::env::{EmailMsg, World};
+use crate::util::clock::Clock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Cooperative crash injection: tests / the Fig. 8 harness flip this to
+/// kill the Executor mid-lambda, leaving the environment half-mutated.
+#[derive(Debug, Clone, Default)]
+pub struct KillSwitch(Arc<AtomicBool>);
+
+impl KillSwitch {
+    pub fn new() -> KillSwitch {
+        KillSwitch::default()
+    }
+
+    pub fn kill(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn reset(&self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Result of running an intention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecOutcome {
+    pub ok: bool,
+    /// Captured `print` output (becomes the Result entry body).
+    pub output: String,
+    pub error: Option<String>,
+    pub steps: u64,
+    pub returned: Value,
+}
+
+#[derive(Debug)]
+enum Flow {
+    Normal(Value),
+    Return(Value),
+}
+
+#[derive(Debug)]
+pub struct InterpError(pub String);
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub struct Interp {
+    world: Arc<Mutex<World>>,
+    clock: Clock,
+    vars: std::collections::HashMap<String, Value>,
+    out: String,
+    steps: u64,
+    max_steps: u64,
+    kill: KillSwitch,
+}
+
+impl Interp {
+    pub fn new(world: Arc<Mutex<World>>, clock: Clock) -> Interp {
+        Interp {
+            world,
+            clock,
+            vars: Default::default(),
+            out: String::new(),
+            steps: 0,
+            max_steps: 5_000_000,
+            kill: KillSwitch::new(),
+        }
+    }
+
+    pub fn with_kill_switch(mut self, k: KillSwitch) -> Interp {
+        self.kill = k;
+        self
+    }
+
+    pub fn with_max_steps(mut self, n: u64) -> Interp {
+        self.max_steps = n;
+        self
+    }
+
+    pub fn run(mut self, prog: &Program) -> ExecOutcome {
+        match self.exec_block(&prog.stmts) {
+            Ok(Flow::Return(v)) | Ok(Flow::Normal(v)) => ExecOutcome {
+                ok: true,
+                output: self.out,
+                error: None,
+                steps: self.steps,
+                returned: v,
+            },
+            Err(e) => ExecOutcome {
+                ok: false,
+                output: self.out,
+                error: Some(e.0),
+                steps: self.steps,
+                returned: Value::Null,
+            },
+        }
+    }
+
+    fn tick(&mut self) -> Result<(), InterpError> {
+        self.steps += 1;
+        if self.steps > self.max_steps {
+            return Err(InterpError("step budget exceeded".into()));
+        }
+        if self.kill.is_killed() {
+            return Err(InterpError("executor killed".into()));
+        }
+        Ok(())
+    }
+
+    fn exec_block(&mut self, stmts: &[Stmt]) -> Result<Flow, InterpError> {
+        let mut last = Value::Null;
+        for s in stmts {
+            match self.exec_stmt(s)? {
+                Flow::Return(v) => return Ok(Flow::Return(v)),
+                Flow::Normal(v) => last = v,
+            }
+        }
+        Ok(Flow::Normal(last))
+    }
+
+    fn exec_stmt(&mut self, s: &Stmt) -> Result<Flow, InterpError> {
+        self.tick()?;
+        match s {
+            Stmt::Let(name, e) | Stmt::Assign(name, e) => {
+                let v = self.eval(e)?;
+                self.vars.insert(name.clone(), v);
+                Ok(Flow::Normal(Value::Null))
+            }
+            Stmt::ExprStmt(e) => Ok(Flow::Normal(self.eval(e)?)),
+            Stmt::If(cond, then, els) => {
+                if self.eval(cond)?.truthy() {
+                    self.exec_block(then)
+                } else {
+                    self.exec_block(els)
+                }
+            }
+            Stmt::Foreach(var, e, body) => {
+                let items = match self.eval(e)? {
+                    Value::List(l) => l,
+                    Value::Str(s) => s.chars().map(|c| Value::Str(c.to_string())).collect(),
+                    other => return Err(InterpError(format!("cannot iterate {}", other.type_name()))),
+                };
+                for item in items {
+                    self.tick()?;
+                    self.vars.insert(var.clone(), item);
+                    if let Flow::Return(v) = self.exec_block(body)? {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+                Ok(Flow::Normal(Value::Null))
+            }
+            Stmt::While(cond, body) => {
+                while self.eval(cond)?.truthy() {
+                    self.tick()?;
+                    if let Flow::Return(v) = self.exec_block(body)? {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+                Ok(Flow::Normal(Value::Null))
+            }
+            Stmt::Return(e) => {
+                let v = match e {
+                    Some(e) => self.eval(e)?,
+                    None => Value::Null,
+                };
+                Ok(Flow::Return(v))
+            }
+        }
+    }
+
+    fn eval(&mut self, e: &Expr) -> Result<Value, InterpError> {
+        self.tick()?;
+        match e {
+            Expr::Lit(v) => Ok(v.clone()),
+            Expr::Var(name) => self
+                .vars
+                .get(name)
+                .cloned()
+                .ok_or_else(|| InterpError(format!("undefined variable '{name}'"))),
+            Expr::ListLit(items) => {
+                let mut out = Vec::with_capacity(items.len());
+                for i in items {
+                    out.push(self.eval(i)?);
+                }
+                Ok(Value::List(out))
+            }
+            Expr::Unary(op, e) => {
+                let v = self.eval(e)?;
+                match op {
+                    UnOp::Not => Ok(Value::Bool(!v.truthy())),
+                    UnOp::Neg => match v {
+                        Value::Int(i) => Ok(Value::Int(-i)),
+                        Value::Float(f) => Ok(Value::Float(-f)),
+                        v => Err(InterpError(format!("cannot negate {}", v.type_name()))),
+                    },
+                }
+            }
+            Expr::Binary(op, a, b) => {
+                // Short-circuit logic ops.
+                if *op == BinOp::And {
+                    let av = self.eval(a)?;
+                    return if !av.truthy() { Ok(Value::Bool(false)) } else { Ok(Value::Bool(self.eval(b)?.truthy())) };
+                }
+                if *op == BinOp::Or {
+                    let av = self.eval(a)?;
+                    return if av.truthy() { Ok(Value::Bool(true)) } else { Ok(Value::Bool(self.eval(b)?.truthy())) };
+                }
+                let av = self.eval(a)?;
+                let bv = self.eval(b)?;
+                self.binop(*op, av, bv)
+            }
+            Expr::Call(name, args) => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a)?);
+                }
+                self.call(name, vals)
+            }
+            Expr::Index(e, i) => {
+                let v = self.eval(e)?;
+                let idx = self.eval(i)?;
+                match (v, idx) {
+                    (Value::List(l), Value::Int(i)) => {
+                        let i = if i < 0 { l.len() as i64 + i } else { i };
+                        l.get(i as usize)
+                            .cloned()
+                            .ok_or_else(|| InterpError(format!("index {i} out of range")))
+                    }
+                    (Value::Str(s), Value::Int(i)) => {
+                        let chars: Vec<char> = s.chars().collect();
+                        let i = if i < 0 { chars.len() as i64 + i } else { i };
+                        chars
+                            .get(i as usize)
+                            .map(|c| Value::Str(c.to_string()))
+                            .ok_or_else(|| InterpError(format!("index {i} out of range")))
+                    }
+                    (v, i) => Err(InterpError(format!(
+                        "cannot index {} with {}",
+                        v.type_name(),
+                        i.type_name()
+                    ))),
+                }
+            }
+        }
+    }
+
+    fn binop(&mut self, op: BinOp, a: Value, b: Value) -> Result<Value, InterpError> {
+        use BinOp::*;
+        use Value::*;
+        let type_err = |op: BinOp, a: &Value, b: &Value| {
+            InterpError(format!("bad operands for {op:?}: {} and {}", a.type_name(), b.type_name()))
+        };
+        Ok(match (op, &a, &b) {
+            (Add, Int(x), Int(y)) => Int(x + y),
+            (Add, Float(x), Float(y)) => Float(x + y),
+            (Add, Int(x), Float(y)) => Float(*x as f64 + y),
+            (Add, Float(x), Int(y)) => Float(x + *y as f64),
+            (Add, Str(x), _) => Str(format!("{x}{}", b.as_str_coerced())),
+            (Add, _, Str(y)) => Str(format!("{}{y}", a.as_str_coerced())),
+            (Add, List(x), List(y)) => {
+                let mut v = x.clone();
+                v.extend(y.clone());
+                List(v)
+            }
+            (Sub, Int(x), Int(y)) => Int(x - y),
+            (Sub, Float(x), Float(y)) => Float(x - y),
+            (Sub, Int(x), Float(y)) => Float(*x as f64 - y),
+            (Sub, Float(x), Int(y)) => Float(x - *y as f64),
+            (Mul, Int(x), Int(y)) => Int(x * y),
+            (Mul, Float(x), Float(y)) => Float(x * y),
+            (Mul, Int(x), Float(y)) => Float(*x as f64 * y),
+            (Mul, Float(x), Int(y)) => Float(x * *y as f64),
+            (Div, Int(x), Int(y)) => {
+                if *y == 0 {
+                    return Err(InterpError("division by zero".into()));
+                }
+                Int(x / y)
+            }
+            (Div, Float(x), Float(y)) => Float(x / y),
+            (Div, Int(x), Float(y)) => Float(*x as f64 / y),
+            (Div, Float(x), Int(y)) => Float(x / *y as f64),
+            (Mod, Int(x), Int(y)) => {
+                if *y == 0 {
+                    return Err(InterpError("mod by zero".into()));
+                }
+                Int(x % y)
+            }
+            (Eq, _, _) => Bool(a == b),
+            (Ne, _, _) => Bool(a != b),
+            (Lt, Int(x), Int(y)) => Bool(x < y),
+            (Le, Int(x), Int(y)) => Bool(x <= y),
+            (Gt, Int(x), Int(y)) => Bool(x > y),
+            (Ge, Int(x), Int(y)) => Bool(x >= y),
+            (Lt, Str(x), Str(y)) => Bool(x < y),
+            (Gt, Str(x), Str(y)) => Bool(x > y),
+            (Lt, Float(x), Float(y)) => Bool(x < y),
+            (Gt, Float(x), Float(y)) => Bool(x > y),
+            (Le, Float(x), Float(y)) => Bool(x <= y),
+            (Ge, Float(x), Float(y)) => Bool(x >= y),
+            _ => return Err(type_err(op, &a, &b)),
+        })
+    }
+
+    fn call(&mut self, name: &str, args: Vec<Value>) -> Result<Value, InterpError> {
+        let argc = args.len();
+        let arity = |want: usize| -> Result<(), InterpError> {
+            if argc != want {
+                Err(InterpError(format!("{name}() expects {want} args, got {argc}")))
+            } else {
+                Ok(())
+            }
+        };
+        let s = |v: &Value| v.as_str_coerced();
+        let int = |v: &Value| -> Result<i64, InterpError> {
+            match v {
+                Value::Int(i) => Ok(*i),
+                Value::Float(f) => Ok(*f as i64),
+                v => Err(InterpError(format!("expected int, got {}", v.type_name()))),
+            }
+        };
+
+        match name {
+            // -- output --------------------------------------------------
+            "print" => {
+                let line = args.iter().map(s).collect::<Vec<_>>().join(" ");
+                self.out.push_str(&line);
+                self.out.push('\n');
+                self.world.lock().unwrap().console.push(line);
+                Ok(Value::Null)
+            }
+            // -- filesystem ----------------------------------------------
+            "read_file" => {
+                arity(1)?;
+                let data = self.world.lock().unwrap().fs.read(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::Str(String::from_utf8_lossy(&data).into_owned()))
+            }
+            "write_file" => {
+                arity(2)?;
+                self.world
+                    .lock()
+                    .unwrap()
+                    .fs
+                    .write(&s(&args[0]), s(&args[1]).into_bytes())
+                    .map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "append_file" => {
+                arity(2)?;
+                self.world
+                    .lock()
+                    .unwrap()
+                    .fs
+                    .append(&s(&args[0]), s(&args[1]).as_bytes())
+                    .map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "delete_file" => {
+                arity(1)?;
+                self.world.lock().unwrap().fs.delete(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "exists" => {
+                arity(1)?;
+                Ok(Value::Bool(self.world.lock().unwrap().fs.exists(&s(&args[0]))))
+            }
+            "mkdir" => {
+                arity(1)?;
+                self.world.lock().unwrap().fs.mkdir_p(&s(&args[0]));
+                Ok(Value::Null)
+            }
+            "scandir" => {
+                arity(1)?;
+                let v = self.world.lock().unwrap().fs.scandir(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::List(v.into_iter().map(Value::Str).collect()))
+            }
+            "rglob" => {
+                arity(1)?;
+                let v = self.world.lock().unwrap().fs.rglob(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::List(v.into_iter().map(Value::Str).collect()))
+            }
+            // -- checksums -----------------------------------------------
+            "checksum" => {
+                arity(1)?;
+                Ok(Value::Str(format!("{:08x}", crc32fast::hash(s(&args[0]).as_bytes()))))
+            }
+            "sha256" => {
+                arity(1)?;
+                use sha2::{Digest, Sha256};
+                let d = Sha256::digest(s(&args[0]).as_bytes());
+                Ok(Value::Str(format!("{:x}", d)))
+            }
+            // -- email ---------------------------------------------------
+            "send_email" => {
+                arity(3)?;
+                self.world.lock().unwrap().email.send(EmailMsg {
+                    from: "agent@corp".into(),
+                    to: s(&args[0]),
+                    subject: s(&args[1]),
+                    body: s(&args[2]),
+                });
+                Ok(Value::Null)
+            }
+            "inbox" => {
+                arity(0)?;
+                let w = self.world.lock().unwrap();
+                Ok(Value::List(
+                    w.email
+                        .inbox
+                        .iter()
+                        .map(|m| Value::Str(format!("from={} subject={} body={}", m.from, m.subject, m.body)))
+                        .collect(),
+                ))
+            }
+            // -- bank ----------------------------------------------------
+            "transfer" => {
+                arity(4)?;
+                self.world
+                    .lock()
+                    .unwrap()
+                    .bank
+                    .transfer(&s(&args[0]), &s(&args[1]), int(&args[2])?, &s(&args[3]))
+                    .map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "balance" => {
+                arity(1)?;
+                Ok(Value::Int(self.world.lock().unwrap().bank.balance(&s(&args[0]))))
+            }
+            // -- jobs ------------------------------------------------------
+            "job_list" => {
+                arity(0)?;
+                let w = self.world.lock().unwrap();
+                Ok(Value::List(
+                    w.jobs
+                        .list()
+                        .iter()
+                        .map(|j| Value::Str(format!("{} state={:?} prod={} replicas={}", j.name, j.state, j.production, j.replicas)))
+                        .collect(),
+                ))
+            }
+            "job_delete" => {
+                arity(1)?;
+                self.world.lock().unwrap().jobs.delete(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "job_stop" => {
+                arity(1)?;
+                self.world.lock().unwrap().jobs.stop(&s(&args[0])).map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            "job_scale" => {
+                arity(2)?;
+                self.world
+                    .lock()
+                    .unwrap()
+                    .jobs
+                    .scale(&s(&args[0]), int(&args[1])? as u32)
+                    .map_err(InterpError)?;
+                Ok(Value::Null)
+            }
+            // -- shell (simulated toolchain) --------------------------------
+            "shell" => {
+                arity(1)?;
+                let cmd = s(&args[0]);
+                self.clock.charge(Duration::from_millis(30));
+                // A tiny model of the toolchain the Fig. 5 hello-world task
+                // uses: compile a C file, run the produced binary.
+                let out = if cmd.starts_with("cc ") || cmd.starts_with("gcc ") {
+                    let src_path = cmd.split_whitespace().nth(1).unwrap_or("");
+                    let mut w = self.world.lock().unwrap();
+                    match w.fs.read(src_path) {
+                        Ok(src) if String::from_utf8_lossy(&src).contains("main") => {
+                            w.fs.write("/bin/a.out", b"ELF-SIM".to_vec()).ok();
+                            "compiled: /bin/a.out".to_string()
+                        }
+                        Ok(_) => "cc: error: no main()".to_string(),
+                        Err(e) => format!("cc: error: {e}"),
+                    }
+                } else if cmd.starts_with("./") || cmd.contains("a.out") {
+                    let mut w = self.world.lock().unwrap();
+                    if w.fs.exists("/bin/a.out") {
+                        "hello, world".to_string()
+                    } else {
+                        "exec: not found".to_string()
+                    }
+                } else {
+                    format!("sh: simulated: {cmd}")
+                };
+                self.out.push_str(&out);
+                self.out.push('\n');
+                Ok(Value::Str(out))
+            }
+            // -- misc -------------------------------------------------------
+            "sleep_ms" => {
+                arity(1)?;
+                self.clock.charge(Duration::from_millis(int(&args[0])? as u64));
+                Ok(Value::Null)
+            }
+            "now_ms" => {
+                arity(0)?;
+                Ok(Value::Int(self.clock.now().as_millis() as i64))
+            }
+            // -- string/list helpers ---------------------------------------
+            "len" => {
+                arity(1)?;
+                match &args[0] {
+                    Value::Str(x) => Ok(Value::Int(x.chars().count() as i64)),
+                    Value::List(l) => Ok(Value::Int(l.len() as i64)),
+                    v => Err(InterpError(format!("len() of {}", v.type_name()))),
+                }
+            }
+            "str" => {
+                arity(1)?;
+                Ok(Value::Str(s(&args[0])))
+            }
+            "int" => {
+                arity(1)?;
+                match &args[0] {
+                    Value::Int(i) => Ok(Value::Int(*i)),
+                    Value::Float(f) => Ok(Value::Int(*f as i64)),
+                    Value::Str(x) => x
+                        .trim()
+                        .parse::<i64>()
+                        .map(Value::Int)
+                        .map_err(|_| InterpError(format!("int('{x}') failed"))),
+                    v => Err(InterpError(format!("int() of {}", v.type_name()))),
+                }
+            }
+            "split" => {
+                arity(2)?;
+                Ok(Value::List(
+                    s(&args[0]).split(&s(&args[1])).map(|p| Value::Str(p.to_string())).collect(),
+                ))
+            }
+            "join" => {
+                arity(2)?;
+                match &args[0] {
+                    Value::List(l) => {
+                        Ok(Value::Str(l.iter().map(s).collect::<Vec<_>>().join(&s(&args[1]))))
+                    }
+                    v => Err(InterpError(format!("join() of {}", v.type_name()))),
+                }
+            }
+            "lines" => {
+                arity(1)?;
+                Ok(Value::List(
+                    s(&args[0])
+                        .lines()
+                        .filter(|l| !l.is_empty())
+                        .map(|l| Value::Str(l.to_string()))
+                        .collect(),
+                ))
+            }
+            "contains" => {
+                arity(2)?;
+                match &args[0] {
+                    Value::Str(x) => Ok(Value::Bool(x.contains(&s(&args[1])))),
+                    Value::List(l) => Ok(Value::Bool(l.contains(&args[1]))),
+                    v => Err(InterpError(format!("contains() of {}", v.type_name()))),
+                }
+            }
+            "startswith" => {
+                arity(2)?;
+                Ok(Value::Bool(s(&args[0]).starts_with(&s(&args[1]))))
+            }
+            "replace" => {
+                arity(3)?;
+                Ok(Value::Str(s(&args[0]).replace(&s(&args[1]), &s(&args[2]))))
+            }
+            "slice" => {
+                arity(3)?;
+                match &args[0] {
+                    Value::List(l) => {
+                        let a = int(&args[1])?.max(0) as usize;
+                        let b = (int(&args[2])?.max(0) as usize).min(l.len());
+                        Ok(Value::List(l[a.min(b)..b].to_vec()))
+                    }
+                    Value::Str(x) => {
+                        let chars: Vec<char> = x.chars().collect();
+                        let a = int(&args[1])?.max(0) as usize;
+                        let b = (int(&args[2])?.max(0) as usize).min(chars.len());
+                        Ok(Value::Str(chars[a.min(b)..b].iter().collect()))
+                    }
+                    v => Err(InterpError(format!("slice() of {}", v.type_name()))),
+                }
+            }
+            "range" => {
+                arity(1)?;
+                let n = int(&args[0])?;
+                Ok(Value::List((0..n).map(Value::Int).collect()))
+            }
+            "sort" => {
+                arity(1)?;
+                match &args[0] {
+                    Value::List(l) => {
+                        let mut l = l.clone();
+                        l.sort_by(|a, b| s(a).cmp(&s(b)));
+                        Ok(Value::List(l))
+                    }
+                    v => Err(InterpError(format!("sort() of {}", v.type_name()))),
+                }
+            }
+            "basename" => {
+                arity(1)?;
+                let p = s(&args[0]);
+                Ok(Value::Str(p.rsplit('/').next().unwrap_or("").to_string()))
+            }
+            _ => Err(InterpError(format!("unknown builtin '{name}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::World;
+
+    fn run(src: &str) -> ExecOutcome {
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        super::super::run_program(src, &world, &clock)
+    }
+
+    fn run_with_world(src: &str, world: &Arc<Mutex<World>>, clock: &Clock) -> ExecOutcome {
+        super::super::run_program(src, world, clock)
+    }
+
+    #[test]
+    fn arithmetic_and_vars() {
+        let o = run("let x = 2 + 3 * 4; return x;");
+        assert!(o.ok);
+        assert_eq!(o.returned, Value::Int(14));
+    }
+
+    #[test]
+    fn string_ops() {
+        let o = run(r#"return join(split("a,b,c", ","), "-");"#);
+        assert_eq!(o.returned, Value::Str("a-b-c".into()));
+    }
+
+    #[test]
+    fn control_flow() {
+        let o = run(
+            r#"
+            let total = 0;
+            foreach i in range(10) {
+                if i % 2 == 0 { total = total + i; }
+            }
+            return total;
+        "#,
+        );
+        assert_eq!(o.returned, Value::Int(20));
+    }
+
+    #[test]
+    fn while_loop() {
+        let o = run("let x = 0; while x < 5 { x = x + 1; } return x;");
+        assert_eq!(o.returned, Value::Int(5));
+    }
+
+    #[test]
+    fn fs_roundtrip_via_actions() {
+        let o = run(
+            r#"
+            write_file("/notes/a.txt", "hello");
+            let data = read_file("/notes/a.txt");
+            print(data);
+            return len(data);
+        "#,
+        );
+        assert!(o.ok, "{:?}", o.error);
+        assert_eq!(o.returned, Value::Int(5));
+        assert!(o.output.contains("hello"));
+    }
+
+    #[test]
+    fn hello_world_c_task() {
+        // The Fig. 5 task: write a C program, compile it, run it.
+        let o = run(
+            r#"
+            write_file("/src/hello.c", "int main() { return 0; }");
+            let cc = shell("cc /src/hello.c");
+            let out = shell("./a.out");
+            return out;
+        "#,
+        );
+        assert!(o.ok);
+        assert_eq!(o.returned, Value::Str("hello, world".into()));
+    }
+
+    #[test]
+    fn bank_actions() {
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        world.lock().unwrap().bank.open("user", 10_000);
+        let o = run_with_world(
+            r#"transfer("user", "store", 2500, "rent"); return balance("user");"#,
+            &world,
+            &clock,
+        );
+        assert_eq!(o.returned, Value::Int(7_500));
+    }
+
+    #[test]
+    fn errors_surface() {
+        let o = run(r#"read_file("/missing");"#);
+        assert!(!o.ok);
+        assert!(o.error.unwrap().contains("no such file"));
+    }
+
+    #[test]
+    fn unknown_builtin() {
+        let o = run("frobnicate();");
+        assert!(!o.ok);
+    }
+
+    #[test]
+    fn step_budget_stops_infinite_loops() {
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let prog = parse_src("while true { let x = 1; }");
+        let o = Interp::new(world, clock).with_max_steps(10_000).run(&prog);
+        assert!(!o.ok);
+        assert!(o.error.unwrap().contains("step budget"));
+    }
+
+    #[test]
+    fn kill_switch_interrupts() {
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let kill = KillSwitch::new();
+        kill.kill();
+        let prog = parse_src("let x = 1; return x;");
+        let o = Interp::new(world, clock).with_kill_switch(kill).run(&prog);
+        assert!(!o.ok);
+        assert!(o.error.unwrap().contains("killed"));
+    }
+
+    #[test]
+    fn crash_leaves_partial_state() {
+        // Crash mid-loop (here: the step budget playing the role of a
+        // machine crash): some files written, others not — the
+        // half-mutated environment that semantic recovery must handle.
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let prog = parse_src(
+            r#"
+            foreach i in range(100) {
+                write_file("/out/f" + i, "data");
+            }
+        "#,
+        );
+        let o = Interp::new(world.clone(), clock).with_max_steps(120).run(&prog);
+        assert!(!o.ok);
+        let n = world.lock().unwrap().fs.file_count();
+        assert!(n >= 5 && n < 100, "partial progress: {n}");
+    }
+
+    #[test]
+    fn negative_index() {
+        let o = run(r#"return [1,2,3][-1];"#);
+        assert_eq!(o.returned, Value::Int(3));
+    }
+
+    #[test]
+    fn sort_and_basename() {
+        let o = run(r#"return basename(sort(["/b/z.txt", "/a/a.txt"])[0]);"#);
+        assert_eq!(o.returned, Value::Str("a.txt".into()));
+    }
+
+    fn parse_src(src: &str) -> Program {
+        super::super::parse(src).unwrap()
+    }
+}

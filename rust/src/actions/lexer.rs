@@ -1,0 +1,250 @@
+//! ActLang lexer.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Int(i64),
+    Float(f64),
+    // keywords
+    Let,
+    If,
+    Else,
+    Foreach,
+    In,
+    While,
+    Return,
+    True,
+    False,
+    Null,
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Assign,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    EqEq,
+    NotEq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    AndAnd,
+    OrOr,
+    Bang,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line = 1u32;
+    let mut out = Vec::new();
+    let err = |line: u32, msg: &str| LexError { line, msg: msg.to_string() };
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '"' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= b.len() {
+                        return Err(err(line, "unterminated string"));
+                    }
+                    match b[i] {
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\\' => {
+                            i += 1;
+                            if i >= b.len() {
+                                return Err(err(line, "bad escape"));
+                            }
+                            s.push(match b[i] {
+                                'n' => '\n',
+                                't' => '\t',
+                                'r' => '\r',
+                                '"' => '"',
+                                '\\' => '\\',
+                                c => return Err(err(line, &format!("bad escape '\\{c}'"))),
+                            });
+                            i += 1;
+                        }
+                        '\n' => {
+                            line += 1;
+                            s.push('\n');
+                            i += 1;
+                        }
+                        c => {
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Spanned { tok: Tok::Str(s), line });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                let mut is_float = false;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    if b[i] == '.' {
+                        // lookahead: `1.` followed by non-digit is an error
+                        if is_float {
+                            return Err(err(line, "bad number"));
+                        }
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let tok = if is_float {
+                    Tok::Float(text.parse().map_err(|_| err(line, "bad number"))?)
+                } else {
+                    Tok::Int(text.parse().map_err(|_| err(line, "bad number"))?)
+                };
+                out.push(Spanned { tok, line });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let word: String = b[start..i].iter().collect();
+                let tok = match word.as_str() {
+                    "let" => Tok::Let,
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "foreach" => Tok::Foreach,
+                    "in" => Tok::In,
+                    "while" => Tok::While,
+                    "return" => Tok::Return,
+                    "true" => Tok::True,
+                    "false" => Tok::False,
+                    "null" => Tok::Null,
+                    _ => Tok::Ident(word),
+                };
+                out.push(Spanned { tok, line });
+            }
+            _ => {
+                let two: String = b[i..(i + 2).min(b.len())].iter().collect();
+                let (tok, width) = match two.as_str() {
+                    "==" => (Tok::EqEq, 2),
+                    "!=" => (Tok::NotEq, 2),
+                    "<=" => (Tok::Le, 2),
+                    ">=" => (Tok::Ge, 2),
+                    "&&" => (Tok::AndAnd, 2),
+                    "||" => (Tok::OrOr, 2),
+                    _ => {
+                        let t = match c {
+                            '(' => Tok::LParen,
+                            ')' => Tok::RParen,
+                            '{' => Tok::LBrace,
+                            '}' => Tok::RBrace,
+                            '[' => Tok::LBracket,
+                            ']' => Tok::RBracket,
+                            ',' => Tok::Comma,
+                            ';' => Tok::Semi,
+                            '=' => Tok::Assign,
+                            '+' => Tok::Plus,
+                            '-' => Tok::Minus,
+                            '*' => Tok::Star,
+                            '/' => Tok::Slash,
+                            '%' => Tok::Percent,
+                            '<' => Tok::Lt,
+                            '>' => Tok::Gt,
+                            '!' => Tok::Bang,
+                            c => return Err(err(line, &format!("unexpected char '{c}'"))),
+                        };
+                        (t, 1)
+                    }
+                };
+                out.push(Spanned { tok, line });
+                i += width;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_snippet() {
+        let toks = lex(r#"let x = scandir("/top"); # comment
+if len(x) >= 2 { print("ok"); }"#)
+        .unwrap();
+        assert!(toks.iter().any(|t| t.tok == Tok::Let));
+        assert!(toks.iter().any(|t| matches!(t.tok, Tok::Str(ref s) if s == "/top")));
+        assert!(toks.iter().any(|t| t.tok == Tok::Ge));
+        // comment swallowed
+        assert!(!toks.iter().any(|t| matches!(t.tok, Tok::Ident(ref s) if s == "comment")));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let toks = lex(r#""a\nb\"c""#).unwrap();
+        assert_eq!(toks[0].tok, Tok::Str("a\nb\"c".into()));
+    }
+
+    #[test]
+    fn numbers() {
+        let toks = lex("42 3.5").unwrap();
+        assert_eq!(toks[0].tok, Tok::Int(42));
+        assert_eq!(toks[1].tok, Tok::Float(3.5));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("\"open").is_err());
+        assert!(lex("@").is_err());
+    }
+
+    #[test]
+    fn line_tracking() {
+        let toks = lex("a\nb\nc").unwrap();
+        assert_eq!(toks[2].line, 3);
+    }
+}

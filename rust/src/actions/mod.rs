@@ -1,0 +1,48 @@
+//! **ActLang** — the action language of intentions.
+//!
+//! The paper's agents emit "arbitrary lambdas" (CodeAct-style Python
+//! blocks) that execute in an interpreter with full access to the
+//! environment. ActLang is that substrate here: a small imperative language
+//! (variables, conditionals, loops, ~30 builtins bound to [`crate::env`])
+//! parsed and interpreted in Rust. Intentions on the AgentBus carry ActLang
+//! source in their body; the Executor interprets committed intentions
+//! against the [`crate::env::World`].
+//!
+//! Design points that matter for the reproduction:
+//!
+//! * Actions are *opaque to the bus* — voters see source text, exactly like
+//!   the paper's voters see Python blocks; there is no schema, no built-in
+//!   undo (paper Table 1's point about WALs).
+//! * The interpreter supports a **kill switch** so fault-injection tests and
+//!   the Fig. 8 experiment can crash an Executor mid-lambda, leaving the
+//!   environment half-mutated.
+//! * A step budget bounds runaway loops (the environment's equivalent of a
+//!   container CPU limit).
+
+pub mod ast;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::{Expr, Program, Stmt, Value};
+pub use interp::{ExecOutcome, Interp, KillSwitch};
+pub use parser::parse;
+
+/// Parse + run a snippet against a world; convenience used by the Executor
+/// and by tests.
+pub fn run_program(
+    src: &str,
+    world: &std::sync::Arc<std::sync::Mutex<crate::env::World>>,
+    clock: &crate::util::clock::Clock,
+) -> ExecOutcome {
+    match parse(src) {
+        Ok(prog) => Interp::new(world.clone(), clock.clone()).run(&prog),
+        Err(e) => ExecOutcome {
+            ok: false,
+            output: String::new(),
+            error: Some(format!("parse error: {e}")),
+            steps: 0,
+            returned: Value::Null,
+        },
+    }
+}

@@ -1,0 +1,364 @@
+//! ActLang recursive-descent parser.
+
+use super::ast::{BinOp, Expr, Program, Stmt, UnOp, Value};
+use super::lexer::{lex, Spanned, Tok};
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+pub fn parse(src: &str) -> Result<Program, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError { line: e.line, msg: e.msg })?;
+    let mut p = P { toks, i: 0 };
+    let mut stmts = Vec::new();
+    while !p.done() {
+        stmts.push(p.stmt()?);
+    }
+    Ok(Program { stmts })
+}
+
+struct P {
+    toks: Vec<Spanned>,
+    i: usize,
+}
+
+impl P {
+    fn done(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn line(&self) -> u32 {
+        self.toks.get(self.i.min(self.toks.len().saturating_sub(1))).map(|t| t.line).unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError { line: self.line(), msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i).map(|t| &t.tok)
+    }
+
+    fn next(&mut self) -> Result<Tok, ParseError> {
+        let t = self.toks.get(self.i).cloned().ok_or_else(|| self.err("unexpected end"))?;
+        self.i += 1;
+        Ok(t.tok)
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<(), ParseError> {
+        let got = self.next()?;
+        if got == want {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {want:?}, got {got:?}")))
+        }
+    }
+
+    fn eat(&mut self, want: &Tok) -> bool {
+        if self.peek() == Some(want) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while self.peek() != Some(&Tok::RBrace) {
+            if self.done() {
+                return Err(self.err("unterminated block"));
+            }
+            stmts.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        match self.peek() {
+            Some(Tok::Let) => {
+                self.next()?;
+                let name = self.ident()?;
+                self.expect(Tok::Assign)?;
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Let(name, e))
+            }
+            Some(Tok::If) => {
+                self.next()?;
+                let cond = self.expr()?;
+                let then = self.block()?;
+                let els = if self.eat(&Tok::Else) {
+                    if self.peek() == Some(&Tok::If) {
+                        vec![self.stmt()?]
+                    } else {
+                        self.block()?
+                    }
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If(cond, then, els))
+            }
+            Some(Tok::Foreach) => {
+                self.next()?;
+                let var = self.ident()?;
+                self.expect(Tok::In)?;
+                let e = self.expr()?;
+                let body = self.block()?;
+                Ok(Stmt::Foreach(var, e, body))
+            }
+            Some(Tok::While) => {
+                self.next()?;
+                let cond = self.expr()?;
+                let body = self.block()?;
+                Ok(Stmt::While(cond, body))
+            }
+            Some(Tok::Return) => {
+                self.next()?;
+                if self.eat(&Tok::Semi) {
+                    Ok(Stmt::Return(None))
+                } else {
+                    let e = self.expr()?;
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::Return(Some(e)))
+                }
+            }
+            // `x = expr;` assignment vs expression statement: lookahead.
+            Some(Tok::Ident(_))
+                if matches!(self.toks.get(self.i + 1).map(|t| &t.tok), Some(Tok::Assign)) =>
+            {
+                let name = self.ident()?;
+                self.expect(Tok::Assign)?;
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Assign(name, e))
+            }
+            _ => {
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::ExprStmt(e))
+            }
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => Err(self.err(format!("expected identifier, got {t:?}"))),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::OrOr) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat(&Tok::AndAnd) {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Some(Tok::EqEq) => Some(BinOp::Eq),
+            Some(Tok::NotEq) => Some(BinOp::Ne),
+            Some(Tok::Lt) => Some(BinOp::Lt),
+            Some(Tok::Le) => Some(BinOp::Le),
+            Some(Tok::Gt) => Some(BinOp::Gt),
+            Some(Tok::Ge) => Some(BinOp::Ge),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.next()?;
+            let rhs = self.add_expr()?;
+            Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs)))
+        } else {
+            Ok(lhs)
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Plus) => BinOp::Add,
+                Some(Tok::Minus) => BinOp::Sub,
+                _ => break,
+            };
+            self.next()?;
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Star) => BinOp::Mul,
+                Some(Tok::Slash) => BinOp::Div,
+                Some(Tok::Percent) => BinOp::Mod,
+                _ => break,
+            };
+            self.next()?;
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        match self.peek() {
+            Some(Tok::Bang) => {
+                self.next()?;
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.unary_expr()?)))
+            }
+            Some(Tok::Minus) => {
+                self.next()?;
+                Ok(Expr::Unary(UnOp::Neg, Box::new(self.unary_expr()?)))
+            }
+            _ => self.postfix_expr(),
+        }
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.primary()?;
+        while self.eat(&Tok::LBracket) {
+            let idx = self.expr()?;
+            self.expect(Tok::RBracket)?;
+            e = Expr::Index(Box::new(e), Box::new(idx));
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        match self.next()? {
+            Tok::Int(i) => Ok(Expr::Lit(Value::Int(i))),
+            Tok::Float(f) => Ok(Expr::Lit(Value::Float(f))),
+            Tok::Str(s) => Ok(Expr::Lit(Value::Str(s))),
+            Tok::True => Ok(Expr::Lit(Value::Bool(true))),
+            Tok::False => Ok(Expr::Lit(Value::Bool(false))),
+            Tok::Null => Ok(Expr::Lit(Value::Null)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::LBracket => {
+                let mut items = Vec::new();
+                if !self.eat(&Tok::RBracket) {
+                    loop {
+                        items.push(self.expr()?);
+                        if self.eat(&Tok::RBracket) {
+                            break;
+                        }
+                        self.expect(Tok::Comma)?;
+                    }
+                }
+                Ok(Expr::ListLit(items))
+            }
+            Tok::Ident(name) => {
+                if self.eat(&Tok::LParen) {
+                    let mut args = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.eat(&Tok::RParen) {
+                                break;
+                            }
+                            self.expect(Tok::Comma)?;
+                        }
+                    }
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            t => Err(self.err(format!("unexpected token {t:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_let_and_call() {
+        let p = parse(r#"let files = scandir("/repo"); print(len(files));"#).unwrap();
+        assert_eq!(p.stmts.len(), 2);
+        assert!(matches!(p.stmts[0], Stmt::Let(ref n, _) if n == "files"));
+    }
+
+    #[test]
+    fn parses_control_flow() {
+        let src = r#"
+            let total = 0;
+            foreach f in rglob("/data") {
+                if contains(f, ".txt") {
+                    total = total + 1;
+                } else if contains(f, ".bin") {
+                    total = total + 2;
+                }
+            }
+            while total > 10 { total = total - 10; }
+            return total;
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.stmts.len(), 4);
+        assert!(matches!(p.stmts[1], Stmt::Foreach(..)));
+        assert!(matches!(p.stmts[3], Stmt::Return(Some(_))));
+    }
+
+    #[test]
+    fn precedence() {
+        let p = parse("let x = 1 + 2 * 3;").unwrap();
+        match &p.stmts[0] {
+            Stmt::Let(_, Expr::Binary(BinOp::Add, _, rhs)) => {
+                assert!(matches!(**rhs, Expr::Binary(BinOp::Mul, _, _)));
+            }
+            s => panic!("unexpected {s:?}"),
+        }
+    }
+
+    #[test]
+    fn list_and_index() {
+        let p = parse(r#"let x = [1, "a"][0];"#).unwrap();
+        assert!(matches!(p.stmts[0], Stmt::Let(_, Expr::Index(..))));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("let = 3;").is_err());
+        assert!(parse("if { }").is_err());
+        assert!(parse("x + ;").is_err());
+        assert!(parse("foreach x { }").is_err());
+    }
+}

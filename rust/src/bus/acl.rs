@@ -1,0 +1,152 @@
+//! Type-grain access control (paper Table 2).
+//!
+//! Each bus client holds a [`Grant`]: the set of entry types it may append
+//! and the set it may play (read/poll). The canonical grants for the
+//! deconstructed state machine are constructed from [`Role`].
+
+use super::entry::PayloadType;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Component roles of the deconstructed state machine plus externals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Driver,
+    Voter,
+    Decider,
+    Executor,
+    /// External users / other agents: append Mail, read everything
+    /// (introspection is an explicitly granted capability).
+    External,
+    /// Privileged administrative clients: append Policy (paper: "Policy
+    /// entries are only allowed from privileged administrative clients").
+    Admin,
+    /// Observability / introspection: read-only on all types.
+    Observer,
+}
+
+/// Append/play permissions at type granularity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Grant {
+    pub append: BTreeSet<PayloadType>,
+    pub play: BTreeSet<PayloadType>,
+}
+
+impl Grant {
+    pub fn empty() -> Grant {
+        Grant { append: BTreeSet::new(), play: BTreeSet::new() }
+    }
+
+    pub fn full() -> Grant {
+        Grant {
+            append: PayloadType::ALL.into_iter().collect(),
+            play: PayloadType::ALL.into_iter().collect(),
+        }
+    }
+
+    pub fn can_append(&self, t: PayloadType) -> bool {
+        self.append.contains(&t)
+    }
+
+    pub fn can_play(&self, t: PayloadType) -> bool {
+        self.play.contains(&t)
+    }
+
+    /// The canonical grant for a role (paper Table 2):
+    ///
+    /// | Entry type | Appended by | Played by |
+    /// |---|---|---|
+    /// | Mail | externals | Driver |
+    /// | InfIn/InfOut | Driver | Driver, Voters (opt.) |
+    /// | Intent | Driver | Voters (+ Decider for fencing checks) |
+    /// | Vote | Voters | Decider, Voters (opt.) |
+    /// | Commit | Decider | Executor |
+    /// | Abort | Decider | Driver |
+    /// | Result | Executor | Driver |
+    /// | Policy | externals (admin) | all |
+    pub fn for_role(role: Role) -> Grant {
+        use PayloadType::*;
+        let g = |append: &[PayloadType], play: &[PayloadType]| Grant {
+            append: append.iter().copied().collect(),
+            play: play.iter().copied().collect(),
+        };
+        match role {
+            Role::Driver => g(
+                &[InfIn, InfOut, Intent, Policy],
+                // Drivers play Mail/Result/Abort plus Policy (fencing) and
+                // their own InfOut (replay-driven recovery).
+                &[Mail, Result, Abort, Policy, InfOut, InfIn, Intent],
+            ),
+            Role::Voter => g(&[Vote], &[Intent, InfOut, Vote, Policy, Result, Mail]),
+            Role::Decider => g(&[Commit, Abort], &[Vote, Intent, Policy]),
+            Role::Executor => g(&[Result], &[Commit, Intent, Policy]),
+            Role::External => g(&[Mail], &PayloadType::ALL),
+            Role::Admin => Grant::full(),
+            Role::Observer => g(&[], &PayloadType::ALL),
+        }
+    }
+}
+
+/// Why an access was denied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AclError {
+    pub client: String,
+    pub op: &'static str,
+    pub ptype: PayloadType,
+}
+
+impl fmt::Display for AclError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "acl denied: client '{}' may not {} '{}'", self.client, self.op, self.ptype)
+    }
+}
+
+impl std::error::Error for AclError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PayloadType::*;
+
+    #[test]
+    fn table2_append_matrix() {
+        // One assertion per row of paper Table 2's "Appended By" column.
+        assert!(Grant::for_role(Role::External).can_append(Mail));
+        assert!(Grant::for_role(Role::Driver).can_append(InfOut));
+        assert!(Grant::for_role(Role::Driver).can_append(Intent));
+        assert!(Grant::for_role(Role::Voter).can_append(Vote));
+        assert!(Grant::for_role(Role::Decider).can_append(Commit));
+        assert!(Grant::for_role(Role::Decider).can_append(Abort));
+        assert!(Grant::for_role(Role::Executor).can_append(Result));
+        assert!(Grant::for_role(Role::Admin).can_append(Policy));
+    }
+
+    #[test]
+    fn negative_space() {
+        // The security-critical denials: an Executor must never be able to
+        // insert votes/commits (paper §3.1 Case 3), and voters must not
+        // forge intents.
+        let exec = Grant::for_role(Role::Executor);
+        assert!(!exec.can_append(Vote));
+        assert!(!exec.can_append(Commit));
+        assert!(!exec.can_append(Intent));
+        assert!(!exec.can_append(Policy));
+        let voter = Grant::for_role(Role::Voter);
+        assert!(!voter.can_append(Intent));
+        assert!(!voter.can_append(Commit));
+        let ext = Grant::for_role(Role::External);
+        assert!(!ext.can_append(Policy));
+        assert!(!ext.can_append(Intent));
+    }
+
+    #[test]
+    fn play_matrix() {
+        assert!(Grant::for_role(Role::Driver).can_play(Mail));
+        assert!(Grant::for_role(Role::Voter).can_play(Intent));
+        assert!(Grant::for_role(Role::Decider).can_play(Vote));
+        assert!(Grant::for_role(Role::Executor).can_play(Commit));
+        assert!(!Grant::for_role(Role::Executor).can_play(Mail));
+        assert!(Grant::for_role(Role::Observer).can_play(Policy));
+        assert!(!Grant::for_role(Role::Observer).can_append(Mail));
+    }
+}

@@ -1,0 +1,41 @@
+//! Storage backend trait for the AgentBus.
+//!
+//! A backend is a dumb, position-addressed byte log: the typed API, ACL and
+//! poll live above it in [`super::bus::AgentBus`]. Positions are dense and
+//! start at 0; append returns the position assigned to the record.
+
+use std::time::Duration;
+
+/// Counters every backend maintains (Fig. 5-middle reports bytes logged).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    pub appended_records: u64,
+    pub appended_bytes: u64,
+    pub read_records: u64,
+}
+
+pub trait LogBackend: Send + Sync {
+    /// Durably append a record; returns its position.
+    fn append(&self, bytes: &[u8]) -> std::io::Result<u64>;
+
+    /// Read records in `[start, end)` (clamped to the tail).
+    fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>>;
+
+    /// One past the last appended position.
+    fn tail(&self) -> u64;
+
+    fn stats(&self) -> BackendStats;
+
+    /// Human label for figures ("mem", "durable", "anondb-geo").
+    fn label(&self) -> String;
+
+    /// The latency this backend charges per append, if simulated; the bus
+    /// charges it to the experiment clock (Fig. 5-bottom's backend sweep).
+    fn simulated_append_latency(&self) -> Duration {
+        Duration::ZERO
+    }
+
+    fn simulated_read_latency(&self) -> Duration {
+        Duration::ZERO
+    }
+}

@@ -1,0 +1,428 @@
+//! The AgentBus proper: typed append/read/tail/poll with type-grain ACL
+//! over a pluggable [`LogBackend`] (paper Fig. 4).
+
+use super::acl::{AclError, Grant, Role};
+use super::backend::{BackendStats, LogBackend};
+use super::durable::DurableBackend;
+use super::entry::{Entry, Payload, PayloadType};
+use super::mem::MemBackend;
+use super::remote::{LatencyProfile, RemoteBackend};
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Backend selector (config/CLI surface).
+#[derive(Debug, Clone)]
+pub enum BusBackendKind {
+    Mem,
+    Durable(PathBuf),
+    Remote(LatencyProfile),
+}
+
+impl BusBackendKind {
+    pub fn build(&self) -> std::io::Result<Arc<dyn LogBackend>> {
+        Ok(match self {
+            BusBackendKind::Mem => Arc::new(MemBackend::new()),
+            BusBackendKind::Durable(p) => Arc::new(DurableBackend::open(p)?),
+            BusBackendKind::Remote(prof) => Arc::new(RemoteBackend::new(*prof)),
+        })
+    }
+}
+
+#[derive(Debug)]
+pub enum BusError {
+    Acl(AclError),
+    Io(std::io::Error),
+    /// An entry on disk failed to deserialize (should be impossible for
+    /// uncorrupted logs; surfaced rather than skipped).
+    Corrupt(u64),
+}
+
+impl fmt::Display for BusError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BusError::Acl(e) => write!(f, "{e}"),
+            BusError::Io(e) => write!(f, "bus io error: {e}"),
+            BusError::Corrupt(p) => write!(f, "corrupt entry at position {p}"),
+        }
+    }
+}
+
+impl std::error::Error for BusError {}
+
+impl From<std::io::Error> for BusError {
+    fn from(e: std::io::Error) -> BusError {
+        BusError::Io(e)
+    }
+}
+
+impl From<AclError> for BusError {
+    fn from(e: AclError) -> BusError {
+        BusError::Acl(e)
+    }
+}
+
+/// One logical agent's shared log.
+pub struct AgentBus {
+    name: String,
+    backend: Arc<dyn LogBackend>,
+    clock: Clock,
+    /// Serializes position assignment (entry bytes embed their position).
+    append_lock: Mutex<()>,
+    /// Poll wakeups: guarded tail hint + condvar.
+    notify: Arc<(Mutex<u64>, Condvar)>,
+    /// Per-type byte accounting (Fig. 5-middle).
+    bytes_by_type: Mutex<BTreeMap<PayloadType, u64>>,
+}
+
+impl AgentBus {
+    pub fn new(name: impl Into<String>, backend: Arc<dyn LogBackend>, clock: Clock) -> Arc<AgentBus> {
+        let tail = backend.tail();
+        Arc::new(AgentBus {
+            name: name.into(),
+            backend,
+            clock,
+            append_lock: Mutex::new(()),
+            notify: Arc::new((Mutex::new(tail), Condvar::new())),
+            bytes_by_type: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Convenience: in-memory bus on a fresh sim clock (tests).
+    pub fn in_memory(name: &str) -> Arc<AgentBus> {
+        AgentBus::new(name, Arc::new(MemBackend::new()), Clock::sim())
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    pub fn backend_label(&self) -> String {
+        self.backend.label()
+    }
+
+    pub fn stats(&self) -> BackendStats {
+        self.backend.stats()
+    }
+
+    pub fn bytes_by_type(&self) -> BTreeMap<PayloadType, u64> {
+        self.bytes_by_type.lock().unwrap().clone()
+    }
+
+    /// Open a client handle with the canonical grant for `role`.
+    pub fn client(self: &Arc<AgentBus>, identity: impl Into<String>, role: Role) -> BusClient {
+        BusClient { bus: Arc::clone(self), identity: identity.into(), grant: Grant::for_role(role) }
+    }
+
+    /// Open a client with a custom grant (tests, restricted tools).
+    pub fn client_with_grant(
+        self: &Arc<AgentBus>,
+        identity: impl Into<String>,
+        grant: Grant,
+    ) -> BusClient {
+        BusClient { bus: Arc::clone(self), identity: identity.into(), grant }
+    }
+
+    fn append_unchecked(&self, payload: Payload) -> Result<u64, BusError> {
+        let _g = self.append_lock.lock().unwrap();
+        let position = self.backend.tail();
+        let entry = Entry { position, realtime_ts: self.clock.realtime_ms(), payload };
+        let bytes = entry.to_bytes();
+        let assigned = self.backend.append(&bytes)?;
+        debug_assert_eq!(assigned, position);
+        self.clock.charge(self.backend.simulated_append_latency());
+        *self.bytes_by_type.lock().unwrap().entry(entry.payload.ptype).or_insert(0) +=
+            bytes.len() as u64;
+        // Wake pollers.
+        let (lock, cvar) = &*self.notify;
+        *lock.lock().unwrap() = assigned + 1;
+        cvar.notify_all();
+        Ok(assigned)
+    }
+
+    fn read_unchecked(&self, start: u64, end: u64) -> Result<Vec<Entry>, BusError> {
+        let raw = self.backend.read(start, end)?;
+        self.clock.charge(self.backend.simulated_read_latency());
+        raw.into_iter()
+            .map(|(pos, bytes)| Entry::from_bytes(&bytes).ok_or(BusError::Corrupt(pos)))
+            .collect()
+    }
+
+    pub fn tail(&self) -> u64 {
+        self.backend.tail()
+    }
+}
+
+/// A per-component handle enforcing type-grain ACL (paper Table 2).
+pub struct BusClient {
+    bus: Arc<AgentBus>,
+    identity: String,
+    grant: Grant,
+}
+
+impl BusClient {
+    pub fn bus(&self) -> &Arc<AgentBus> {
+        &self.bus
+    }
+
+    pub fn identity(&self) -> &str {
+        &self.identity
+    }
+
+    pub fn grant(&self) -> &Grant {
+        &self.grant
+    }
+
+    fn deny(&self, op: &'static str, t: PayloadType) -> AclError {
+        AclError { client: self.identity.clone(), op, ptype: t }
+    }
+
+    /// Append a typed payload; returns its durable log position.
+    pub fn append(&self, ptype: PayloadType, body: Json) -> Result<u64, BusError> {
+        if !self.grant.can_append(ptype) {
+            return Err(self.deny("append", ptype).into());
+        }
+        self.bus.append_unchecked(Payload::new(ptype, self.identity.clone(), body))
+    }
+
+    /// Read entries in `[start, end)`, filtered to the client's playable
+    /// types. An explicit `filter` naming a non-granted type is an error.
+    pub fn read(
+        &self,
+        start: u64,
+        end: u64,
+        filter: Option<&[PayloadType]>,
+    ) -> Result<Vec<Entry>, BusError> {
+        if let Some(types) = filter {
+            for t in types {
+                if !self.grant.can_play(*t) {
+                    return Err(self.deny("play", *t).into());
+                }
+            }
+        }
+        let entries = self.bus.read_unchecked(start, end)?;
+        Ok(entries
+            .into_iter()
+            .filter(|e| match filter {
+                Some(types) => types.contains(&e.payload.ptype),
+                None => self.grant.can_play(e.payload.ptype),
+            })
+            .collect())
+    }
+
+    /// Current tail position (one past the last entry).
+    pub fn tail(&self) -> u64 {
+        self.bus.tail()
+    }
+
+    /// Blocking poll (paper Fig. 4): wait until at least one entry with a
+    /// type in `filter` exists at position >= `start`, then return all such
+    /// entries in `[start, tail)`. Returns an empty vec on timeout.
+    pub fn poll(
+        &self,
+        start: u64,
+        filter: &[PayloadType],
+        timeout: Duration,
+    ) -> Result<Vec<Entry>, BusError> {
+        for t in filter {
+            if !self.grant.can_play(*t) {
+                return Err(self.deny("poll", *t).into());
+            }
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut scan_from = start;
+        loop {
+            let tail = self.bus.tail();
+            if scan_from < tail {
+                let matching: Vec<Entry> = self
+                    .bus
+                    .read_unchecked(start, tail)?
+                    .into_iter()
+                    .filter(|e| filter.contains(&e.payload.ptype))
+                    .collect();
+                scan_from = tail;
+                if !matching.is_empty() {
+                    return Ok(matching);
+                }
+            }
+            // Park until an append bumps the tail hint past scan_from.
+            let (lock, cvar) = &*self.bus.notify;
+            let mut hint = lock.lock().unwrap();
+            while *hint <= scan_from {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    return Ok(Vec::new());
+                }
+                let (g, res) = cvar.wait_timeout(hint, deadline - now).unwrap();
+                hint = g;
+                if res.timed_out() && *hint <= scan_from {
+                    return Ok(Vec::new());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::entry::PayloadType::*;
+
+    fn mail(text: &str) -> Json {
+        Json::obj(vec![("text", Json::str(text))])
+    }
+
+    #[test]
+    fn typed_append_and_read() {
+        let bus = AgentBus::in_memory("t");
+        let ext = bus.client("user", Role::External);
+        let driver = bus.client("driver", Role::Driver);
+        let p0 = ext.append(Mail, mail("hello")).unwrap();
+        assert_eq!(p0, 0);
+        let got = driver.read(0, 10, Some(&[Mail])).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.body.get_str("text"), Some("hello"));
+        assert_eq!(got[0].payload.author, "user");
+    }
+
+    #[test]
+    fn acl_append_denied() {
+        let bus = AgentBus::in_memory("t");
+        let exec = bus.client("executor", Role::Executor);
+        let err = exec.append(Vote, Json::Null).unwrap_err();
+        assert!(matches!(err, BusError::Acl(_)), "{err}");
+        // and nothing was written
+        assert_eq!(bus.tail(), 0);
+    }
+
+    #[test]
+    fn acl_poll_denied() {
+        let bus = AgentBus::in_memory("t");
+        let exec = bus.client("executor", Role::Executor);
+        let err = exec.poll(0, &[Mail], Duration::from_millis(1)).unwrap_err();
+        assert!(matches!(err, BusError::Acl(_)));
+    }
+
+    #[test]
+    fn unfiltered_read_hides_unplayable_types() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        admin.append(Mail, mail("m")).unwrap();
+        admin.append(Commit, Json::obj(vec![("intent_pos", Json::Int(0))])).unwrap();
+        let exec = bus.client("executor", Role::Executor);
+        // Executor plays Commit/Intent/Policy but not Mail.
+        let got = exec.read(0, 10, None).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.ptype, Commit);
+    }
+
+    #[test]
+    fn poll_returns_existing_entries_immediately() {
+        let bus = AgentBus::in_memory("t");
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail("a")).unwrap();
+        ext.append(Mail, mail("b")).unwrap();
+        let driver = bus.client("driver", Role::Driver);
+        let got = driver.poll(0, &[Mail], Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn poll_wakes_on_append() {
+        let bus = AgentBus::in_memory("t");
+        let driver = bus.client("driver", Role::Driver);
+        let bus2 = Arc::clone(&bus);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            bus2.client("user", Role::External).append(Mail, mail("wake")).unwrap();
+        });
+        let got = driver.poll(0, &[Mail], Duration::from_secs(5)).unwrap();
+        h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.body.get_str("text"), Some("wake"));
+    }
+
+    #[test]
+    fn poll_times_out_empty() {
+        let bus = AgentBus::in_memory("t");
+        let driver = bus.client("driver", Role::Driver);
+        let got = driver.poll(0, &[Mail], Duration::from_millis(20)).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn poll_filters_types() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        admin.append(Intent, Json::obj(vec![])).unwrap();
+        admin.append(Mail, mail("x")).unwrap();
+        let driver = bus.client("driver", Role::Driver);
+        let got = driver.poll(0, &[Mail], Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.ptype, Mail);
+        assert_eq!(got[0].position, 1);
+    }
+
+    #[test]
+    fn positions_dense_and_ordered() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        for i in 0..10 {
+            assert_eq!(admin.append(Mail, mail(&format!("{i}"))).unwrap(), i);
+        }
+        let all = admin.read(0, 100, None).unwrap();
+        let positions: Vec<u64> = all.iter().map(|e| e.position).collect();
+        assert_eq!(positions, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bytes_accounted_by_type() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        admin.append(Mail, mail("hello")).unwrap();
+        admin.append(Intent, Json::obj(vec![("code", Json::str("x"))])).unwrap();
+        let by_type = bus.bytes_by_type();
+        assert!(by_type[&Mail] > 0);
+        assert!(by_type[&Intent] > 0);
+        let total: u64 = by_type.values().sum();
+        assert_eq!(total, bus.stats().appended_bytes);
+    }
+
+    #[test]
+    fn durable_bus_replays_after_reopen() {
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("bus-{}.log", crate::util::ids::next_id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let backend = BusBackendKind::Durable(path.clone()).build().unwrap();
+            let bus = AgentBus::new("d", backend, Clock::sim());
+            bus.client("admin", Role::Admin).append(Mail, mail("persisted")).unwrap();
+        }
+        let backend = BusBackendKind::Durable(path.clone()).build().unwrap();
+        let bus = AgentBus::new("d", backend, Clock::sim());
+        let obs = bus.client("o", Role::Observer);
+        let got = obs.read(0, 10, None).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.body.get_str("text"), Some("persisted"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn remote_backend_charges_clock() {
+        let clock = Clock::sim();
+        let backend = Arc::new(RemoteBackend::new(LatencyProfile::geo()));
+        let bus = AgentBus::new("r", backend, clock.clone());
+        let admin = bus.client("admin", Role::Admin);
+        admin.append(Mail, mail("x")).unwrap();
+        assert!(clock.now() >= Duration::from_millis(60), "append RTT charged");
+    }
+}

@@ -1,0 +1,271 @@
+//! Typed log entries (paper Fig. 4 / Table 2).
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// The entry type tag. Append/read/poll filter on these, and access control
+/// is enforced at this granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PayloadType {
+    /// Full (delta-encoded) request sent to the inference layer.
+    InfIn,
+    /// Raw inference output (model text), logged for deterministic replay.
+    InfOut,
+    /// An intended command, visible on the log *before* execution.
+    Intent,
+    /// A voter's verdict on an intention.
+    Vote,
+    /// Decider verdict: the intention at `intent_pos` may execute.
+    Commit,
+    /// Decider verdict: the intention is blocked.
+    Abort,
+    /// Executor's result for a committed intention (also the special
+    /// reboot marker used for at-most-once recovery).
+    Result,
+    /// Mailbox message from an external user or another agent.
+    Mail,
+    /// Policy change (decider quorum, voter config, driver election).
+    Policy,
+}
+
+impl PayloadType {
+    pub const ALL: [PayloadType; 9] = [
+        PayloadType::InfIn,
+        PayloadType::InfOut,
+        PayloadType::Intent,
+        PayloadType::Vote,
+        PayloadType::Commit,
+        PayloadType::Abort,
+        PayloadType::Result,
+        PayloadType::Mail,
+        PayloadType::Policy,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadType::InfIn => "inf-in",
+            PayloadType::InfOut => "inf-out",
+            PayloadType::Intent => "intent",
+            PayloadType::Vote => "vote",
+            PayloadType::Commit => "commit",
+            PayloadType::Abort => "abort",
+            PayloadType::Result => "result",
+            PayloadType::Mail => "mail",
+            PayloadType::Policy => "policy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PayloadType> {
+        PayloadType::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+impl fmt::Display for PayloadType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed payload: type tag, author identity, and a JSON body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    pub ptype: PayloadType,
+    /// Identity of the appending component ("driver-1", "voter-rule", ...).
+    pub author: String,
+    pub body: Json,
+}
+
+impl Payload {
+    pub fn new(ptype: PayloadType, author: impl Into<String>, body: Json) -> Payload {
+        Payload { ptype, author: author.into(), body }
+    }
+}
+
+/// A materialized log entry (paper Fig. 4: position, wall-clock ms, payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub position: u64,
+    pub realtime_ts: u64,
+    pub payload: Payload,
+}
+
+impl Entry {
+    /// Byte serialization used by every backend (JSON, deterministic key
+    /// order — entries must survive reboot byte-for-byte).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        Json::obj(vec![
+            ("position", Json::Int(self.position as i64)),
+            ("ts", Json::Int(self.realtime_ts as i64)),
+            ("type", Json::str(self.payload.ptype.name())),
+            ("author", Json::str(self.payload.author.clone())),
+            ("body", self.payload.body.clone()),
+        ])
+        .to_string()
+        .into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Option<Entry> {
+        let text = std::str::from_utf8(bytes).ok()?;
+        let v = Json::parse(text).ok()?;
+        Some(Entry {
+            position: v.get_u64("position")?,
+            realtime_ts: v.get_u64("ts")?,
+            payload: Payload {
+                ptype: PayloadType::from_name(v.get_str("type")?)?,
+                author: v.get_str("author")?.to_string(),
+                body: v.get("body")?.clone(),
+            },
+        })
+    }
+
+    /// For Vote/Commit/Abort/Result entries: the log position of the
+    /// intention they refer to.
+    pub fn intent_pos(&self) -> Option<u64> {
+        self.payload.body.get_u64("intent_pos")
+    }
+}
+
+/// A voter's verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VoteKind {
+    Approve,
+    Reject,
+}
+
+/// Parsed Vote body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Vote {
+    pub intent_pos: u64,
+    pub kind: VoteKind,
+    /// Voter *type* ("rule", "llm", "static") — decider policies quantify
+    /// over voter types, not instances (paper §3.2).
+    pub voter_type: String,
+    pub reason: String,
+}
+
+impl Vote {
+    pub fn to_body(&self) -> Json {
+        Json::obj(vec![
+            ("intent_pos", Json::Int(self.intent_pos as i64)),
+            ("approve", Json::Bool(self.kind == VoteKind::Approve)),
+            ("voter_type", Json::str(self.voter_type.clone())),
+            ("reason", Json::str(self.reason.clone())),
+        ])
+    }
+
+    pub fn from_body(j: &Json) -> Option<Vote> {
+        Some(Vote {
+            intent_pos: j.get_u64("intent_pos")?,
+            kind: if j.get_bool("approve")? { VoteKind::Approve } else { VoteKind::Reject },
+            voter_type: j.get_str("voter_type")?.to_string(),
+            reason: j.get_str("reason").unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// Decider quorum policy (paper §3: Policy entries change it at runtime).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeciderPolicy {
+    /// Commit without requiring any votes.
+    OnByDefault,
+    /// Decide according to the first vote observed.
+    FirstVoter,
+    /// Commit iff *any* of the named voter types approves.
+    BooleanOr(Vec<String>),
+    /// Commit iff *all* of the named voter types approve.
+    BooleanAnd(Vec<String>),
+}
+
+impl DeciderPolicy {
+    pub fn to_json(&self) -> Json {
+        match self {
+            DeciderPolicy::OnByDefault => Json::obj(vec![("kind", Json::str("on_by_default"))]),
+            DeciderPolicy::FirstVoter => Json::obj(vec![("kind", Json::str("first_voter"))]),
+            DeciderPolicy::BooleanOr(ts) => Json::obj(vec![
+                ("kind", Json::str("boolean_or")),
+                ("voters", Json::Arr(ts.iter().map(|t| Json::str(t.clone())).collect())),
+            ]),
+            DeciderPolicy::BooleanAnd(ts) => Json::obj(vec![
+                ("kind", Json::str("boolean_and")),
+                ("voters", Json::Arr(ts.iter().map(|t| Json::str(t.clone())).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<DeciderPolicy> {
+        let voters = || -> Vec<String> {
+            j.get("voters")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        match j.get_str("kind")? {
+            "on_by_default" => Some(DeciderPolicy::OnByDefault),
+            "first_voter" => Some(DeciderPolicy::FirstVoter),
+            "boolean_or" => Some(DeciderPolicy::BooleanOr(voters())),
+            "boolean_and" => Some(DeciderPolicy::BooleanAnd(voters())),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Entry {
+        Entry {
+            position: 9,
+            realtime_ts: 1234,
+            payload: Payload::new(
+                PayloadType::Intent,
+                "driver-1",
+                Json::obj(vec![("code", Json::str("ls /tmp"))]),
+            ),
+        }
+    }
+
+    #[test]
+    fn entry_roundtrip() {
+        let e = sample();
+        let bytes = e.to_bytes();
+        assert_eq!(Entry::from_bytes(&bytes).unwrap(), e);
+    }
+
+    #[test]
+    fn type_names_roundtrip() {
+        for t in PayloadType::ALL {
+            assert_eq!(PayloadType::from_name(t.name()), Some(t));
+        }
+        assert_eq!(PayloadType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn vote_roundtrip() {
+        let v = Vote {
+            intent_pos: 4,
+            kind: VoteKind::Reject,
+            voter_type: "rule".into(),
+            reason: "denylist: rm -rf".into(),
+        };
+        assert_eq!(Vote::from_body(&v.to_body()).unwrap(), v);
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in [
+            DeciderPolicy::OnByDefault,
+            DeciderPolicy::FirstVoter,
+            DeciderPolicy::BooleanOr(vec!["rule".into(), "llm".into()]),
+            DeciderPolicy::BooleanAnd(vec!["rule".into()]),
+        ] {
+            assert_eq!(DeciderPolicy::from_json(&p.to_json()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_rejected() {
+        assert!(Entry::from_bytes(b"not json").is_none());
+        assert!(Entry::from_bytes(br#"{"position":1}"#).is_none());
+    }
+}

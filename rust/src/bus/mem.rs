@@ -1,0 +1,82 @@
+//! In-memory backend: fastest, no durability (paper §4.1 variant 1).
+
+use super::backend::{BackendStats, LogBackend};
+use std::sync::RwLock;
+
+#[derive(Default)]
+pub struct MemBackend {
+    inner: RwLock<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    records: Vec<Vec<u8>>,
+    stats: BackendStats,
+}
+
+impl MemBackend {
+    pub fn new() -> MemBackend {
+        MemBackend::default()
+    }
+}
+
+impl LogBackend for MemBackend {
+    fn append(&self, bytes: &[u8]) -> std::io::Result<u64> {
+        let mut g = self.inner.write().unwrap();
+        let pos = g.records.len() as u64;
+        g.records.push(bytes.to_vec());
+        g.stats.appended_records += 1;
+        g.stats.appended_bytes += bytes.len() as u64;
+        Ok(pos)
+    }
+
+    fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
+        let mut g = self.inner.write().unwrap();
+        let tail = g.records.len() as u64;
+        let lo = start.min(tail) as usize;
+        let hi = end.min(tail) as usize;
+        let out: Vec<(u64, Vec<u8>)> = (lo..hi).map(|i| (i as u64, g.records[i].clone())).collect();
+        g.stats.read_records += out.len() as u64;
+        Ok(out)
+    }
+
+    fn tail(&self) -> u64 {
+        self.inner.read().unwrap().records.len() as u64
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.inner.read().unwrap().stats
+    }
+
+    fn label(&self) -> String {
+        "mem".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_read_tail() {
+        let b = MemBackend::new();
+        assert_eq!(b.tail(), 0);
+        assert_eq!(b.append(b"a").unwrap(), 0);
+        assert_eq!(b.append(b"bb").unwrap(), 1);
+        assert_eq!(b.tail(), 2);
+        let r = b.read(0, 10).unwrap();
+        assert_eq!(r, vec![(0, b"a".to_vec()), (1, b"bb".to_vec())]);
+        assert_eq!(b.read(1, 2).unwrap().len(), 1);
+        assert_eq!(b.read(5, 9).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn stats_track_bytes() {
+        let b = MemBackend::new();
+        b.append(b"abc").unwrap();
+        b.append(b"de").unwrap();
+        let s = b.stats();
+        assert_eq!(s.appended_records, 2);
+        assert_eq!(s.appended_bytes, 5);
+    }
+}

@@ -1,0 +1,31 @@
+//! The **AgentBus**: a linearizable, durable, *typed* shared log, one per
+//! logical agent (paper §3, Fig. 4).
+//!
+//! Additions over a classical shared log:
+//!
+//! 1. **Strong types** — every entry is tagged with a [`PayloadType`];
+//!    append/read/poll take type filters.
+//! 2. **Blocking poll** — [`AgentBus::poll`] parks until an entry whose
+//!    type is in the filter set appears at or after a start position.
+//! 3. **Type-grain access control** — clients hold a [`acl::Grant`] and can
+//!    only append/play the entry types it names (paper Table 2).
+//!
+//! Three backends mirror the paper's §4.1: in-memory (no durability),
+//! durable file (SQLite stand-in: survives process reboot), and a
+//! disaggregated remote KV with injected RTT (DynamoDB/AnonDB stand-in).
+
+pub mod acl;
+pub mod backend;
+pub mod bus;
+pub mod durable;
+pub mod entry;
+pub mod mem;
+pub mod remote;
+
+pub use acl::{AclError, Grant, Role};
+pub use backend::{BackendStats, LogBackend};
+pub use bus::{AgentBus, BusBackendKind, BusClient, BusError};
+pub use durable::DurableBackend;
+pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
+pub use mem::MemBackend;
+pub use remote::{LatencyProfile, RemoteBackend};

@@ -1,0 +1,22 @@
+//! **DojoSim**: the AgentDojo-substitute benchmark (paper §5.2, DESIGN.md
+//! §5).
+//!
+//! AgentDojo's protocol, reproduced: a suite of benign user tasks over
+//! stateful environments; *injection tasks* plant attacker directives in
+//! environment data the agent reads during execution; each case yields a
+//! (Utility, AttackSuccess) tuple. We report **benign Utility** on
+//! non-attack cases and **ASR** on attack cases.
+//!
+//! Three suites (workspace, banking, devops), 42 user tasks (16 requiring
+//! rule-sensitive actions — the false-positive surface of the rule voter),
+//! and per-suite attack goals including one *action-less* attack (the
+//! phishing reply that no intention-level voter can stop — the paper's
+//! residual 1.4% ASR).
+
+pub mod attacks;
+pub mod runner;
+pub mod tasks;
+
+pub use attacks::{suite_attacks, DojoAttack};
+pub use runner::{run_benchmark, run_case, CaseOutcome, Defense, DojoReport};
+pub use tasks::{all_tasks, DojoTask};

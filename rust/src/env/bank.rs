@@ -1,0 +1,90 @@
+//! Simulated bank ledger (the banking suite: transfer-to-attacker is the
+//! canonical prompt-injection goal; the non-negative-balance invariant is
+//! the canonical integrity constraint from paper §3.1).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transfer {
+    pub from: String,
+    pub to: String,
+    pub amount_cents: i64,
+    pub memo: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Bank {
+    balances: BTreeMap<String, i64>,
+    pub transfers: Vec<Transfer>,
+}
+
+impl Bank {
+    pub fn open(&mut self, account: &str, initial_cents: i64) {
+        self.balances.insert(account.to_string(), initial_cents);
+    }
+
+    pub fn balance(&self, account: &str) -> i64 {
+        self.balances.get(account).copied().unwrap_or(0)
+    }
+
+    /// Unconditional transfer (creates the destination if missing). The
+    /// *agent* is expected to guard balances; the env happily goes negative
+    /// — that is exactly what invariant checking is for.
+    pub fn transfer(&mut self, from: &str, to: &str, amount_cents: i64, memo: &str) -> Result<(), String> {
+        if amount_cents <= 0 {
+            return Err("transfer amount must be positive".into());
+        }
+        if !self.balances.contains_key(from) {
+            return Err(format!("no such account: {from}"));
+        }
+        *self.balances.get_mut(from).unwrap() -= amount_cents;
+        *self.balances.entry(to.to_string()).or_insert(0) += amount_cents;
+        self.transfers.push(Transfer {
+            from: from.into(),
+            to: to.into(),
+            amount_cents,
+            memo: memo.into(),
+        });
+        Ok(())
+    }
+
+    pub fn transfers_to(&self, account: &str) -> Vec<&Transfer> {
+        self.transfers.iter().filter(|t| t.to == account).collect()
+    }
+
+    pub fn accounts(&self) -> impl Iterator<Item = (&String, &i64)> {
+        self.balances.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_moves_money() {
+        let mut b = Bank::default();
+        b.open("user", 10_000);
+        b.transfer("user", "store", 2_500, "groceries").unwrap();
+        assert_eq!(b.balance("user"), 7_500);
+        assert_eq!(b.balance("store"), 2_500);
+        assert_eq!(b.transfers_to("store").len(), 1);
+    }
+
+    #[test]
+    fn transfer_can_go_negative() {
+        // The env does NOT enforce S; that's the voters' job.
+        let mut b = Bank::default();
+        b.open("user", 100);
+        b.transfer("user", "thief", 5_000, "").unwrap();
+        assert_eq!(b.balance("user"), -4_900);
+    }
+
+    #[test]
+    fn bad_transfers_rejected() {
+        let mut b = Bank::default();
+        b.open("user", 100);
+        assert!(b.transfer("user", "x", 0, "").is_err());
+        assert!(b.transfer("ghost", "x", 10, "").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Simulated email service (the workspace suite's main attack surface:
+//! inbound mail bodies can carry prompt injections, and exfiltration
+//! attacks try to send secrets outbound).
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EmailMsg {
+    pub from: String,
+    pub to: String,
+    pub subject: String,
+    pub body: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Email {
+    pub inbox: Vec<EmailMsg>,
+    pub sent: Vec<EmailMsg>,
+}
+
+impl Email {
+    pub fn deliver(&mut self, msg: EmailMsg) {
+        self.inbox.push(msg);
+    }
+
+    pub fn send(&mut self, msg: EmailMsg) {
+        self.sent.push(msg);
+    }
+
+    /// All sent mail to a given address (attack checkers use this).
+    pub fn sent_to(&self, addr: &str) -> Vec<&EmailMsg> {
+        self.sent.iter().filter(|m| m.to == addr).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(to: &str) -> EmailMsg {
+        EmailMsg { from: "me@corp".into(), to: to.into(), subject: "s".into(), body: "b".into() }
+    }
+
+    #[test]
+    fn send_and_filter() {
+        let mut e = Email::default();
+        e.send(msg("a@x"));
+        e.send(msg("b@x"));
+        e.send(msg("a@x"));
+        assert_eq!(e.sent_to("a@x").len(), 2);
+        assert_eq!(e.sent_to("c@x").len(), 0);
+    }
+
+    #[test]
+    fn inbox_separate_from_sent() {
+        let mut e = Email::default();
+        e.deliver(msg("me@corp"));
+        assert_eq!(e.inbox.len(), 1);
+        assert_eq!(e.sent.len(), 0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Simulated cloud-jobs service (the introduction's "production K8s job
+//! and its associated state": deleting one is the canonical destructive
+//! action the devops suite's attacks aim for).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Running,
+    Stopped,
+    Deleted,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Job {
+    pub name: String,
+    pub state: JobState,
+    /// Whether this job is tagged production (invariants protect these).
+    pub production: bool,
+    pub replicas: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct Jobs {
+    jobs: BTreeMap<String, Job>,
+}
+
+impl Jobs {
+    pub fn create(&mut self, name: &str, production: bool, replicas: u32) {
+        self.jobs.insert(
+            name.to_string(),
+            Job { name: name.to_string(), state: JobState::Running, production, replicas },
+        );
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Job> {
+        self.jobs.get(name)
+    }
+
+    pub fn list(&self) -> Vec<&Job> {
+        self.jobs.values().collect()
+    }
+
+    pub fn scale(&mut self, name: &str, replicas: u32) -> Result<(), String> {
+        let j = self.jobs.get_mut(name).ok_or(format!("no such job: {name}"))?;
+        if j.state == JobState::Deleted {
+            return Err(format!("job deleted: {name}"));
+        }
+        j.replicas = replicas;
+        Ok(())
+    }
+
+    pub fn stop(&mut self, name: &str) -> Result<(), String> {
+        let j = self.jobs.get_mut(name).ok_or(format!("no such job: {name}"))?;
+        j.state = JobState::Stopped;
+        Ok(())
+    }
+
+    /// Delete is allowed by the env even for production jobs — stopping it
+    /// is the Voters' job, not the substrate's.
+    pub fn delete(&mut self, name: &str) -> Result<(), String> {
+        let j = self.jobs.get_mut(name).ok_or(format!("no such job: {name}"))?;
+        j.state = JobState::Deleted;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut js = Jobs::default();
+        js.create("web", true, 3);
+        js.scale("web", 5).unwrap();
+        assert_eq!(js.get("web").unwrap().replicas, 5);
+        js.stop("web").unwrap();
+        assert_eq!(js.get("web").unwrap().state, JobState::Stopped);
+        js.delete("web").unwrap();
+        assert_eq!(js.get("web").unwrap().state, JobState::Deleted);
+        assert!(js.scale("web", 1).is_err());
+    }
+
+    #[test]
+    fn missing_job_errors() {
+        let mut js = Jobs::default();
+        assert!(js.stop("ghost").is_err());
+        assert!(js.delete("ghost").is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! The external **environment** a LogAct agent acts upon.
+//!
+//! The paper's agents operate on a shared, distributed production
+//! environment (filesystems, email, databases, K8s jobs). This module is
+//! that substrate, simulated: a filesystem with a configurable per-op
+//! latency model (network-mounted FS for the Fig. 8 experiment), an email
+//! service, a bank ledger, and a cloud-jobs service (the "production K8s
+//! job" of the introduction). A set of administrator-provided invariants S
+//! over this state defines *Safety* (paper §3.1); checkers in
+//! [`invariants`] evaluate them.
+//!
+//! Everything lives behind `Arc<Mutex<World>>`: the Executor is the only
+//! state-machine component allowed to touch it (enforced by construction —
+//! voters receive only log entries).
+
+pub mod bank;
+pub mod email;
+pub mod invariants;
+pub mod jobs;
+pub mod simfs;
+
+pub use bank::Bank;
+pub use email::{Email, EmailMsg};
+pub use invariants::{Invariant, InvariantSet, Violation};
+pub use jobs::{Job, JobState, Jobs};
+pub use simfs::{FsLatency, SimFs};
+
+use crate::util::clock::Clock;
+use std::sync::{Arc, Mutex};
+
+/// The whole environment: one instance shared by Executor + checkers.
+pub struct World {
+    pub fs: SimFs,
+    pub email: Email,
+    pub bank: Bank,
+    pub jobs: Jobs,
+    /// Output sink for `print`-style action output.
+    pub console: Vec<String>,
+}
+
+impl World {
+    pub fn new(clock: Clock) -> World {
+        World {
+            fs: SimFs::new(clock),
+            email: Email::default(),
+            bank: Bank::default(),
+            jobs: Jobs::default(),
+            console: Vec::new(),
+        }
+    }
+
+    pub fn shared(clock: Clock) -> Arc<Mutex<World>> {
+        Arc::new(Mutex::new(World::new(clock)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_constructs() {
+        let w = World::new(Clock::sim());
+        assert!(w.console.is_empty());
+        assert_eq!(w.bank.balance("user"), 0);
+    }
+}

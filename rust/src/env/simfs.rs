@@ -1,0 +1,292 @@
+//! Simulated filesystem with a per-operation latency model.
+//!
+//! The Fig. 8 experiment depends on a *network-mounted* filesystem where
+//! metadata operations are expensive: the slow agent's
+//! `sorted(rglob(...))` re-enumerates the entire tree per folder, which is
+//! pathological exactly because each directory scan pays an RTT. `FsLatency`
+//! charges a configurable cost per metadata op and per KB read/written to
+//! the experiment clock, reproducing that regime. `FsLatency::LOCAL`
+//! (zero-cost) is used everywhere else.
+
+use crate::util::clock::Clock;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Latency charged per FS operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FsLatency {
+    /// Per metadata op (stat, dir entry enumeration — charged per entry).
+    pub per_meta_op: Duration,
+    /// Per KiB of file content read or written.
+    pub per_kib: Duration,
+}
+
+impl FsLatency {
+    pub const LOCAL: FsLatency =
+        FsLatency { per_meta_op: Duration::ZERO, per_kib: Duration::ZERO };
+
+    /// Network-mounted FS (the Fig. 8 regime): every metadata op pays a
+    /// small RTT.
+    pub fn netfs() -> FsLatency {
+        FsLatency { per_meta_op: Duration::from_micros(400), per_kib: Duration::from_micros(40) }
+    }
+}
+
+/// In-memory tree keyed by normalized absolute path.
+pub struct SimFs {
+    files: BTreeMap<String, Vec<u8>>,
+    dirs: std::collections::BTreeSet<String>,
+    clock: Clock,
+    latency: FsLatency,
+    /// Operation counter (meta ops), for tests/profiling.
+    pub meta_ops: u64,
+}
+
+fn norm(path: &str) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    for p in path.split('/') {
+        match p {
+            "" | "." => {}
+            ".." => {
+                parts.pop();
+            }
+            p => parts.push(p),
+        }
+    }
+    format!("/{}", parts.join("/"))
+}
+
+fn parent(path: &str) -> String {
+    match path.rfind('/') {
+        Some(0) | None => "/".to_string(),
+        Some(i) => path[..i].to_string(),
+    }
+}
+
+impl SimFs {
+    pub fn new(clock: Clock) -> SimFs {
+        let mut dirs = std::collections::BTreeSet::new();
+        dirs.insert("/".to_string());
+        SimFs { files: BTreeMap::new(), dirs, clock, latency: FsLatency::LOCAL, meta_ops: 0 }
+    }
+
+    pub fn set_latency(&mut self, l: FsLatency) {
+        self.latency = l;
+    }
+
+    fn charge_meta(&mut self, n: u64) {
+        self.meta_ops += n;
+        if self.latency.per_meta_op > Duration::ZERO {
+            self.clock.charge(self.latency.per_meta_op * n as u32);
+        }
+    }
+
+    fn charge_bytes(&mut self, bytes: usize) {
+        if self.latency.per_kib > Duration::ZERO {
+            let kib = (bytes as u32).div_ceil(1024).max(1);
+            self.clock.charge(self.latency.per_kib * kib);
+        }
+    }
+
+    pub fn mkdir_p(&mut self, path: &str) {
+        let path = norm(path);
+        let mut cur = String::new();
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            cur.push('/');
+            cur.push_str(part);
+            self.dirs.insert(cur.clone());
+        }
+        self.dirs.insert("/".into());
+        self.charge_meta(1);
+    }
+
+    pub fn write(&mut self, path: &str, data: impl Into<Vec<u8>>) -> Result<(), String> {
+        let path = norm(path);
+        let data = data.into();
+        self.mkdir_p(&parent(&path));
+        self.charge_meta(1);
+        self.charge_bytes(data.len());
+        self.files.insert(path, data);
+        Ok(())
+    }
+
+    pub fn read(&mut self, path: &str) -> Result<Vec<u8>, String> {
+        let path = norm(path);
+        self.charge_meta(1);
+        match self.files.get(&path) {
+            Some(d) => {
+                let d = d.clone();
+                self.charge_bytes(d.len());
+                Ok(d)
+            }
+            None => Err(format!("no such file: {path}")),
+        }
+    }
+
+    pub fn append(&mut self, path: &str, data: &[u8]) -> Result<(), String> {
+        let path = norm(path);
+        self.mkdir_p(&parent(&path));
+        self.charge_meta(1);
+        self.charge_bytes(data.len());
+        self.files.entry(path).or_default().extend_from_slice(data);
+        Ok(())
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(), String> {
+        let path = norm(path);
+        self.charge_meta(1);
+        self.files.remove(&path).map(|_| ()).ok_or(format!("no such file: {path}"))
+    }
+
+    pub fn exists(&mut self, path: &str) -> bool {
+        let path = norm(path);
+        self.charge_meta(1);
+        self.files.contains_key(&path) || self.dirs.contains(&path)
+    }
+
+    /// Immediate children of a directory (one meta op per returned entry —
+    /// this is the `os.scandir` cost model).
+    pub fn scandir(&mut self, path: &str) -> Result<Vec<String>, String> {
+        let path = norm(path);
+        if !self.dirs.contains(&path) {
+            self.charge_meta(1);
+            return Err(format!("no such dir: {path}"));
+        }
+        let prefix = if path == "/" { "/".to_string() } else { format!("{path}/") };
+        let mut out = std::collections::BTreeSet::new();
+        for p in self.files.keys().chain(self.dirs.iter()) {
+            if let Some(rest) = p.strip_prefix(&prefix) {
+                if rest.is_empty() {
+                    continue;
+                }
+                let first = rest.split('/').next().unwrap();
+                out.insert(format!("{prefix}{first}"));
+            }
+        }
+        let v: Vec<String> = out.into_iter().collect();
+        self.charge_meta(v.len() as u64 + 1);
+        Ok(v)
+    }
+
+    /// Recursive enumeration of every file under `path` (the `rglob` cost
+    /// model: one meta op per file in the *entire* subtree).
+    pub fn rglob(&mut self, path: &str) -> Result<Vec<String>, String> {
+        let path = norm(path);
+        if !self.dirs.contains(&path) && !self.files.contains_key(&path) {
+            self.charge_meta(1);
+            return Err(format!("no such dir: {path}"));
+        }
+        let prefix = if path == "/" { "/".to_string() } else { format!("{path}/") };
+        let mut v: Vec<String> =
+            self.files.keys().filter(|p| p.starts_with(&prefix)).cloned().collect();
+        v.sort();
+        self.charge_meta(v.len() as u64 + 1);
+        Ok(v)
+    }
+
+    /// Number of files in the whole tree (cheap, for tests).
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn file_names(&self) -> impl Iterator<Item = &String> {
+        self.files.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs() -> SimFs {
+        SimFs::new(Clock::sim())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut f = fs();
+        f.write("/a/b.txt", "hello").unwrap();
+        assert_eq!(f.read("/a/b.txt").unwrap(), b"hello");
+        assert!(f.exists("/a"));
+        assert!(f.exists("/a/b.txt"));
+        assert!(!f.exists("/a/c.txt"));
+    }
+
+    #[test]
+    fn path_normalization() {
+        let mut f = fs();
+        f.write("/a//b/../c.txt", "x").unwrap();
+        assert_eq!(f.read("/a/c.txt").unwrap(), b"x");
+    }
+
+    #[test]
+    fn delete_and_missing() {
+        let mut f = fs();
+        f.write("/x", "1").unwrap();
+        f.delete("/x").unwrap();
+        assert!(f.read("/x").is_err());
+        assert!(f.delete("/x").is_err());
+    }
+
+    #[test]
+    fn scandir_children_only() {
+        let mut f = fs();
+        f.write("/top/a/1.txt", "").unwrap();
+        f.write("/top/a/sub/2.txt", "").unwrap();
+        f.write("/top/b.txt", "").unwrap();
+        let got = f.scandir("/top").unwrap();
+        assert_eq!(got, vec!["/top/a".to_string(), "/top/b.txt".to_string()]);
+    }
+
+    #[test]
+    fn rglob_recursive_sorted() {
+        let mut f = fs();
+        f.write("/t/b/2", "").unwrap();
+        f.write("/t/a/1", "").unwrap();
+        f.write("/t/a/sub/0", "").unwrap();
+        let got = f.rglob("/t").unwrap();
+        assert_eq!(got, vec!["/t/a/1".to_string(), "/t/a/sub/0".into(), "/t/b/2".into()]);
+    }
+
+    #[test]
+    fn netfs_charges_clock() {
+        let clock = Clock::sim();
+        let mut f = SimFs::new(clock.clone());
+        f.set_latency(FsLatency::netfs());
+        for i in 0..100 {
+            f.write(&format!("/data/f{i}"), "x").unwrap();
+        }
+        let before = clock.now();
+        f.rglob("/data").unwrap(); // 101 meta ops
+        let cost = clock.now() - before;
+        assert!(cost >= Duration::from_micros(400) * 100, "rglob pays per-file RTT: {cost:?}");
+        let before = clock.now();
+        f.scandir("/data").unwrap();
+        let scan_cost = clock.now() - before;
+        assert!(scan_cost >= cost / 4 || scan_cost <= cost, "sane");
+    }
+
+    #[test]
+    fn rglob_vs_scandir_cost_gap() {
+        // The Fig. 8 pathology: per-folder rglob over the whole tree is
+        // ~Nx more meta ops than a scandir of just that folder.
+        let clock = Clock::sim();
+        let mut f = SimFs::new(clock.clone());
+        f.set_latency(FsLatency::netfs());
+        for folder in 0..50 {
+            for file in 0..10 {
+                f.write(&format!("/repo/f{folder}/x{file}"), "data").unwrap();
+            }
+        }
+        let t0 = clock.now();
+        f.rglob("/repo").unwrap(); // 500 files
+        let rglob_cost = clock.now() - t0;
+        let t0 = clock.now();
+        f.scandir("/repo/f0").unwrap(); // 10 entries
+        let scan_cost = clock.now() - t0;
+        assert!(
+            rglob_cost > scan_cost * 20,
+            "rglob {rglob_cost:?} should dwarf scandir {scan_cost:?}"
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! The inference tier.
+//!
+//! The paper calls out to remote frontier LLMs ("FrontierModel" and an
+//! older "Target"). This image has no network, so the tier is local and
+//! two-headed (DESIGN.md §5):
+//!
+//! * [`sim::SimLm`] — a deterministic **persona simulator** that supplies
+//!   the *semantics*: task-following competence, prompt-injection
+//!   susceptibility, voting judgment, recovery planning. Personas are
+//!   calibrated to the paper's Utility/ASR numbers.
+//! * [`transformer::TransformerLm`] — the real **compute path**: the
+//!   AOT-compiled JAX/Pallas transformer executed via PJRT from Rust. It
+//!   burns genuine FLOPs token-by-token and provides the real
+//!   latency/throughput measurements for the overhead experiments.
+//! * [`HybridLm`] — semantics from the persona, latency charged per token
+//!   (optionally backed by real transformer execution), which is what the
+//!   figure benches use.
+//!
+//! All engines implement [`InferenceEngine`]; the Driver and the LLM-based
+//! Voter are generic over it and never know which one they talk to.
+
+pub mod protocol;
+pub mod sim;
+pub mod tokenizer;
+pub mod transformer;
+
+pub use protocol::{extract_action, ChatMessage, InferRequest, InferResponse, MsgRole};
+pub use sim::{Persona, SimConfig, SimLm};
+pub use tokenizer::approx_tokens;
+pub use transformer::TransformerLm;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// An inference engine: history in, text out, with token/latency metadata.
+pub trait InferenceEngine: Send + Sync {
+    fn infer(&self, req: &InferRequest) -> InferResponse;
+
+    /// Model label for reports ("frontier", "target", "transformer-128").
+    fn name(&self) -> String;
+}
+
+/// Persona semantics + per-token latency charging (+ optional real
+/// transformer compute behind it).
+pub struct HybridLm {
+    pub sim: SimLm,
+    /// If set, every inference call also executes this many real
+    /// transformer decode steps via PJRT (compute realism for Fig. 5).
+    pub backing: Option<(Arc<TransformerLm>, usize)>,
+}
+
+impl InferenceEngine for HybridLm {
+    fn infer(&self, req: &InferRequest) -> InferResponse {
+        let mut resp = self.sim.infer(req);
+        if let Some((lm, steps)) = &self.backing {
+            let prompt: String =
+                req.messages.iter().map(|m| m.text.as_str()).collect::<Vec<_>>().join("\n");
+            let t0 = std::time::Instant::now();
+            let _ = lm.generate(&prompt, *steps);
+            resp.latency += t0.elapsed();
+        }
+        resp
+    }
+
+    fn name(&self) -> String {
+        match &self.backing {
+            Some((lm, _)) => format!("{}+{}", self.sim.name(), lm.name()),
+            None => self.sim.name(),
+        }
+    }
+}
+
+/// A trivially scriptable engine for unit tests: pops canned responses.
+pub struct ScriptedLm {
+    responses: std::sync::Mutex<std::collections::VecDeque<String>>,
+    pub latency: Duration,
+}
+
+impl ScriptedLm {
+    pub fn new(responses: Vec<&str>) -> ScriptedLm {
+        ScriptedLm {
+            responses: std::sync::Mutex::new(responses.into_iter().map(String::from).collect()),
+            latency: Duration::from_millis(1),
+        }
+    }
+}
+
+impl InferenceEngine for ScriptedLm {
+    fn infer(&self, req: &InferRequest) -> InferResponse {
+        let text = self
+            .responses
+            .lock()
+            .unwrap()
+            .pop_front()
+            .unwrap_or_else(|| "Done.".to_string());
+        let tokens_in: u64 = req.messages.iter().map(|m| approx_tokens(&m.text)).sum();
+        InferResponse { tokens_out: approx_tokens(&text), text, tokens_in, latency: self.latency }
+    }
+
+    fn name(&self) -> String {
+        "scripted".into()
+    }
+}

@@ -1,0 +1,54 @@
+//! Tokenization.
+//!
+//! Two distinct needs:
+//! * the AOT transformer is byte-level (vocab 256): [`encode_bytes`] /
+//!   [`window`] prepare its fixed-length input;
+//! * accounting (Fig. 6-right / Fig. 9 token budgets) uses the usual
+//!   ~4-chars-per-token approximation of BPE tokenizers.
+
+/// Approximate BPE token count of a text (chars/4, ≥1 for non-empty).
+pub fn approx_tokens(text: &str) -> u64 {
+    if text.is_empty() {
+        0
+    } else {
+        (text.chars().count() as u64).div_ceil(4)
+    }
+}
+
+/// Byte-level encoding for the transformer (identity over u8).
+pub fn encode_bytes(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Fixed-length window of the last `seq` tokens, left-padded with zeros
+/// (the AOT module has a static [1, seq] input signature).
+pub fn window(tokens: &[i32], seq: usize) -> Vec<i32> {
+    let mut out = vec![0i32; seq];
+    let take = tokens.len().min(seq);
+    out[seq - take..].copy_from_slice(&tokens[tokens.len() - take..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_counts() {
+        assert_eq!(approx_tokens(""), 0);
+        assert_eq!(approx_tokens("abc"), 1);
+        assert_eq!(approx_tokens("abcd"), 1);
+        assert_eq!(approx_tokens("abcde"), 2);
+    }
+
+    #[test]
+    fn byte_encoding() {
+        assert_eq!(encode_bytes("AB"), vec![65, 66]);
+    }
+
+    #[test]
+    fn window_pads_left() {
+        assert_eq!(window(&[1, 2], 4), vec![0, 0, 1, 2]);
+        assert_eq!(window(&[1, 2, 3, 4, 5], 4), vec![2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,242 @@
+//! The **AgentKernel**: the AgentBus control plane (paper §4.1).
+//!
+//! A service that creates and manages AgentBus instances. Clients choose,
+//! per bus, how much of the deconstructed state machine runs "remotely"
+//! (here: on kernel-owned threads):
+//!
+//! * **Raw** — just the bus;
+//! * **Auto-Decider** — bus + a Decider with a given policy;
+//! * **Auto-Voter** — bus + Decider + voters from the pluggable library;
+//! * **Spawn** — bus + Decider/voters + a full sub-agent (Driver +
+//!   Executor) from a pre-built "image" (engine + system prompt + world) —
+//!   the K8s-backed sub-agent mode, realized with threads.
+
+use crate::bus::{AgentBus, BusBackendKind, DeciderPolicy};
+use crate::env::World;
+use crate::inference::InferenceEngine;
+use crate::metrics::TokenMeter;
+use crate::sm::voter::{RuleVoter, StaticVoter, VoterRunner};
+use crate::sm::{Decider, Driver, Executor};
+use crate::util::clock::Clock;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Pluggable voter library (Auto-Voter mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VoterKind {
+    Rule,
+    Static,
+}
+
+/// The sub-agent "image" for Spawn mode.
+pub struct AgentImage {
+    pub engine: Arc<dyn InferenceEngine>,
+    pub system_prompt: String,
+    pub world: Arc<Mutex<World>>,
+}
+
+/// How much machinery the kernel runs on the new bus.
+pub enum CreateMode {
+    Raw,
+    AutoDecider(DeciderPolicy),
+    AutoVoter(DeciderPolicy, Vec<VoterKind>),
+    Spawn(DeciderPolicy, Vec<VoterKind>, AgentImage),
+}
+
+pub struct AgentKernel {
+    clock: Clock,
+    buses: Mutex<BTreeMap<String, Arc<AgentBus>>>,
+    shutdown: Arc<AtomicBool>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl AgentKernel {
+    pub fn new(clock: Clock) -> Arc<AgentKernel> {
+        Arc::new(AgentKernel {
+            clock,
+            buses: Mutex::new(BTreeMap::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            threads: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Create a new AgentBus and (per mode) its remote-tier components.
+    pub fn create_bus(
+        &self,
+        name: &str,
+        backend: BusBackendKind,
+        mode: CreateMode,
+    ) -> std::io::Result<Arc<AgentBus>> {
+        let bus = AgentBus::new(name, backend.build()?, self.clock.clone());
+        self.buses.lock().unwrap().insert(name.to_string(), Arc::clone(&bus));
+        match mode {
+            CreateMode::Raw => {}
+            CreateMode::AutoDecider(policy) => {
+                self.spawn_decider(&bus, policy);
+            }
+            CreateMode::AutoVoter(policy, voters) => {
+                self.spawn_decider(&bus, policy);
+                for v in voters {
+                    self.spawn_voter(&bus, v);
+                }
+            }
+            CreateMode::Spawn(policy, voters, image) => {
+                self.spawn_decider(&bus, policy);
+                for v in voters {
+                    self.spawn_voter(&bus, v);
+                }
+                self.spawn_subagent(&bus, image);
+            }
+        }
+        Ok(bus)
+    }
+
+    fn spawn_decider(&self, bus: &Arc<AgentBus>, policy: DeciderPolicy) {
+        let d = Decider::new(bus, policy);
+        let sd = self.shutdown.clone();
+        self.threads.lock().unwrap().push(std::thread::spawn(move || d.run(sd)));
+    }
+
+    fn spawn_voter(&self, bus: &Arc<AgentBus>, kind: VoterKind) {
+        let runner = match kind {
+            VoterKind::Rule => VoterRunner::new(bus, Box::new(RuleVoter::production_pack())),
+            VoterKind::Static => VoterRunner::new(bus, Box::new(StaticVoter::new())),
+        };
+        let sd = self.shutdown.clone();
+        self.threads.lock().unwrap().push(std::thread::spawn(move || runner.run(sd)));
+    }
+
+    /// Spawn a Driver + Executor pair (a full sub-agent) on the bus.
+    pub fn spawn_subagent(&self, bus: &Arc<AgentBus>, image: AgentImage) {
+        let executor = Executor::new(bus, image.world.clone());
+        let sd = self.shutdown.clone();
+        self.threads.lock().unwrap().push(std::thread::spawn(move || executor.run(sd)));
+        let driver = Driver::new(bus, image.engine, &image.system_prompt, TokenMeter::new());
+        let sd = self.shutdown.clone();
+        self.threads.lock().unwrap().push(std::thread::spawn(move || driver.run(sd)));
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<Arc<AgentBus>> {
+        self.buses.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.buses.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Stop all kernel-owned components.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AgentKernel {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::{PayloadType, Role};
+    use crate::inference::sim::{SimConfig, SimLm};
+    use crate::util::json::Json;
+    use std::time::Duration;
+
+    #[test]
+    fn raw_mode_just_a_bus() {
+        let k = AgentKernel::new(Clock::sim());
+        let bus = k.create_bus("raw", BusBackendKind::Mem, CreateMode::Raw).unwrap();
+        assert_eq!(bus.tail(), 0);
+        assert_eq!(k.list(), vec!["raw".to_string()]);
+        assert!(k.lookup("raw").is_some());
+        assert!(k.lookup("nope").is_none());
+    }
+
+    #[test]
+    fn auto_decider_mode_commits() {
+        let k = AgentKernel::new(Clock::sim());
+        let bus = k
+            .create_bus("ad", BusBackendKind::Mem, CreateMode::AutoDecider(DeciderPolicy::OnByDefault))
+            .unwrap();
+        let admin = bus.client("admin", Role::Admin);
+        admin
+            .append(PayloadType::Intent, Json::obj(vec![("code", Json::str("print(1);"))]))
+            .unwrap();
+        let obs = bus.client("o", Role::Observer);
+        let commits = obs.poll(0, &[PayloadType::Commit], Duration::from_secs(5)).unwrap();
+        assert_eq!(commits.len(), 1);
+        k.shutdown();
+    }
+
+    #[test]
+    fn auto_voter_mode_votes_and_decides() {
+        let k = AgentKernel::new(Clock::sim());
+        let bus = k
+            .create_bus(
+                "av",
+                BusBackendKind::Mem,
+                CreateMode::AutoVoter(DeciderPolicy::FirstVoter, vec![VoterKind::Rule]),
+            )
+            .unwrap();
+        let admin = bus.client("admin", Role::Admin);
+        admin
+            .append(
+                PayloadType::Intent,
+                Json::obj(vec![("code", Json::str("transfer(\"a\",\"b\",1,\"\");"))]),
+            )
+            .unwrap();
+        let obs = bus.client("o", Role::Observer);
+        let aborts = obs.poll(0, &[PayloadType::Abort], Duration::from_secs(5)).unwrap();
+        assert_eq!(aborts.len(), 1, "rule voter + first_voter decider blocked it");
+        k.shutdown();
+    }
+
+    #[test]
+    fn spawn_mode_runs_full_subagent() {
+        let clock = Clock::sim();
+        let k = AgentKernel::new(clock.clone());
+        let image = AgentImage {
+            engine: Arc::new(SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() })),
+            system_prompt: "sub-agent".into(),
+            world: World::shared(clock.clone()),
+        };
+        let bus = k
+            .create_bus(
+                "sub",
+                BusBackendKind::Mem,
+                CreateMode::Spawn(DeciderPolicy::OnByDefault, vec![], image),
+            )
+            .unwrap();
+        // Mail the sub-agent a task; it must complete end to end.
+        let ext = bus.client("orchestrator", Role::External);
+        ext.append(
+            PayloadType::Mail,
+            Json::obj(vec![(
+                "text",
+                Json::str("TASK sub-1: Note.\n===STEP===\nwrite_file(\"/s.txt\", \"sub\");\n===FINAL===\nSub done."),
+            )]),
+        )
+        .unwrap();
+        let obs = bus.client("o", Role::Observer);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut done = false;
+        let mut cursor = 0;
+        while std::time::Instant::now() < deadline && !done {
+            for e in obs.poll(cursor, &[PayloadType::InfOut], Duration::from_millis(50)).unwrap() {
+                cursor = cursor.max(e.position + 1);
+                if e.payload.body.get_bool("final") == Some(true) {
+                    done = true;
+                }
+            }
+        }
+        assert!(done, "sub-agent completed its turn");
+        k.shutdown();
+    }
+}

@@ -1,0 +1,41 @@
+//! # LogAct — agentic reliability via shared logs
+//!
+//! A full-system reproduction of *LogAct: Enabling Agentic Reliability via
+//! Shared Logs* (Balakrishnan et al., 2026) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Each logical agent is a **deconstructed state machine playing a shared
+//! log** (the [`bus::AgentBus`]): a [`sm::Driver`] turns inference output
+//! into *intentions*, [`sm::voter`]s stamp them with votes, a
+//! [`sm::Decider`] commits or aborts against a quorum policy, and an
+//! [`sm::Executor`] runs committed intentions against the
+//! [`env::World`]. Every transition is durable on the log *before* it
+//! happens, which yields:
+//!
+//! * **Safety** — intentions are visible and stoppable before execution
+//!   (pluggable rule-based / LLM-based voters, hot-swapped via policy
+//!   entries);
+//! * **Fault-tolerance** — the log is a WAL; drivers fence each other via
+//!   election entries, executors recover *at most once* through semantic
+//!   recovery ([`recovery`]);
+//! * **Introspection** — agents (and supervisors, [`swarm`]) run inference
+//!   over their own execution history.
+//!
+//! The inference tier is a local AOT-compiled JAX/Pallas transformer
+//! executed through PJRT ([`runtime`]) plus a persona simulator
+//! ([`inference`]); Python never runs on the request path.
+
+pub mod actions;
+pub mod bus;
+pub mod dojo;
+pub mod env;
+pub mod inference;
+pub mod kernel;
+pub mod metrics;
+pub mod recovery;
+pub mod runtime;
+pub mod sm;
+pub mod swarm;
+pub mod util;
+
+pub use bus::{AgentBus, Entry, Payload, PayloadType};

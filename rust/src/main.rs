@@ -1,0 +1,163 @@
+//! `logact` — CLI launcher for the LogAct reproduction.
+//!
+//! Subcommands:
+//!   demo                    quickstart turn with full log dump
+//!   dojo [--defense D] [--model M]   DojoSim benchmark (fig6 row)
+//!   recover [--folders N] [--kill K] semantic-recovery experiment (fig8)
+//!   swarm [--seed S]        swarm experiment (fig9)
+//!   serve [--requests N]    e2e serving driver over the AOT transformer
+//!   kernel-demo             AgentKernel control-plane tour
+//!
+//! (clap is unavailable offline; argument parsing is hand-rolled.)
+
+use logact::bus::{BusBackendKind, DeciderPolicy};
+use logact::dojo::{run_benchmark, Defense};
+use logact::inference::sim::{SimConfig, SimLm};
+use logact::kernel::{AgentKernel, CreateMode, VoterKind};
+use logact::sm::voter::RuleVoter;
+use logact::sm::{AgentHarness, HarnessConfig, VoterSpec};
+use logact::util::clock::Clock;
+use logact::util::tables::pct;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("demo") => demo(),
+        Some("dojo") => dojo(&args),
+        Some("recover") => recover(&args),
+        Some("swarm") => swarm(&args),
+        Some("serve") => serve(&args),
+        Some("kernel-demo") => kernel_demo(),
+        _ => {
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo> [flags]");
+            eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
+            eprintln!("  recover --folders N --kill K");
+            eprintln!("  swarm   --seed S");
+            eprintln!("  serve   --requests N");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn demo() {
+    let engine = Arc::new(SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() }));
+    let mut cfg = HarnessConfig::minimal(engine);
+    cfg.decider_policy = DeciderPolicy::FirstVoter;
+    cfg.voters = vec![VoterSpec::Rule(RuleVoter::production_pack())];
+    let h = AgentHarness::start(cfg);
+    let r = h.run_turn(
+        "TASK cli-demo: Save a note.\n===STEP===\nwrite_file(\"/n.txt\", \"hello from the CLI\");\nprint(\"saved\");\n===FINAL===\nNote saved.",
+        Duration::from_secs(10),
+    );
+    for e in &r.entries {
+        println!(
+            "[{:>2}] {:<8} {}",
+            e.position,
+            e.payload.ptype.name(),
+            e.payload.body.to_string().chars().take(90).collect::<String>()
+        );
+    }
+    println!("final: {}", r.final_text);
+    h.shutdown();
+}
+
+fn dojo(args: &[String]) {
+    let defense = match flag(args, "--defense").as_deref() {
+        Some("rule") => Defense::RuleVoter,
+        Some("dual") => Defense::DualVoter,
+        _ => Defense::NoDefense,
+    };
+    let persona = match flag(args, "--model").as_deref() {
+        Some("frontier") => SimConfig::frontier(),
+        _ => SimConfig::target(),
+    };
+    let label = format!("{:?}/{}", persona.persona, defense.label());
+    let rep = run_benchmark(&label, &persona, defense);
+    println!(
+        "{label}: benign utility {} | ASR {} | avg latency {:.1}s | avg tokens {:.0} | ({} benign, {} attack cases)",
+        pct(rep.benign_utility),
+        pct(rep.asr),
+        rep.avg_latency.as_secs_f64(),
+        rep.avg_tokens,
+        rep.n_benign,
+        rep.n_attack
+    );
+}
+
+fn recover(args: &[String]) {
+    let folders = flag(args, "--folders").and_then(|s| s.parse().ok()).unwrap_or(400);
+    let kill = flag(args, "--kill").and_then(|s| s.parse().ok()).unwrap_or(folders * 3 / 5);
+    let o = logact::recovery::run_fig8(folders, 1, kill);
+    println!(
+        "phase1 {} folders / {:.1}s; recovery window {:.1}s; phase2 {} folders / {:.2}s; speedup {:.0}x; verified {}",
+        o.phase1_folders,
+        o.phase1_time.as_secs_f64(),
+        o.recovery_inspect_time.as_secs_f64(),
+        o.phase2_folders,
+        o.phase2_loop_time.as_secs_f64(),
+        o.speedup,
+        o.verified
+    );
+}
+
+fn swarm(args: &[String]) {
+    let seed = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(2026);
+    let (base, sup) = logact::swarm::run_fig9(seed);
+    println!("base:       {} files, {} tokens", base.files_fixed, base.total_tokens);
+    println!("supervisor: {} files, {} tokens", sup.files_fixed, sup.total_tokens);
+    println!(
+        "delta: {:+.1}% work, {:.1}% fewer tokens",
+        100.0 * (sup.files_fixed as f64 / base.files_fixed as f64 - 1.0),
+        100.0 * (1.0 - sup.total_tokens as f64 / base.total_tokens as f64)
+    );
+}
+
+fn serve(args: &[String]) {
+    if !logact::runtime::artifacts::artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let n: usize = flag(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let lm = logact::inference::TransformerLm::load().expect("load transformer");
+    let engine = Arc::new(logact::inference::HybridLm {
+        sim: SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() }),
+        backing: Some((lm, 8)),
+    });
+    let h = AgentHarness::start(HarnessConfig::minimal(engine));
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let r = h.run_turn(
+            &format!(
+                "TASK s{i}: Note {i}.\n===STEP===\nwrite_file(\"/t{i}\", \"x\");\nprint(\"ok\");\n===FINAL===\nDone {i}."
+            ),
+            Duration::from_secs(60),
+        );
+        assert!(!r.timed_out);
+    }
+    println!(
+        "{n} requests in {:.2}s ({:.2} req/s) through the full AOT pipeline",
+        t0.elapsed().as_secs_f64(),
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+    h.shutdown();
+}
+
+fn kernel_demo() {
+    let kernel = AgentKernel::new(Clock::sim());
+    kernel.create_bus("raw-bus", BusBackendKind::Mem, CreateMode::Raw).unwrap();
+    kernel
+        .create_bus(
+            "guarded-bus",
+            BusBackendKind::Mem,
+            CreateMode::AutoVoter(DeciderPolicy::FirstVoter, vec![VoterKind::Rule, VoterKind::Static]),
+        )
+        .unwrap();
+    println!("kernel manages buses: {:?}", kernel.list());
+    kernel.shutdown();
+}

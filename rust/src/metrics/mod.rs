@@ -1,0 +1,13 @@
+//! Metrics: per-stage timing derived from the log itself, token
+//! accounting, and simple histograms.
+//!
+//! A pleasant consequence of the LogAct design is that *the bus is the
+//! trace*: every stage transition is an entry with a timestamp, so Fig. 5's
+//! stage breakdown is computed directly from the log rather than from
+//! instrumentation ([`StageBreakdown::from_entries`]).
+
+pub mod stages;
+pub mod tokens;
+
+pub use stages::{Stage, StageBreakdown};
+pub use tokens::TokenMeter;

@@ -1,0 +1,206 @@
+//! Stage breakdown (paper Fig. 2 / Fig. 5-top) reconstructed from the log.
+//!
+//! Stage spans are delimited by entry types:
+//!
+//! * **Inferring** — from the triggering Mail/Result/Abort to the Intent
+//!   (or final InfOut) it produces;
+//! * **Voting** — Intent → last Vote for it (zero under `on_by_default`);
+//! * **Deciding** — last Vote (or Intent) → Commit/Abort;
+//! * **Executing** — Commit → Result.
+
+use crate::bus::{Entry, PayloadType};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    Inferring,
+    Voting,
+    Deciding,
+    Executing,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Inferring, Stage::Voting, Stage::Deciding, Stage::Executing];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Inferring => "Inferring",
+            Stage::Voting => "Voting",
+            Stage::Deciding => "Deciding",
+            Stage::Executing => "Executing",
+        }
+    }
+}
+
+/// Cumulative per-stage wall time for one agent's log.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StageBreakdown {
+    pub per_stage: BTreeMap<Stage, Duration>,
+    pub total: Duration,
+}
+
+impl StageBreakdown {
+    pub fn get(&self, s: Stage) -> Duration {
+        self.per_stage.get(&s).copied().unwrap_or_default()
+    }
+
+    /// Reconstruct the breakdown from a played log. Entries must be in
+    /// position order; timestamps are the bus-assigned realtime ms.
+    pub fn from_entries(entries: &[Entry]) -> StageBreakdown {
+        use PayloadType::*;
+        let mut per_stage: BTreeMap<Stage, Duration> = BTreeMap::new();
+        let mut add = |stage: Stage, from_ms: u64, to_ms: u64| {
+            if to_ms > from_ms {
+                *per_stage.entry(stage).or_default() += Duration::from_millis(to_ms - from_ms);
+            }
+        };
+
+        // Walk transitions: track the timestamp of the last "trigger" for
+        // each stage.
+        let mut infer_started: Option<u64> = None;
+        let mut intent_ts: Option<u64> = None;
+        let mut last_vote_ts: Option<u64> = None;
+        let mut commit_ts: Option<u64> = None;
+
+        for e in entries {
+            let ts = e.realtime_ts;
+            match e.payload.ptype {
+                Mail | Result | Abort => {
+                    // Result/Abort/Mail triggers the next inference round.
+                    if e.payload.ptype == Result {
+                        if let Some(c) = commit_ts.take() {
+                            add(Stage::Executing, c, ts);
+                        }
+                    }
+                    if e.payload.ptype == Abort {
+                        let from = last_vote_ts.take().or(intent_ts.take());
+                        if let Some(f) = from {
+                            add(Stage::Deciding, f, ts);
+                        }
+                    }
+                    infer_started = Some(ts);
+                }
+                InfIn => {}
+                InfOut => {
+                    if let Some(s) = infer_started {
+                        add(Stage::Inferring, s, ts);
+                        infer_started = None;
+                    }
+                }
+                Intent => {
+                    intent_ts = Some(ts);
+                    last_vote_ts = None;
+                }
+                Vote => {
+                    if let Some(i) = intent_ts {
+                        // Voting accumulates from intent (or prior vote).
+                        let from = last_vote_ts.unwrap_or(i);
+                        add(Stage::Voting, from, ts);
+                        last_vote_ts = Some(ts);
+                    }
+                }
+                Commit => {
+                    let from = last_vote_ts.take().or(intent_ts.take());
+                    if let Some(f) = from {
+                        add(Stage::Deciding, f, ts);
+                    }
+                    commit_ts = Some(ts);
+                }
+                Policy => {}
+            }
+        }
+
+        let total = per_stage.values().copied().sum();
+        StageBreakdown { per_stage, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::{Payload, PayloadType::*};
+    use crate::util::json::Json;
+
+    fn e(pos: u64, ts: u64, t: crate::bus::PayloadType) -> Entry {
+        Entry { position: pos, realtime_ts: ts, payload: Payload::new(t, "x", Json::Null) }
+    }
+
+    #[test]
+    fn one_cycle_breakdown() {
+        // mail@0 -> infout@2000 -> intent@2000 -> vote@2100 -> commit@2105
+        // -> result@2400 : infer 2000ms, voting 100ms, deciding 5ms,
+        // executing 295ms.
+        let entries = vec![
+            e(0, 0, Mail),
+            e(1, 2000, InfIn),
+            e(2, 2000, InfOut),
+            e(3, 2000, Intent),
+            e(4, 2100, Vote),
+            e(5, 2105, Commit),
+            e(6, 2400, Result),
+        ];
+        let b = StageBreakdown::from_entries(&entries);
+        assert_eq!(b.get(Stage::Inferring), Duration::from_millis(2000));
+        assert_eq!(b.get(Stage::Voting), Duration::from_millis(100));
+        assert_eq!(b.get(Stage::Deciding), Duration::from_millis(5));
+        assert_eq!(b.get(Stage::Executing), Duration::from_millis(295));
+        assert_eq!(b.total, Duration::from_millis(2400));
+    }
+
+    #[test]
+    fn on_by_default_has_no_voting() {
+        let entries = vec![
+            e(0, 0, Mail),
+            e(1, 1500, InfOut),
+            e(2, 1500, Intent),
+            e(3, 1501, Commit),
+            e(4, 1600, Result),
+        ];
+        let b = StageBreakdown::from_entries(&entries);
+        assert_eq!(b.get(Stage::Voting), Duration::ZERO);
+        assert_eq!(b.get(Stage::Deciding), Duration::from_millis(1));
+        assert_eq!(b.get(Stage::Executing), Duration::from_millis(99));
+    }
+
+    #[test]
+    fn abort_counts_as_deciding() {
+        let entries = vec![
+            e(0, 0, Mail),
+            e(1, 1000, InfOut),
+            e(2, 1000, Intent),
+            e(3, 1050, Vote),
+            e(4, 1060, Abort),
+            e(5, 2500, InfOut),
+        ];
+        let b = StageBreakdown::from_entries(&entries);
+        assert_eq!(b.get(Stage::Voting), Duration::from_millis(50));
+        assert_eq!(b.get(Stage::Deciding), Duration::from_millis(10));
+        // Second inference round (after abort) counted too.
+        assert_eq!(b.get(Stage::Inferring), Duration::from_millis(1000 + 1440));
+    }
+
+    #[test]
+    fn multi_cycle_accumulates() {
+        let mut entries = Vec::new();
+        let mut ts = 0;
+        for i in 0..3u64 {
+            let base = i * 10;
+            entries.push(e(base, ts, if i == 0 { Mail } else { Result }));
+            ts += 1000; // inference
+            entries.push(e(base + 1, ts, InfOut));
+            entries.push(e(base + 2, ts, Intent));
+            ts += 20; // voting
+            entries.push(e(base + 3, ts, Vote));
+            ts += 2; // deciding
+            entries.push(e(base + 4, ts, Commit));
+            ts += 100; // executing
+        }
+        entries.push(e(99, ts, Result));
+        let b = StageBreakdown::from_entries(&entries);
+        assert_eq!(b.get(Stage::Inferring), Duration::from_millis(3000));
+        assert_eq!(b.get(Stage::Voting), Duration::from_millis(60));
+        assert_eq!(b.get(Stage::Deciding), Duration::from_millis(6));
+        assert_eq!(b.get(Stage::Executing), Duration::from_millis(300));
+    }
+}

@@ -1,0 +1,55 @@
+//! Token accounting across a turn / experiment (Fig. 6-right, Fig. 9).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe token counters, shared by driver + LLM voters.
+#[derive(Debug, Default)]
+pub struct TokenMeter {
+    pub tokens_in: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub inference_calls: AtomicU64,
+}
+
+impl TokenMeter {
+    pub fn new() -> Arc<TokenMeter> {
+        Arc::new(TokenMeter::default())
+    }
+
+    pub fn record(&self, tokens_in: u64, tokens_out: u64) {
+        self.tokens_in.fetch_add(tokens_in, Ordering::Relaxed);
+        self.tokens_out.fetch_add(tokens_out, Ordering::Relaxed);
+        self.inference_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tokens_in.load(Ordering::Relaxed) + self.tokens_out.load(Ordering::Relaxed)
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.inference_calls.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.tokens_in.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.inference_calls.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = TokenMeter::new();
+        m.record(100, 20);
+        m.record(50, 5);
+        assert_eq!(m.total(), 175);
+        assert_eq!(m.calls(), 2);
+        assert_eq!(m.snapshot(), (150, 25, 2));
+    }
+}

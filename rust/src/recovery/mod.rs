@@ -1,0 +1,267 @@
+//! Semantic recovery / health check / optimization (paper §5.3, Fig. 8).
+//!
+//! The workload: checksum 2000 top-level folders of a large codebase on a
+//! network-mounted filesystem. A worker agent uses the pathological
+//! `sorted(rglob(...))` implementation (re-enumerating the *entire* tree
+//! for every folder); it is killed after a timeout. A recovery agent is
+//! then pointed at the crashed agent's bus with the paper's prompt —
+//! introspect intentions only, resume without repeating work, fix obvious
+//! slowdowns — and finishes the remainder with `os.scandir`-style
+//! enumeration, hundreds of times faster.
+//!
+//! The module provides the workload builder, the worker/recovery task
+//! mails, and the orchestration that produces both panels of Fig. 8.
+
+use crate::bus::{AgentBus, Entry, PayloadType, Role};
+use crate::env::{FsLatency, World};
+use crate::inference::sim::{SimConfig, SimLm};
+use crate::sm::{AgentHarness, HarnessConfig};
+use crate::util::clock::Clock;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub const OUTPUT_FILE: &str = "/work/checksums.txt";
+pub const REPO_ROOT: &str = "/repo";
+
+/// Populate the environment: `folders` top-level folders, `files_per`
+/// files each, on a netfs-latency filesystem.
+pub fn populate_workload(world: &Arc<Mutex<World>>, folders: usize, files_per: usize) {
+    let mut w = world.lock().unwrap();
+    for d in 0..folders {
+        for f in 0..files_per {
+            w.fs
+                .write(&format!("{REPO_ROOT}/pkg{d:04}/src{f}.py"), format!("def f{d}_{f}(): pass"))
+                .unwrap();
+        }
+    }
+    w.fs.write(OUTPUT_FILE, "").unwrap();
+    // The paper's codebase lives on a network mount: that's what makes the
+    // rglob implementation pathological.
+    w.fs.set_latency(FsLatency {
+        per_meta_op: Duration::from_micros(65),
+        per_kib: Duration::from_micros(10),
+    });
+}
+
+/// The slow worker's task mail: checksum every folder with the
+/// pathological whole-tree rglob per folder.
+pub fn worker_mail() -> String {
+    format!(
+        r#"TASK checksum-worker: Generate a checksum for each top-level folder of {REPO_ROOT}, writing "<folder> <crc>" lines to {OUTPUT_FILE}.
+===STEP===
+let folders = scandir("{REPO_ROOT}");
+print("planning: " + len(folders) + " folders");
+===STEP===
+foreach folder in scandir("{REPO_ROOT}") {{
+    let files = sort(rglob("{REPO_ROOT}"));
+    let acc = "";
+    foreach f in files {{
+        if startswith(f, folder + "/") {{ acc = acc + read_file(f); }}
+    }}
+    append_file("{OUTPUT_FILE}", basename(folder) + " " + checksum(acc) + "\n");
+}}
+print("all folders processed");
+===FINAL===
+All folder checksums written to {OUTPUT_FILE}."#
+    )
+}
+
+/// The recovery agent's mail (the paper's recovery prompt + the crashed
+/// bus's intentions inline).
+pub fn recovery_mail(busdump: &str) -> String {
+    format!(
+        "RECOVER: You are recovering from a crash; inspect only the intentions on the original \
+         bus; redo the last intention (ideally without repeating work); but fix any obvious \
+         reasons that might cause a slowdown in the code.\nOUTPUT={OUTPUT_FILE}\nROOT={REPO_ROOT}\nBUSDUMP:\n{busdump}"
+    )
+}
+
+/// Dump the intentions of a bus as text (what the recovery agent is
+/// allowed to introspect: "inspect only the intentions").
+pub fn dump_intentions(bus: &Arc<AgentBus>) -> String {
+    let obs = bus.client("introspector", Role::Observer);
+    let intents = obs.read(0, bus.tail(), Some(&[PayloadType::Intent])).unwrap_or_default();
+    intents
+        .iter()
+        .map(|e| format!("intent@{}:\n{}", e.position, e.payload.body.get_str("code").unwrap_or("")))
+        .collect::<Vec<_>>()
+        .join("\n---\n")
+}
+
+/// A sample of progress: (sim-time, folders completed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressSample {
+    pub sim_time: Duration,
+    pub folders_done: usize,
+}
+
+fn count_lines(world: &Arc<Mutex<World>>) -> usize {
+    let mut w = world.lock().unwrap();
+    match w.fs.read(OUTPUT_FILE) {
+        Ok(data) => data.split(|b| *b == b'\n').filter(|l| !l.is_empty()).count(),
+        Err(_) => 0,
+    }
+}
+
+/// Outcome of the full Fig. 8 run.
+#[derive(Debug)]
+pub struct Fig8Outcome {
+    /// Folders the slow worker finished before being killed.
+    pub phase1_folders: usize,
+    /// Sim-time the slow worker spent.
+    pub phase1_time: Duration,
+    /// Progress samples for the slow phase (per-folder latency series).
+    pub phase1_samples: Vec<ProgressSample>,
+    /// Sim-time the recovery agent spent inspecting (entries 1-10 of the
+    /// paper's trace) before the optimized main loop ran.
+    pub recovery_inspect_time: Duration,
+    /// Sim-time of the optimized main loop (the 816-folders-in-0.36s line).
+    pub phase2_loop_time: Duration,
+    pub phase2_folders: usize,
+    /// Per-folder speedup of phase 2 over phase 1.
+    pub speedup: f64,
+    /// The recovery agent's bus (the Fig. 8-right trace).
+    pub recovery_entries: Vec<Entry>,
+    pub total_folders: usize,
+    pub verified: bool,
+}
+
+/// Run the whole Fig. 8 experiment: slow worker → kill at `kill_after`
+/// folders → recovery agent resumes and finishes.
+pub fn run_fig8(folders: usize, files_per: usize, kill_after: usize) -> Fig8Outcome {
+    let clock = Clock::sim();
+    let world = World::shared(clock.clone());
+    populate_workload(&world, folders, files_per);
+
+    // ---- Phase 1: the slow worker -------------------------------------
+    let engine = Arc::new(SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() }));
+    let mut cfg = HarnessConfig::minimal(engine);
+    cfg.name = "checksum-worker".into();
+    cfg.clock = clock.clone();
+    cfg.world = world.clone();
+    let h = AgentHarness::start(cfg);
+    h.send_mail(&worker_mail());
+
+    // Watch progress; kill the executor once `kill_after` folders done.
+    let mut samples = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let done = count_lines(&world);
+        let now = world.lock().unwrap(); // hold briefly for a consistent clock read
+        drop(now);
+        samples.push(ProgressSample { sim_time: clock.now(), folders_done: done });
+        if done >= kill_after {
+            h.kill_executor();
+            break;
+        }
+        if std::time::Instant::now() > deadline {
+            h.kill_executor();
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Let the kill take effect, then freeze phase-1 stats.
+    std::thread::sleep(Duration::from_millis(50));
+    let phase1_folders = count_lines(&world);
+    let phase1_time = clock.now();
+    let busdump = dump_intentions(h.bus());
+    h.shutdown();
+
+    // ---- Phase 2: the recovery agent ----------------------------------
+    let rec_engine =
+        Arc::new(SimLm::new(SimConfig { benign_fail_rate: 0.0, ..SimConfig::frontier() }));
+    let mut rcfg = HarnessConfig::minimal(rec_engine);
+    rcfg.name = "recovery-agent".into();
+    rcfg.clock = clock.clone();
+    rcfg.world = world.clone();
+    let rh = AgentHarness::start(rcfg);
+
+    let t_recovery_start = clock.now();
+    let report = rh.run_turn(&recovery_mail(&busdump), Duration::from_secs(120));
+
+    // Locate the optimized main-loop intention (step 4 of the plan) to
+    // split inspect time from loop time.
+    let mut loop_start = t_recovery_start;
+    let mut loop_end = clock.now();
+    for e in &report.entries {
+        if e.payload.ptype == PayloadType::Intent {
+            let code = e.payload.body.get_str("code").unwrap_or("");
+            if code.contains("append_file") && code.contains("foreach folder") {
+                loop_start = Duration::from_millis(e.realtime_ts);
+            }
+        }
+        if e.payload.ptype == PayloadType::Result {
+            if e.payload.body.get_str("output").unwrap_or("").contains("Processed remaining") {
+                loop_end = Duration::from_millis(e.realtime_ts);
+            }
+        }
+    }
+    let phase2_loop_time = loop_end.saturating_sub(loop_start);
+    let recovery_inspect_time = loop_start.saturating_sub(t_recovery_start);
+    let total_done = count_lines(&world);
+    let phase2_folders = total_done.saturating_sub(phase1_folders);
+
+    let per_folder_1 = phase1_time.as_secs_f64() / phase1_folders.max(1) as f64;
+    let per_folder_2 = phase2_loop_time.as_secs_f64() / phase2_folders.max(1) as f64;
+    let speedup = if per_folder_2 > 0.0 { per_folder_1 / per_folder_2 } else { f64::INFINITY };
+
+    let outcome = Fig8Outcome {
+        phase1_folders,
+        phase1_time,
+        phase1_samples: samples,
+        recovery_inspect_time,
+        phase2_loop_time,
+        phase2_folders,
+        speedup,
+        recovery_entries: report.entries.clone(),
+        total_folders: folders,
+        verified: total_done == folders && report.final_text.contains("completed"),
+    };
+    rh.shutdown();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_populates() {
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        populate_workload(&world, 10, 2);
+        let mut w = world.lock().unwrap();
+        assert_eq!(w.fs.scandir(REPO_ROOT).unwrap().len(), 10);
+        assert_eq!(w.fs.file_count(), 21, "10 folders x 2 files + output file");
+    }
+
+    #[test]
+    fn worker_and_recovery_mails_well_formed() {
+        let wm = worker_mail();
+        assert!(crate::inference::protocol::parse_task(&wm).is_some());
+        assert!(wm.contains("rglob"), "worker uses the pathological impl");
+        let rm = recovery_mail("intent@4: foo");
+        assert!(rm.contains("RECOVER"));
+        assert!(rm.contains("OUTPUT=/work/checksums.txt"));
+        assert!(rm.contains("intent@4"));
+    }
+
+    #[test]
+    fn fig8_end_to_end_small() {
+        // Scaled-down shape test: 60 folders, kill after 25; the recovery
+        // agent must finish the remaining 35 without redoing the first 25,
+        // substantially faster per folder.
+        let o = run_fig8(60, 2, 25);
+        assert!(o.phase1_folders >= 25 && o.phase1_folders < 60, "{}", o.phase1_folders);
+        assert_eq!(o.phase1_folders + o.phase2_folders, 60, "no folder done twice, none missed");
+        assert!(o.verified, "recovery verified the output file");
+        assert!(o.speedup > 5.0, "optimized impl much faster: {}", o.speedup);
+        // The trace shows the five-step semantic recovery plan.
+        let intents = o
+            .recovery_entries
+            .iter()
+            .filter(|e| e.payload.ptype == PayloadType::Intent)
+            .count();
+        assert_eq!(intents, 5);
+    }
+}

@@ -1,0 +1,73 @@
+//! Artifact discovery and model metadata (artifacts/meta.json).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Geometry of the AOT-exported model, read from artifacts/meta.json.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> std::io::Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        let get = |k: &str| -> std::io::Result<usize> {
+            j.get_u64(k)
+                .map(|v| v as usize)
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("meta.json missing {k}")))
+        };
+        Ok(ModelMeta {
+            vocab: get("vocab")?,
+            seq: get("seq")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            n_layers: get("n_layers")?,
+            d_ff: get("d_ff")?,
+        })
+    }
+}
+
+/// Locate the artifacts directory: $LOGACT_ARTIFACTS, ./artifacts, or
+/// relative to the crate root (tests run from the workspace).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("LOGACT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("meta.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+/// True when `make artifacts` has produced the full set.
+pub fn artifacts_available() -> bool {
+    let d = artifacts_dir();
+    d.join("meta.json").exists() && d.join("lm_step.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_if_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ModelMeta::load(&artifacts_dir()).unwrap();
+        assert!(m.vocab >= 2 && m.seq >= 8);
+        assert_eq!(m.d_model % m.n_heads, 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//!
+//! This is the only place the process touches XLA. Artifacts are produced
+//! once by `make artifacts` (python/compile/aot.py); at startup the
+//! coordinator compiles them on the PJRT CPU client and then executes them
+//! from the request path with no Python anywhere.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and /opt/xla-example).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{artifacts_dir, ModelMeta};
+pub use pjrt::PjrtModule;

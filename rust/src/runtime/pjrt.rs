@@ -1,0 +1,105 @@
+//! Thin wrapper over the `xla` crate: HLO text → compiled PJRT executable.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A compiled XLA module on the PJRT CPU client.
+///
+/// Compilation happens once (startup); `execute_*` runs on the request
+/// path. The underlying `xla::PjRtLoadedExecutable` is not Sync, so calls
+/// are serialized behind a mutex — fine for a single-agent hot path, and
+/// multiple modules can be loaded for parallelism.
+pub struct PjrtModule {
+    name: String,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    pub compile_time: Duration,
+}
+
+// SAFETY: the executable is only touched under the mutex; the PJRT CPU
+// client is thread-safe for execution.
+unsafe impl Send for PjrtModule {}
+unsafe impl Sync for PjrtModule {}
+
+impl PjrtModule {
+    /// Load an HLO text file, compile on the CPU client.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<PjrtModule> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(PjrtModule {
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("module").to_string(),
+            exe: Mutex::new(exe),
+            compile_time: t0.elapsed(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with a single i32 tensor input of shape `dims`; the module
+    /// was lowered with return_tuple=True, so unwrap a 1-tuple and return
+    /// the flat f32 output.
+    pub fn execute_i32_to_f32(
+        &self,
+        input: &[i32],
+        dims: &[i64],
+    ) -> anyhow::Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Create the (process-global) PJRT CPU client.
+    pub fn cpu_client() -> anyhow::Result<xla::PjRtClient> {
+        Ok(xla::PjRtClient::cpu()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{artifacts_available, artifacts_dir, ModelMeta};
+
+    #[test]
+    fn load_and_execute_lm_step() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let dir = artifacts_dir();
+        let meta = ModelMeta::load(&dir).unwrap();
+        let client = PjrtModule::cpu_client().unwrap();
+        let module = PjrtModule::load(&client, &dir.join("lm_step.hlo.txt")).unwrap();
+
+        let tokens: Vec<i32> = (0..meta.seq as i32).map(|i| i % meta.vocab as i32).collect();
+        let logits = module
+            .execute_i32_to_f32(&tokens, &[1, meta.seq as i64])
+            .unwrap();
+        assert_eq!(logits.len(), meta.seq * meta.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()), "finite logits");
+        // Determinism: same input, same output.
+        let logits2 = module.execute_i32_to_f32(&tokens, &[1, meta.seq as i64]).unwrap();
+        assert_eq!(logits, logits2);
+    }
+
+    #[test]
+    fn lm_score_in_unit_interval() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = artifacts_dir();
+        let meta = ModelMeta::load(&dir).unwrap();
+        let client = PjrtModule::cpu_client().unwrap();
+        let module = PjrtModule::load(&client, &dir.join("lm_score.hlo.txt")).unwrap();
+        let tokens: Vec<i32> = vec![65; meta.seq];
+        let score = module.execute_i32_to_f32(&tokens, &[1, meta.seq as i64]).unwrap();
+        assert_eq!(score.len(), 1);
+        assert!((0.0..=1.0).contains(&score[0]));
+    }
+}

@@ -1,0 +1,386 @@
+//! The **Decider**: plays Votes (and Intents + Policy), applies the quorum
+//! policy, appends Commit or Abort (paper Fig. 2 stage 2, §3.2).
+//!
+//! The Decider is a classical replicated state machine: its only state is
+//! the current [`DeciderPolicy`] plus per-intent vote tallies, all
+//! reconstructible from the log. Two deciders may run concurrently — the
+//! decision function is deterministic, so they append identical (duplicate)
+//! decisions, and the Executor deduplicates.
+
+use super::fence::FenceTracker;
+use super::snapshot::{Snapshot, SnapshotStore};
+use crate::bus::{AgentBus, BusClient, DeciderPolicy, Entry, PayloadType, Role, Vote, VoteKind};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct Decider {
+    client: BusClient,
+    policy: DeciderPolicy,
+    cursor: u64,
+    fence: FenceTracker,
+    /// intent_pos -> votes by voter type (first vote per type wins).
+    tallies: BTreeMap<u64, BTreeMap<String, VoteKind>>,
+    /// intents already decided (idempotence under replay).
+    decided: BTreeSet<u64>,
+    /// intents seen (valid per fencing).
+    pending: BTreeSet<u64>,
+    snapshot_store: Option<(Arc<dyn SnapshotStore>, String)>,
+    snapshot_every: u64,
+}
+
+impl Decider {
+    pub fn new(bus: &Arc<AgentBus>, initial_policy: DeciderPolicy) -> Decider {
+        Decider {
+            client: bus.client("decider", Role::Decider),
+            policy: initial_policy,
+            cursor: 0,
+            fence: FenceTracker::new(),
+            tallies: BTreeMap::new(),
+            decided: BTreeSet::new(),
+            pending: BTreeSet::new(),
+            snapshot_store: None,
+            snapshot_every: 64,
+        }
+    }
+
+    pub fn with_snapshots(mut self, store: Arc<dyn SnapshotStore>, key: &str) -> Decider {
+        self.snapshot_store = Some((store, key.to_string()));
+        self
+    }
+
+    /// Recover: load the snapshot (if any), then replay the log suffix.
+    pub fn recover(
+        bus: &Arc<AgentBus>,
+        initial_policy: DeciderPolicy,
+        store: Arc<dyn SnapshotStore>,
+        key: &str,
+    ) -> Decider {
+        let mut d = Decider::new(bus, initial_policy).with_snapshots(store.clone(), key);
+        if let Ok(Some(snap)) = store.get(key) {
+            d.cursor = snap.position;
+            if let Some(p) = snap.state.get("policy").and_then(DeciderPolicy::from_json) {
+                d.policy = p;
+            }
+            if let Some(decided) = snap.state.get("decided").and_then(|v| v.as_arr()) {
+                d.decided = decided.iter().filter_map(|x| x.as_u64()).collect();
+            }
+        }
+        d
+    }
+
+    pub fn policy(&self) -> &DeciderPolicy {
+        &self.policy
+    }
+
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    fn snapshot(&self) {
+        if let Some((store, key)) = &self.snapshot_store {
+            let state = Json::obj(vec![
+                ("policy", self.policy.to_json()),
+                (
+                    "decided",
+                    Json::Arr(self.decided.iter().map(|p| Json::Int(*p as i64)).collect()),
+                ),
+            ]);
+            let _ = store.put(key, &Snapshot { position: self.cursor, state });
+        }
+    }
+
+    /// Process one batch of entries; returns how many were handled.
+    pub fn step(&mut self, timeout: Duration) -> usize {
+        let types = [PayloadType::Intent, PayloadType::Vote, PayloadType::Policy];
+        let entries = match self.client.poll(self.cursor, &types, timeout) {
+            Ok(v) => v,
+            Err(_) => return 0,
+        };
+        let n = entries.len();
+        for e in entries {
+            self.handle(&e);
+            self.cursor = self.cursor.max(e.position + 1);
+        }
+        if n > 0 && self.cursor % self.snapshot_every < n as u64 {
+            self.snapshot();
+        }
+        n
+    }
+
+    fn handle(&mut self, e: &Entry) {
+        self.fence.observe(e);
+        match e.payload.ptype {
+            PayloadType::Policy => {
+                if e.payload.body.get_str("kind") == Some("decider") {
+                    if let Some(p) = e.payload.body.get("policy").and_then(DeciderPolicy::from_json)
+                    {
+                        self.policy = p;
+                    }
+                }
+            }
+            PayloadType::Intent => {
+                if !self.fence.intent_valid(e) {
+                    return; // fenced driver's intent: ignore entirely
+                }
+                self.pending.insert(e.position);
+                if self.policy == DeciderPolicy::OnByDefault {
+                    self.decide(e.position, true, "on_by_default");
+                }
+            }
+            PayloadType::Vote => {
+                let Some(v) = Vote::from_body(&e.payload.body) else { return };
+                if !self.pending.contains(&v.intent_pos) {
+                    return; // vote for unknown/fenced intent
+                }
+                self.tallies
+                    .entry(v.intent_pos)
+                    .or_default()
+                    .entry(v.voter_type.clone())
+                    .or_insert(v.kind);
+                self.evaluate(v.intent_pos);
+            }
+            _ => {}
+        }
+    }
+
+    fn evaluate(&mut self, intent_pos: u64) {
+        if self.decided.contains(&intent_pos) {
+            return;
+        }
+        let tally = self.tallies.get(&intent_pos).cloned().unwrap_or_default();
+        let decision: Option<(bool, String)> = match &self.policy {
+            DeciderPolicy::OnByDefault => Some((true, "on_by_default".into())),
+            DeciderPolicy::FirstVoter => tally
+                .iter()
+                .next()
+                .map(|(t, k)| (*k == VoteKind::Approve, format!("first_voter:{t}"))),
+            DeciderPolicy::BooleanOr(types) => {
+                if let Some(t) = types.iter().find(|t| tally.get(*t) == Some(&VoteKind::Approve)) {
+                    Some((true, format!("boolean_or approved by {t}")))
+                } else if types.iter().all(|t| tally.contains_key(t)) {
+                    Some((false, "boolean_or: all voters rejected".into()))
+                } else {
+                    None // keep waiting
+                }
+            }
+            DeciderPolicy::BooleanAnd(types) => {
+                if let Some(t) = types.iter().find(|t| tally.get(*t) == Some(&VoteKind::Reject)) {
+                    Some((false, format!("boolean_and rejected by {t}")))
+                } else if types.iter().all(|t| tally.get(t) == Some(&VoteKind::Approve)) {
+                    Some((true, "boolean_and: all approved".into()))
+                } else {
+                    None
+                }
+            }
+        };
+        if let Some((approve, reason)) = decision {
+            self.decide(intent_pos, approve, &reason);
+        }
+    }
+
+    fn decide(&mut self, intent_pos: u64, approve: bool, reason: &str) {
+        if !self.decided.insert(intent_pos) {
+            return;
+        }
+        let body = Json::obj(vec![
+            ("intent_pos", Json::Int(intent_pos as i64)),
+            ("reason", Json::str(reason)),
+        ]);
+        let t = if approve { PayloadType::Commit } else { PayloadType::Abort };
+        let _ = self.client.append(t, body);
+    }
+
+    /// Run as a component thread until `shutdown`.
+    pub fn run(mut self, shutdown: Arc<AtomicBool>) {
+        while !shutdown.load(Ordering::SeqCst) {
+            self.step(Duration::from_millis(25));
+        }
+        self.snapshot();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::PayloadType::*;
+    use crate::sm::snapshot::MemSnapshotStore;
+
+    fn intent_body(code: &str) -> Json {
+        Json::obj(vec![("code", Json::str(code)), ("intent_id", Json::str("i1"))])
+    }
+
+    fn vote_body(intent_pos: u64, approve: bool, vtype: &str) -> Json {
+        crate::bus::Vote {
+            intent_pos,
+            kind: if approve { VoteKind::Approve } else { VoteKind::Reject },
+            voter_type: vtype.into(),
+            reason: "t".into(),
+        }
+        .to_body()
+    }
+
+    fn drain(d: &mut Decider) {
+        while d.step(Duration::from_millis(1)) > 0 {}
+    }
+
+    #[test]
+    fn on_by_default_commits_without_votes() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d = Decider::new(&bus, DeciderPolicy::OnByDefault);
+        let pos = admin.append(Intent, intent_body("print(1);")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        let commits = obs.read(0, 100, Some(&[Commit])).unwrap();
+        assert_eq!(commits.len(), 1);
+        assert_eq!(commits[0].intent_pos(), Some(pos));
+    }
+
+    #[test]
+    fn first_voter_follows_first_vote() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d = Decider::new(&bus, DeciderPolicy::FirstVoter);
+        let pos = admin.append(Intent, intent_body("x();")).unwrap();
+        admin.append(Vote, vote_body(pos, false, "rule")).unwrap();
+        admin.append(Vote, vote_body(pos, true, "llm")).unwrap(); // too late
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert_eq!(obs.read(0, 100, Some(&[Abort])).unwrap().len(), 1);
+        assert_eq!(obs.read(0, 100, Some(&[Commit])).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn boolean_or_commits_on_any_approve() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d =
+            Decider::new(&bus, DeciderPolicy::BooleanOr(vec!["rule".into(), "llm".into()]));
+        let pos = admin.append(Intent, intent_body("x();")).unwrap();
+        admin.append(Vote, vote_body(pos, false, "rule")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert!(obs.read(0, 100, Some(&[Commit, Abort])).unwrap().is_empty(), "waits for llm");
+        admin.append(Vote, vote_body(pos, true, "llm")).unwrap();
+        drain(&mut d);
+        assert_eq!(obs.read(0, 100, Some(&[Commit])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn boolean_or_aborts_when_all_reject() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d =
+            Decider::new(&bus, DeciderPolicy::BooleanOr(vec!["rule".into(), "llm".into()]));
+        let pos = admin.append(Intent, intent_body("evil();")).unwrap();
+        admin.append(Vote, vote_body(pos, false, "rule")).unwrap();
+        admin.append(Vote, vote_body(pos, false, "llm")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert_eq!(obs.read(0, 100, Some(&[Abort])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn boolean_and_requires_all() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d =
+            Decider::new(&bus, DeciderPolicy::BooleanAnd(vec!["rule".into(), "llm".into()]));
+        let pos = admin.append(Intent, intent_body("x();")).unwrap();
+        admin.append(Vote, vote_body(pos, true, "rule")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert!(obs.read(0, 100, Some(&[Commit, Abort])).unwrap().is_empty());
+        admin.append(Vote, vote_body(pos, true, "llm")).unwrap();
+        drain(&mut d);
+        assert_eq!(obs.read(0, 100, Some(&[Commit])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn policy_hot_swap_via_log() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d = Decider::new(&bus, DeciderPolicy::OnByDefault);
+        // Swap to first_voter via a policy entry.
+        admin
+            .append(
+                Policy,
+                Json::obj(vec![
+                    ("kind", Json::str("decider")),
+                    ("policy", DeciderPolicy::FirstVoter.to_json()),
+                ]),
+            )
+            .unwrap();
+        let pos = admin.append(Intent, intent_body("x();")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert!(
+            obs.read(0, 100, Some(&[Commit])).unwrap().is_empty(),
+            "no auto-commit after policy swap"
+        );
+        admin.append(Vote, vote_body(pos, true, "rule")).unwrap();
+        drain(&mut d);
+        assert_eq!(obs.read(0, 100, Some(&[Commit])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn two_deciders_append_duplicate_identical_decisions() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d1 = Decider::new(&bus, DeciderPolicy::OnByDefault);
+        let mut d2 = Decider::new(&bus, DeciderPolicy::OnByDefault);
+        let pos = admin.append(Intent, intent_body("x();")).unwrap();
+        drain(&mut d1);
+        drain(&mut d2);
+        let obs = bus.client("o", Role::Observer);
+        let commits = obs.read(0, 100, Some(&[Commit])).unwrap();
+        assert_eq!(commits.len(), 2, "both deciders decided");
+        assert!(commits.iter().all(|c| c.intent_pos() == Some(pos)), "identical decisions");
+    }
+
+    #[test]
+    fn snapshot_recovery_skips_decided() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let store: Arc<dyn SnapshotStore> = Arc::new(MemSnapshotStore::new());
+        let mut d = Decider::new(&bus, DeciderPolicy::OnByDefault)
+            .with_snapshots(store.clone(), "decider");
+        admin.append(Intent, intent_body("x();")).unwrap();
+        drain(&mut d);
+        d.snapshot();
+        drop(d);
+        // Recover; append another intent; only the new one gets decided.
+        let mut d2 = Decider::recover(&bus, DeciderPolicy::OnByDefault, store, "decider");
+        assert!(d2.cursor() > 0, "resumed from snapshot");
+        admin.append(Intent, intent_body("y();")).unwrap();
+        drain(&mut d2);
+        let obs = bus.client("o", Role::Observer);
+        assert_eq!(obs.read(0, 100, Some(&[Commit])).unwrap().len(), 2, "one per intent, no dupes");
+    }
+
+    #[test]
+    fn fenced_intent_ignored() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut d = Decider::new(&bus, DeciderPolicy::OnByDefault);
+        // Election for driver B at pos 0.
+        admin.append(Policy, super::super::fence::election_body("B")).unwrap();
+        // Intent claiming a stale epoch from driver A.
+        admin
+            .append(
+                Intent,
+                Json::obj(vec![
+                    ("code", Json::str("x();")),
+                    ("driver", Json::str("A")),
+                    ("epoch", Json::Int(0)),
+                ]),
+            )
+            .unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert!(obs.read(0, 100, Some(&[Commit, Abort])).unwrap().is_empty());
+    }
+}

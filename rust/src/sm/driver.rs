@@ -1,0 +1,488 @@
+//! The **Driver**: runs the *Inferring* stage (paper Fig. 2 stage 0).
+//!
+//! Plays Mail / Result / Abort (and Policy for fencing); maintains the
+//! conversation; calls the inference tier; appends InfIn (delta-encoded),
+//! InfOut, and Intent entries.
+//!
+//! The Driver is a classical replicated state machine — its state is just
+//! the conversation history, reconstructible from the log (InfOut entries
+//! make replay deterministic despite LLM non-determinism). It is NOT safe
+//! to run two drivers concurrently: a booting driver's first act is a
+//! `driver_election` policy append, and a driver that observes a later
+//! election from someone else powers itself down (paper §3.2).
+
+use super::fence::{election_body, FenceTracker};
+use super::snapshot::{Snapshot, SnapshotStore};
+use crate::bus::{AgentBus, BusClient, PayloadType, Role};
+use crate::inference::{extract_action, ChatMessage, InferRequest, InferenceEngine, MsgRole};
+use crate::metrics::TokenMeter;
+use crate::util::clock::Clock;
+use crate::util::ids;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct Driver {
+    client: BusClient,
+    engine: Arc<dyn InferenceEngine>,
+    clock: Clock,
+    meter: Arc<TokenMeter>,
+    pub driver_id: String,
+    /// Position of our election entry (our epoch). u64::MAX = not elected.
+    epoch: u64,
+    cursor: u64,
+    fence: FenceTracker,
+    conversation: Vec<ChatMessage>,
+    /// Messages already logged to InfIn (delta encoding).
+    logged_msgs: usize,
+    /// Log position of the intent we're waiting on, if any.
+    pending_intent: Option<u64>,
+    /// True once another driver fenced us.
+    pub powered_down: bool,
+    /// Consecutive aborts circuit breaker (give up the turn eventually).
+    aborts_this_turn: u32,
+    pub max_aborts_per_turn: u32,
+    snapshot_store: Option<(Arc<dyn SnapshotStore>, String)>,
+}
+
+impl Driver {
+    pub fn new(
+        bus: &Arc<AgentBus>,
+        engine: Arc<dyn InferenceEngine>,
+        system_prompt: &str,
+        meter: Arc<TokenMeter>,
+    ) -> Driver {
+        let driver_id = ids::next_label("driver");
+        let client = bus.client(driver_id.clone(), Role::Driver);
+        let mut d = Driver {
+            client,
+            engine,
+            clock: bus.clock().clone(),
+            meter,
+            driver_id,
+            epoch: u64::MAX,
+            cursor: 0,
+            fence: FenceTracker::new(),
+            conversation: vec![ChatMessage::system(system_prompt)],
+            logged_msgs: 0,
+            pending_intent: None,
+            powered_down: false,
+            aborts_this_turn: 0,
+            max_aborts_per_turn: 4,
+            snapshot_store: None,
+        };
+        d.elect();
+        d
+    }
+
+    /// Recover a driver from a snapshot: restore the conversation, replay
+    /// the log suffix, re-elect.
+    pub fn recover(
+        bus: &Arc<AgentBus>,
+        engine: Arc<dyn InferenceEngine>,
+        system_prompt: &str,
+        meter: Arc<TokenMeter>,
+        store: Arc<dyn SnapshotStore>,
+        key: &str,
+    ) -> Driver {
+        let mut d = Driver::new(bus, engine, system_prompt, meter);
+        d.snapshot_store = Some((store.clone(), key.to_string()));
+        if let Ok(Some(snap)) = store.get(key) {
+            d.cursor = snap.position;
+            if let Some(msgs) = snap.state.get("conversation").and_then(|v| v.as_arr()) {
+                d.conversation = msgs
+                    .iter()
+                    .filter_map(|m| {
+                        Some(ChatMessage {
+                            role: match m.get_str("role")? {
+                                "system" => MsgRole::System,
+                                "user" => MsgRole::User,
+                                "assistant" => MsgRole::Assistant,
+                                _ => MsgRole::Tool,
+                            },
+                            text: m.get_str("text")?.to_string(),
+                        })
+                    })
+                    .collect();
+                d.logged_msgs = d.conversation.len();
+            }
+        }
+        d
+    }
+
+    pub fn with_snapshots(mut self, store: Arc<dyn SnapshotStore>, key: &str) -> Driver {
+        self.snapshot_store = Some((store, key.to_string()));
+        self
+    }
+
+    fn elect(&mut self) {
+        if let Ok(pos) = self.client.append(PayloadType::Policy, election_body(&self.driver_id)) {
+            self.epoch = pos;
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn conversation(&self) -> &[ChatMessage] {
+        &self.conversation
+    }
+
+    pub fn snapshot(&self) {
+        if let Some((store, key)) = &self.snapshot_store {
+            let msgs: Vec<Json> = self
+                .conversation
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        (
+                            "role",
+                            Json::str(match m.role {
+                                MsgRole::System => "system",
+                                MsgRole::User => "user",
+                                MsgRole::Assistant => "assistant",
+                                MsgRole::Tool => "tool",
+                            }),
+                        ),
+                        ("text", Json::str(m.text.clone())),
+                    ])
+                })
+                .collect();
+            let state = Json::obj(vec![("conversation", Json::Arr(msgs))]);
+            let _ = store.put(key, &Snapshot { position: self.cursor, state });
+        }
+    }
+
+    /// Process one poll batch. Returns entries handled.
+    pub fn step(&mut self, timeout: Duration) -> usize {
+        if self.powered_down {
+            return 0;
+        }
+        let types =
+            [PayloadType::Mail, PayloadType::Result, PayloadType::Abort, PayloadType::Policy];
+        let entries = match self.client.poll(self.cursor, &types, timeout) {
+            Ok(v) => v,
+            Err(_) => return 0,
+        };
+        let n = entries.len();
+        let mut wake_inference = false;
+        for e in entries {
+            self.cursor = self.cursor.max(e.position + 1);
+            self.fence.observe(&e);
+            match e.payload.ptype {
+                PayloadType::Policy => {
+                    if self.epoch != u64::MAX
+                        && self.fence.should_power_down(&self.driver_id, self.epoch, &e)
+                    {
+                        self.powered_down = true;
+                        return n;
+                    }
+                }
+                PayloadType::Mail => {
+                    let text = e.payload.body.get_str("text").unwrap_or("").to_string();
+                    self.conversation.push(ChatMessage::user(text));
+                    if self.pending_intent.is_none() {
+                        wake_inference = true;
+                    }
+                    // else: buffered; included in the next inference call.
+                }
+                PayloadType::Result => {
+                    // Only react to results for our pending intent, or
+                    // reboot markers.
+                    let reboot = e.payload.body.get_bool("reboot").unwrap_or(false);
+                    let matches_pending = e.intent_pos().is_some()
+                        && self.pending_intent == e.intent_pos();
+                    if matches_pending || reboot {
+                        let ok = e.payload.body.get_bool("ok").unwrap_or(false);
+                        let output = e.payload.body.get_str("output").unwrap_or("");
+                        let err = e.payload.body.get_str("error").unwrap_or("");
+                        let text = if ok {
+                            format!("RESULT (ok):\n{output}")
+                        } else {
+                            format!("RESULT (failed): {err}\n{output}")
+                        };
+                        self.conversation.push(ChatMessage::tool(text));
+                        self.pending_intent = None;
+                        wake_inference = true;
+                    }
+                }
+                PayloadType::Abort => {
+                    if e.intent_pos().is_some() && self.pending_intent == e.intent_pos() {
+                        let reason = e.payload.body.get_str("reason").unwrap_or("");
+                        self.conversation
+                            .push(ChatMessage::tool(format!("ACTION BLOCKED: {reason}")));
+                        self.pending_intent = None;
+                        self.aborts_this_turn += 1;
+                        if self.aborts_this_turn <= self.max_aborts_per_turn {
+                            wake_inference = true;
+                        } else {
+                            // Give up the turn: emit a final InfOut.
+                            self.append_infout(
+                                "I could not find an approvable way to continue; stopping.",
+                                0,
+                                0,
+                                Duration::ZERO,
+                                true,
+                            );
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if wake_inference && !self.powered_down {
+            self.inference_round();
+        }
+        n
+    }
+
+    fn append_infout(&mut self, text: &str, tin: u64, tout: u64, lat: Duration, fin: bool) {
+        let body = Json::obj(vec![
+            ("text", Json::str(text)),
+            ("tokens_in", Json::Int(tin as i64)),
+            ("tokens_out", Json::Int(tout as i64)),
+            ("latency_ms", Json::Int(lat.as_millis() as i64)),
+            ("final", Json::Bool(fin)),
+        ]);
+        let _ = self.client.append(PayloadType::InfOut, body);
+    }
+
+    fn inference_round(&mut self) {
+        // Log the InfIn delta (the paper logs deltas, not the resent
+        // history — Fig. 5-middle's storage math depends on this).
+        let delta: Vec<Json> = self.conversation[self.logged_msgs..]
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    (
+                        "role",
+                        Json::str(match m.role {
+                            MsgRole::System => "system",
+                            MsgRole::User => "user",
+                            MsgRole::Assistant => "assistant",
+                            MsgRole::Tool => "tool",
+                        }),
+                    ),
+                    ("text", Json::str(m.text.clone())),
+                ])
+            })
+            .collect();
+        let _ = self.client.append(
+            PayloadType::InfIn,
+            Json::obj(vec![
+                ("delta", Json::Arr(delta)),
+                ("history_len", Json::Int(self.conversation.len() as i64)),
+            ]),
+        );
+        self.logged_msgs = self.conversation.len();
+
+        // The actual inference call (the request resends full history, as
+        // with the stateless chat-completions API).
+        let req = InferRequest::new(self.conversation.clone());
+        let resp = self.engine.infer(&req);
+        self.meter.record(resp.tokens_in, resp.tokens_out);
+        self.clock.charge(resp.latency);
+        self.conversation.push(ChatMessage::assistant(resp.text.clone()));
+        self.logged_msgs = self.conversation.len();
+
+        match extract_action(&resp.text) {
+            Some(code) => {
+                self.append_infout(&resp.text, resp.tokens_in, resp.tokens_out, resp.latency, false);
+                let body = Json::obj(vec![
+                    ("intent_id", Json::str(ids::next_label("intent"))),
+                    ("code", Json::str(code)),
+                    ("driver", Json::str(self.driver_id.clone())),
+                    ("epoch", Json::Int(self.epoch as i64)),
+                ]);
+                if let Ok(pos) = self.client.append(PayloadType::Intent, body) {
+                    self.pending_intent = Some(pos);
+                }
+            }
+            None => {
+                // Final answer: turn complete.
+                self.aborts_this_turn = 0;
+                self.append_infout(&resp.text, resp.tokens_in, resp.tokens_out, resp.latency, true);
+                self.snapshot();
+            }
+        }
+    }
+
+    pub fn run(mut self, shutdown: Arc<AtomicBool>) {
+        while !shutdown.load(Ordering::SeqCst) && !self.powered_down {
+            self.step(Duration::from_millis(25));
+        }
+        self.snapshot();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::PayloadType::*;
+    use crate::inference::ScriptedLm;
+    use crate::inference::protocol::action_block;
+
+    fn mail_body(text: &str) -> Json {
+        Json::obj(vec![("text", Json::str(text))])
+    }
+
+    fn drain(d: &mut Driver) {
+        while d.step(Duration::from_millis(1)) > 0 {}
+    }
+
+    #[test]
+    fn mail_triggers_inference_and_intent() {
+        let bus = AgentBus::in_memory("t");
+        let engine = Arc::new(ScriptedLm::new(vec![&action_block("print(1);"), "All done."]));
+        let mut d = Driver::new(&bus, engine, "You are an agent.", TokenMeter::new());
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail_body("do something")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        let intents = obs.read(0, 100, Some(&[Intent])).unwrap();
+        assert_eq!(intents.len(), 1);
+        assert_eq!(intents[0].payload.body.get_str("driver"), Some(d.driver_id.as_str()));
+        assert_eq!(intents[0].payload.body.get_u64("epoch"), Some(d.epoch()));
+        // InfIn + InfOut were logged before/with the intent.
+        assert_eq!(obs.read(0, 100, Some(&[InfIn])).unwrap().len(), 1);
+        assert_eq!(obs.read(0, 100, Some(&[InfOut])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn result_resumes_turn_to_final() {
+        let bus = AgentBus::in_memory("t");
+        let engine = Arc::new(ScriptedLm::new(vec![&action_block("print(1);"), "All done."]));
+        let mut d = Driver::new(&bus, engine, "sys", TokenMeter::new());
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail_body("go")).unwrap();
+        drain(&mut d);
+        let intent_pos = bus.tail() - 1;
+        // Simulate the executor's result.
+        let admin = bus.client("admin", Role::Admin);
+        admin
+            .append(
+                Result,
+                Json::obj(vec![
+                    ("intent_pos", Json::Int(intent_pos as i64)),
+                    ("ok", Json::Bool(true)),
+                    ("output", Json::str("1")),
+                ]),
+            )
+            .unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        let infouts = obs.read(0, 100, Some(&[InfOut])).unwrap();
+        assert_eq!(infouts.len(), 2);
+        assert_eq!(infouts[1].payload.body.get_bool("final"), Some(true));
+        assert!(infouts[1].payload.body.get_str("text").unwrap().contains("All done"));
+    }
+
+    #[test]
+    fn abort_feeds_blocked_notice_back() {
+        let bus = AgentBus::in_memory("t");
+        let engine =
+            Arc::new(ScriptedLm::new(vec![&action_block("evil();"), "Understood, stopping."]));
+        let mut d = Driver::new(&bus, engine, "sys", TokenMeter::new());
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail_body("go")).unwrap();
+        drain(&mut d);
+        let intent_pos = bus.tail() - 1;
+        let admin = bus.client("admin", Role::Admin);
+        admin
+            .append(
+                Abort,
+                Json::obj(vec![
+                    ("intent_pos", Json::Int(intent_pos as i64)),
+                    ("reason", Json::str("rule 'no-evil' matched")),
+                ]),
+            )
+            .unwrap();
+        drain(&mut d);
+        assert!(d
+            .conversation()
+            .iter()
+            .any(|m| m.role == MsgRole::Tool && m.text.contains("ACTION BLOCKED")));
+        let obs = bus.client("o", Role::Observer);
+        let infouts = obs.read(0, 100, Some(&[InfOut])).unwrap();
+        assert_eq!(infouts.last().unwrap().payload.body.get_bool("final"), Some(true));
+    }
+
+    #[test]
+    fn second_driver_fences_first() {
+        let bus = AgentBus::in_memory("t");
+        let engine1 = Arc::new(ScriptedLm::new(vec!["never used"]));
+        let engine2 = Arc::new(ScriptedLm::new(vec!["Done."]));
+        let mut d1 = Driver::new(&bus, engine1, "sys", TokenMeter::new());
+        // d2 boots and elects itself (later position).
+        let mut d2 = Driver::new(&bus, engine2, "sys", TokenMeter::new());
+        drain(&mut d1);
+        assert!(d1.powered_down, "d1 must power down after seeing d2's election");
+        drain(&mut d2);
+        assert!(!d2.powered_down);
+        // Mail now goes to d2 only.
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail_body("hello")).unwrap();
+        drain(&mut d1);
+        drain(&mut d2);
+        let obs = bus.client("o", Role::Observer);
+        let infouts = obs.read(0, 100, Some(&[InfOut])).unwrap();
+        assert_eq!(infouts.len(), 1, "only the live driver inferred");
+    }
+
+    #[test]
+    fn mail_during_pending_intent_is_buffered() {
+        let bus = AgentBus::in_memory("t");
+        let engine = Arc::new(ScriptedLm::new(vec![&action_block("print(1);"), "Done both."]));
+        let mut d = Driver::new(&bus, engine, "sys", TokenMeter::new());
+        let ext = bus.client("user", Role::External);
+        ext.append(Mail, mail_body("first")).unwrap();
+        drain(&mut d);
+        // Second mail while waiting on the intent result: no inference yet.
+        ext.append(Mail, mail_body("also do this")).unwrap();
+        drain(&mut d);
+        let obs = bus.client("o", Role::Observer);
+        assert_eq!(obs.read(0, 100, Some(&[InfOut])).unwrap().len(), 1, "buffered");
+        // Result arrives; next inference sees both mails.
+        let admin = bus.client("admin", Role::Admin);
+        let intents = obs.read(0, 100, Some(&[Intent])).unwrap();
+        admin
+            .append(
+                Result,
+                Json::obj(vec![
+                    ("intent_pos", Json::Int(intents[0].position as i64)),
+                    ("ok", Json::Bool(true)),
+                    ("output", Json::str("ok")),
+                ]),
+            )
+            .unwrap();
+        drain(&mut d);
+        assert!(d.conversation().iter().filter(|m| m.role == MsgRole::User).count() == 2);
+        let infouts = obs.read(0, 100, Some(&[InfOut])).unwrap();
+        assert_eq!(infouts.last().unwrap().payload.body.get_bool("final"), Some(true));
+    }
+
+    #[test]
+    fn snapshot_recovery_restores_conversation() {
+        use crate::sm::snapshot::MemSnapshotStore;
+        let bus = AgentBus::in_memory("t");
+        let store: Arc<dyn SnapshotStore> = Arc::new(MemSnapshotStore::new());
+        {
+            let engine = Arc::new(ScriptedLm::new(vec!["Hello! Done."]));
+            let mut d = Driver::new(&bus, engine, "sys", TokenMeter::new())
+                .with_snapshots(store.clone(), "driver");
+            let ext = bus.client("user", Role::External);
+            ext.append(Mail, mail_body("hi")).unwrap();
+            drain(&mut d);
+            d.snapshot();
+        }
+        let engine = Arc::new(ScriptedLm::new(vec!["Recovered."]));
+        let d2 = Driver::recover(&bus, engine, "sys", TokenMeter::new(), store, "driver");
+        assert!(
+            d2.conversation().iter().any(|m| m.text.contains("hi")),
+            "conversation restored from snapshot"
+        );
+        assert!(d2.conversation().iter().any(|m| m.text.contains("Hello! Done.")));
+    }
+}

@@ -1,0 +1,304 @@
+//! The **Executor**: the only LLM-Active component — plays Commits,
+//! interprets the committed intention against the environment, appends
+//! Results (paper Fig. 2 stage 3, §3.2).
+//!
+//! The Executor is *not* a replicated state machine: its effects live in
+//! the external environment and are not idempotent, so recovery is
+//! conservative **at-most-once**: it never re-executes an intent it (or a
+//! predecessor) already produced a Result for, and on reboot it appends a
+//! special Result entry that flows through Driver → inference → Voters and
+//! drives semantic recovery.
+
+use super::fence::FenceTracker;
+use crate::actions::{parse, Interp, KillSwitch};
+use crate::bus::{AgentBus, BusClient, Entry, PayloadType, Role};
+use crate::env::World;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct Executor {
+    client: BusClient,
+    world: Arc<Mutex<World>>,
+    clock: Clock,
+    cursor: u64,
+    fence: FenceTracker,
+    /// Intent positions already executed (at-most-once).
+    executed: BTreeSet<u64>,
+    kill: KillSwitch,
+    /// Max interpreter steps per intention.
+    pub max_steps: u64,
+}
+
+impl Executor {
+    /// Fresh executor on an empty (or new) bus.
+    pub fn new(bus: &Arc<AgentBus>, world: Arc<Mutex<World>>) -> Executor {
+        Executor {
+            client: bus.client("executor", Role::Executor),
+            world,
+            clock: bus.clock().clone(),
+            cursor: 0,
+            fence: FenceTracker::new(),
+            executed: BTreeSet::new(),
+            kill: KillSwitch::new(),
+            max_steps: 500_000_000,
+        }
+    }
+
+    /// Reboot on an existing bus (paper §3.2): reconstruct the executed
+    /// set from Result entries, and if there was a commit in flight
+    /// without a Result, append the special reboot Result that triggers
+    /// semantic recovery upstream.
+    pub fn reboot(bus: &Arc<AgentBus>, world: Arc<Mutex<World>>) -> Executor {
+        let mut ex = Executor::new(bus, world);
+        let tail = ex.client.tail();
+        let entries = ex
+            .client
+            .read(0, tail, Some(&[PayloadType::Commit, PayloadType::Intent, PayloadType::Policy]))
+            .unwrap_or_default();
+        // Results: which intents completed? (Results are not in the
+        // Executor's play grant per Table 2 — but the *executor itself*
+        // wrote them; reading its own outputs is how at-most-once state is
+        // rebuilt. We use an observer grant for this bootstrap read.)
+        let obs = bus.client("executor-boot", crate::bus::Role::Observer);
+        let results = obs.read(0, tail, Some(&[PayloadType::Result])).unwrap_or_default();
+        let mut done: BTreeSet<u64> = BTreeSet::new();
+        for r in &results {
+            if let Some(p) = r.intent_pos() {
+                done.insert(p);
+            }
+        }
+        let mut in_flight = false;
+        for e in &entries {
+            ex.fence.observe(e);
+            if e.payload.ptype == PayloadType::Commit {
+                if let Some(p) = e.intent_pos() {
+                    if done.contains(&p) {
+                        ex.executed.insert(p);
+                    } else {
+                        // Commit without a Result: interrupted execution.
+                        ex.executed.insert(p); // never re-run it blindly
+                        in_flight = true;
+                    }
+                }
+            }
+        }
+        ex.cursor = tail;
+        if in_flight || !results.is_empty() {
+            let _ = ex.client.append(
+                PayloadType::Result,
+                Json::obj(vec![
+                    ("reboot", Json::Bool(true)),
+                    ("ok", Json::Bool(false)),
+                    (
+                        "output",
+                        Json::str(
+                            "EXECUTOR REBOOTED: a prior intention may have been interrupted; \
+                             inspect the bus and the environment before proceeding.",
+                        ),
+                    ),
+                ]),
+            );
+        }
+        ex
+    }
+
+    /// The kill switch used for crash injection (Fig. 8, fault tests).
+    pub fn kill_switch(&self) -> KillSwitch {
+        self.kill.clone()
+    }
+
+    pub fn step(&mut self, timeout: Duration) -> usize {
+        let types = [PayloadType::Commit, PayloadType::Policy];
+        let entries = match self.client.poll(self.cursor, &types, timeout) {
+            Ok(v) => v,
+            Err(_) => return 0,
+        };
+        let n = entries.len();
+        for e in entries {
+            self.cursor = self.cursor.max(e.position + 1);
+            self.handle(&e);
+        }
+        n
+    }
+
+    fn handle(&mut self, e: &Entry) {
+        self.fence.observe(e);
+        if e.payload.ptype != PayloadType::Commit {
+            return;
+        }
+        let Some(intent_pos) = e.intent_pos() else { return };
+        // At-most-once: duplicate commits (two deciders) are ignored.
+        if !self.executed.insert(intent_pos) {
+            return;
+        }
+        // Play the intent entry itself.
+        let Ok(mut intents) = self.client.read(intent_pos, intent_pos + 1, Some(&[PayloadType::Intent]))
+        else {
+            return;
+        };
+        let Some(intent) = intents.pop() else { return };
+        let code = intent.payload.body.get_str("code").unwrap_or("").to_string();
+
+        let outcome = match parse(&code) {
+            Ok(prog) => Interp::new(self.world.clone(), self.clock.clone())
+                .with_kill_switch(self.kill.clone())
+                .with_max_steps(self.max_steps)
+                .run(&prog),
+            Err(err) => crate::actions::ExecOutcome {
+                ok: false,
+                output: String::new(),
+                error: Some(format!("parse error: {err}")),
+                steps: 0,
+                returned: crate::actions::Value::Null,
+            },
+        };
+
+        // A killed executor does NOT get to append its Result — the
+        // process died. The kill switch models that: swallow the entry.
+        if self.kill.is_killed() {
+            return;
+        }
+
+        let mut body = Json::obj(vec![
+            ("intent_pos", Json::Int(intent_pos as i64)),
+            ("ok", Json::Bool(outcome.ok)),
+            ("output", Json::str(outcome.output.clone())),
+            ("steps", Json::Int(outcome.steps as i64)),
+        ]);
+        if let Some(err) = &outcome.error {
+            body.set("error", Json::str(err.clone()));
+        }
+        let _ = self.client.append(PayloadType::Result, body);
+    }
+
+    pub fn run(mut self, shutdown: Arc<AtomicBool>) {
+        while !shutdown.load(Ordering::SeqCst) {
+            self.step(Duration::from_millis(25));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::PayloadType::*;
+
+    fn commit_body(intent_pos: u64) -> Json {
+        Json::obj(vec![("intent_pos", Json::Int(intent_pos as i64))])
+    }
+
+    fn drain(ex: &mut Executor) {
+        while ex.step(Duration::from_millis(1)) > 0 {}
+    }
+
+    #[test]
+    fn executes_committed_intent() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let world = World::shared(bus.clock().clone());
+        let mut ex = Executor::new(&bus, world.clone());
+        let ipos = admin
+            .append(Intent, Json::obj(vec![("code", Json::str("write_file(\"/x\", \"hi\"); print(\"done\");"))]))
+            .unwrap();
+        admin.append(Commit, commit_body(ipos)).unwrap();
+        drain(&mut ex);
+        assert!(world.lock().unwrap().fs.exists("/x"));
+        let obs = bus.client("o", Role::Observer);
+        let results = obs.read(0, 100, Some(&[Result])).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].payload.body.get_bool("ok"), Some(true));
+        assert!(results[0].payload.body.get_str("output").unwrap().contains("done"));
+    }
+
+    #[test]
+    fn uncommitted_intent_never_executes() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let world = World::shared(bus.clock().clone());
+        let mut ex = Executor::new(&bus, world.clone());
+        admin
+            .append(Intent, Json::obj(vec![("code", Json::str("write_file(\"/x\", \"hi\");"))]))
+            .unwrap();
+        drain(&mut ex);
+        assert!(!world.lock().unwrap().fs.exists("/x"), "no commit, no effect");
+    }
+
+    #[test]
+    fn duplicate_commits_execute_once() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let world = World::shared(bus.clock().clone());
+        world.lock().unwrap().bank.open("user", 1000);
+        let mut ex = Executor::new(&bus, world.clone());
+        let ipos = admin
+            .append(Intent, Json::obj(vec![("code", Json::str("transfer(\"user\", \"b\", 100, \"\");"))]))
+            .unwrap();
+        admin.append(Commit, commit_body(ipos)).unwrap();
+        admin.append(Commit, commit_body(ipos)).unwrap(); // second decider
+        drain(&mut ex);
+        assert_eq!(world.lock().unwrap().bank.balance("user"), 900, "exactly one transfer");
+        let obs = bus.client("o", Role::Observer);
+        assert_eq!(obs.read(0, 100, Some(&[Result])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn failed_action_reports_error() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let world = World::shared(bus.clock().clone());
+        let mut ex = Executor::new(&bus, world);
+        let ipos = admin
+            .append(Intent, Json::obj(vec![("code", Json::str("read_file(\"/missing\");"))]))
+            .unwrap();
+        admin.append(Commit, commit_body(ipos)).unwrap();
+        drain(&mut ex);
+        let obs = bus.client("o", Role::Observer);
+        let r = &obs.read(0, 100, Some(&[Result])).unwrap()[0];
+        assert_eq!(r.payload.body.get_bool("ok"), Some(false));
+        assert!(r.payload.body.get_str("error").unwrap().contains("no such file"));
+    }
+
+    #[test]
+    fn killed_executor_appends_nothing_and_reboot_fences() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let world = World::shared(bus.clock().clone());
+        let mut ex = Executor::new(&bus, world.clone());
+        let kill = ex.kill_switch();
+        let ipos = admin
+            .append(
+                Intent,
+                Json::obj(vec![("code", Json::str("foreach i in range(1000) { write_file(\"/f\" + i, \"x\"); }"))]),
+            )
+            .unwrap();
+        admin.append(Commit, commit_body(ipos)).unwrap();
+        kill.kill(); // crash before/during execution
+        drain(&mut ex);
+        let obs = bus.client("o", Role::Observer);
+        assert!(obs.read(0, 100, Some(&[Result])).unwrap().is_empty(), "dead executor is silent");
+        drop(ex);
+
+        // Reboot: the new executor must fence with a special Result and
+        // never blindly re-run the interrupted intent.
+        let before = world.lock().unwrap().fs.file_count();
+        let mut ex2 = Executor::reboot(&bus, world.clone());
+        drain(&mut ex2);
+        let results = obs.read(0, 100, Some(&[Result])).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].payload.body.get_bool("reboot"), Some(true));
+        assert_eq!(world.lock().unwrap().fs.file_count(), before, "no blind re-execution");
+    }
+
+    #[test]
+    fn reboot_with_clean_log_is_quiet() {
+        let bus = AgentBus::in_memory("t");
+        let world = World::shared(bus.clock().clone());
+        let _ex = Executor::reboot(&bus, world);
+        let obs = bus.client("o", Role::Observer);
+        assert!(obs.read(0, 100, Some(&[Result])).unwrap().is_empty(), "nothing to recover");
+    }
+}

@@ -1,0 +1,129 @@
+//! Driver fencing (paper §3.2).
+//!
+//! A booting Driver's first act is appending a `driver_election` policy
+//! entry; the *position* of that entry is its epoch. Every component that
+//! plays intentions also plays these policy entries and rejects intentions
+//! from a fenced (superseded) driver. This implements the paper's
+//! slot-9/slot-10 example: Driver A appends an intent concurrently with
+//! Driver B electing itself; B's election lands at slot 9, A's intent at
+//! slot 10 carries A's older epoch and every player ignores it.
+
+use crate::bus::{Entry, PayloadType};
+use crate::util::json::Json;
+
+/// Build the election policy body for a booting driver.
+pub fn election_body(driver_id: &str) -> Json {
+    Json::obj(vec![("kind", Json::str("driver_election")), ("driver_id", Json::str(driver_id))])
+}
+
+/// Is this entry a driver election?
+pub fn is_election(e: &Entry) -> bool {
+    e.payload.ptype == PayloadType::Policy
+        && e.payload.body.get_str("kind") == Some("driver_election")
+}
+
+/// Tracks the currently elected driver while playing the log in order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FenceTracker {
+    /// (driver_id, election entry position)
+    pub current: Option<(String, u64)>,
+}
+
+impl FenceTracker {
+    pub fn new() -> FenceTracker {
+        FenceTracker::default()
+    }
+
+    /// Feed every played entry through this (in position order).
+    pub fn observe(&mut self, e: &Entry) {
+        if is_election(e) {
+            if let Some(id) = e.payload.body.get_str("driver_id") {
+                self.current = Some((id.to_string(), e.position));
+            }
+        }
+    }
+
+    /// An intent is valid iff its embedded epoch matches the election in
+    /// force at the intent's position.
+    pub fn intent_valid(&self, intent: &Entry) -> bool {
+        debug_assert_eq!(intent.payload.ptype, PayloadType::Intent);
+        let claimed_epoch = intent.payload.body.get_u64("epoch");
+        let claimed_driver = intent.payload.body.get_str("driver");
+        match (&self.current, claimed_epoch, claimed_driver) {
+            (Some((id, pos)), Some(epoch), Some(driver)) => epoch == *pos && driver == id,
+            // No election on the log at all: accept (single-driver buses
+            // created via the kernel in Raw mode).
+            (None, _, _) => true,
+            _ => false,
+        }
+    }
+
+    /// Should a driver with `(my_id, my_epoch)` power itself down on
+    /// observing this entry? (Another driver elected itself later.)
+    pub fn should_power_down(&self, my_id: &str, my_epoch: u64, e: &Entry) -> bool {
+        if !is_election(e) {
+            return false;
+        }
+        let other = e.payload.body.get_str("driver_id").unwrap_or("");
+        other != my_id && e.position > my_epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::Payload;
+
+    fn election(pos: u64, id: &str) -> Entry {
+        Entry {
+            position: pos,
+            realtime_ts: 0,
+            payload: Payload::new(PayloadType::Policy, id, election_body(id)),
+        }
+    }
+
+    fn intent(pos: u64, driver: &str, epoch: u64) -> Entry {
+        Entry {
+            position: pos,
+            realtime_ts: 0,
+            payload: Payload::new(
+                PayloadType::Intent,
+                driver,
+                Json::obj(vec![
+                    ("code", Json::str("print(1);")),
+                    ("driver", Json::str(driver)),
+                    ("epoch", Json::Int(epoch as i64)),
+                ]),
+            ),
+        }
+    }
+
+    #[test]
+    fn paper_slot_9_slot_10_example() {
+        // Driver A elected at slot 3; B elects itself at slot 9; A's
+        // intent lands at slot 10 with epoch 3 — must be ignored.
+        let mut f = FenceTracker::new();
+        f.observe(&election(3, "A"));
+        assert!(f.intent_valid(&intent(5, "A", 3)), "A valid before B's election");
+        f.observe(&election(9, "B"));
+        assert!(!f.intent_valid(&intent(10, "A", 3)), "stale A intent fenced");
+        assert!(f.intent_valid(&intent(11, "B", 9)), "B's intents valid");
+    }
+
+    #[test]
+    fn no_election_accepts_all() {
+        let f = FenceTracker::new();
+        assert!(f.intent_valid(&intent(0, "anyone", 0)));
+    }
+
+    #[test]
+    fn power_down_logic() {
+        let f = FenceTracker::new();
+        // A elected at 3 sees B's election at 9 -> power down.
+        assert!(f.should_power_down("A", 3, &election(9, "B")));
+        // A sees its own election -> no.
+        assert!(!f.should_power_down("A", 3, &election(3, "A")));
+        // A sees an *older* election (replay) -> no.
+        assert!(!f.should_power_down("A", 9, &election(2, "B")));
+    }
+}

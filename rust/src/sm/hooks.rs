@@ -1,0 +1,205 @@
+//! Dirty-slate integration: an **imperative agentic loop** instrumented
+//! with pre-execution hooks (the paper's Claude Code integration, Table 3
+//! column 1).
+//!
+//! Unlike LogClaw, driver and executor live in one loop/process here; the
+//! hook appends the intention to the AgentBus and *blocks* until a
+//! commit/abort decision appears, then executes inline. Voters and the
+//! Decider still run decoupled, so safety and audit hold — but
+//! driver/executor separation (and therefore the §3.1 Case-3 isolation
+//! story) does not, exactly as the paper's Table 3 records.
+
+use crate::actions::run_program;
+use crate::bus::{AgentBus, DeciderPolicy, PayloadType, Role};
+use crate::env::World;
+use crate::inference::{extract_action, ChatMessage, InferRequest, InferenceEngine};
+use crate::metrics::TokenMeter;
+use crate::util::ids;
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct HookedHarness {
+    pub bus: Arc<AgentBus>,
+    engine: Arc<dyn InferenceEngine>,
+    world: Arc<Mutex<World>>,
+    meter: Arc<TokenMeter>,
+    /// How long the pre-execution hook waits for a decision.
+    pub decision_timeout: Duration,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HookOutcome {
+    Final(String),
+    GaveUp(String),
+}
+
+impl HookedHarness {
+    pub fn new(
+        bus: Arc<AgentBus>,
+        engine: Arc<dyn InferenceEngine>,
+        world: Arc<Mutex<World>>,
+    ) -> HookedHarness {
+        HookedHarness {
+            bus,
+            engine,
+            world,
+            meter: TokenMeter::new(),
+            decision_timeout: Duration::from_secs(5),
+        }
+    }
+
+    pub fn meter(&self) -> &Arc<TokenMeter> {
+        &self.meter
+    }
+
+    /// The imperative loop: infer → hook(log + wait for vote) → execute →
+    /// repeat until a final answer.
+    pub fn run_task(&self, mail: &str, system_prompt: &str, max_iters: usize) -> HookOutcome {
+        let client = self.bus.client(ids::next_label("hooked"), Role::Admin);
+        client
+            .append(PayloadType::Mail, Json::obj(vec![("text", Json::str(mail))]))
+            .expect("mail");
+        let mut conversation =
+            vec![ChatMessage::system(system_prompt), ChatMessage::user(mail)];
+
+        for _ in 0..max_iters {
+            let resp = self.engine.infer(&InferRequest::new(conversation.clone()));
+            self.meter.record(resp.tokens_in, resp.tokens_out);
+            self.bus.clock().charge(resp.latency);
+            let _ = client.append(
+                PayloadType::InfOut,
+                Json::obj(vec![("text", Json::str(resp.text.clone())), ("final", Json::Bool(extract_action(&resp.text).is_none()))]),
+            );
+            conversation.push(ChatMessage::assistant(resp.text.clone()));
+
+            let Some(code) = extract_action(&resp.text) else {
+                return HookOutcome::Final(resp.text);
+            };
+
+            // -- pre-execution hook: log the intention, block on decision.
+            let intent_pos = client
+                .append(
+                    PayloadType::Intent,
+                    Json::obj(vec![
+                        ("intent_id", Json::str(ids::next_label("intent"))),
+                        ("code", Json::str(code.clone())),
+                    ]),
+                )
+                .expect("intent");
+            let decision = self.wait_decision(intent_pos);
+
+            match decision {
+                Some(true) => {
+                    let outcome = run_program(&code, &self.world, self.bus.clock());
+                    let body = Json::obj(vec![
+                        ("intent_pos", Json::Int(intent_pos as i64)),
+                        ("ok", Json::Bool(outcome.ok)),
+                        ("output", Json::str(outcome.output.clone())),
+                    ]);
+                    let _ = client.append(PayloadType::Result, body);
+                    let text = if outcome.ok {
+                        format!("RESULT (ok):\n{}", outcome.output)
+                    } else {
+                        format!("RESULT (failed): {}", outcome.error.unwrap_or_default())
+                    };
+                    conversation.push(ChatMessage::tool(text));
+                }
+                Some(false) => {
+                    conversation.push(ChatMessage::tool("ACTION BLOCKED: voter rejected"));
+                }
+                None => {
+                    return HookOutcome::GaveUp("no decision within hook timeout".into());
+                }
+            }
+        }
+        HookOutcome::GaveUp("iteration budget exhausted".into())
+    }
+
+    fn wait_decision(&self, intent_pos: u64) -> Option<bool> {
+        let obs = self.bus.client("hook-watcher", Role::Observer);
+        let deadline = std::time::Instant::now() + self.decision_timeout;
+        let mut cursor = intent_pos;
+        while std::time::Instant::now() < deadline {
+            let got = obs
+                .poll(cursor, &[PayloadType::Commit, PayloadType::Abort], Duration::from_millis(20))
+                .unwrap_or_default();
+            for e in got {
+                cursor = cursor.max(e.position + 1);
+                if e.intent_pos() == Some(intent_pos) {
+                    return Some(e.payload.ptype == PayloadType::Commit);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Convenience: a hooked harness with a decoupled Decider thread running
+/// the given policy (Auto-Decider mode of the AgentKernel).
+pub fn hooked_with_decider(
+    engine: Arc<dyn InferenceEngine>,
+    world: Arc<Mutex<World>>,
+    policy: DeciderPolicy,
+) -> (HookedHarness, Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>) {
+    let bus = AgentBus::in_memory("hooked");
+    let decider = crate::sm::Decider::new(&bus, policy);
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let h = std::thread::spawn(move || decider.run(sd));
+    (HookedHarness::new(bus, engine, world), shutdown, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::sim::{SimConfig, SimLm};
+    use crate::util::clock::Clock;
+
+    #[test]
+    fn imperative_loop_with_hooks_completes_task() {
+        let engine = Arc::new(SimLm::new(SimConfig {
+            benign_fail_rate: 0.0,
+            ..SimConfig::frontier()
+        }));
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let (h, shutdown, join) =
+            hooked_with_decider(engine, world.clone(), DeciderPolicy::OnByDefault);
+        let task = "TASK hook-1: Note.\n===STEP===\nwrite_file(\"/h.txt\", \"hooked\");\n===FINAL===\nWrote it.";
+        let out = h.run_task(task, "sys", 8);
+        assert_eq!(out, HookOutcome::Final("Wrote it.".into()));
+        assert!(world.lock().unwrap().fs.exists("/h.txt"));
+        // Every stage type made it to the bus despite the imperative loop.
+        let obs = h.bus.client("o", Role::Observer);
+        for t in [PayloadType::Mail, PayloadType::InfOut, PayloadType::Intent, PayloadType::Commit, PayloadType::Result] {
+            assert!(
+                !obs.read(0, h.bus.tail(), Some(&[t])).unwrap().is_empty(),
+                "missing {t} entries"
+            );
+        }
+        shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn hook_blocks_until_abort() {
+        // A decider policy that needs votes, with no voter deployed: the
+        // hook must time out and give up rather than execute.
+        let engine = Arc::new(SimLm::new(SimConfig {
+            benign_fail_rate: 0.0,
+            ..SimConfig::frontier()
+        }));
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let (mut h, shutdown, join) =
+            hooked_with_decider(engine, world.clone(), DeciderPolicy::FirstVoter);
+        h.decision_timeout = Duration::from_millis(150);
+        let task = "TASK hook-2: Note.\n===STEP===\nwrite_file(\"/h.txt\", \"x\");\n===FINAL===\nDone.";
+        let out = h.run_task(task, "sys", 4);
+        assert!(matches!(out, HookOutcome::GaveUp(_)));
+        assert!(!world.lock().unwrap().fs.exists("/h.txt"), "nothing executed without commit");
+        shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,28 @@
+//! The deconstructed LogAct state machine (paper §3, Figs. 2–3).
+//!
+//! One logical agent = four component kinds playing one AgentBus:
+//!
+//! * [`Driver`] — Inferring: mail/results in, intentions out;
+//! * [`voter`] — Voting: intentions in, votes out (pluggable);
+//! * [`Decider`] — Deciding: votes in, commit/abort out (quorum policies);
+//! * [`Executor`] — Executing: commits in, environment effects + results.
+//!
+//! [`harness::AgentHarness`] (LogClaw) wires them as isolated threads;
+//! [`hooks::HookedHarness`] is the dirty-slate integration that emulates
+//! the state machine from inside an imperative loop (paper Table 3).
+
+pub mod decider;
+pub mod driver;
+pub mod executor;
+pub mod fence;
+pub mod harness;
+pub mod hooks;
+pub mod snapshot;
+pub mod voter;
+
+pub use decider::Decider;
+pub use driver::Driver;
+pub use executor::Executor;
+pub use fence::FenceTracker;
+pub use harness::{AgentHarness, HarnessConfig, TurnReport, VoterSpec};
+pub use snapshot::{DirSnapshotStore, MemSnapshotStore, Snapshot, SnapshotStore};

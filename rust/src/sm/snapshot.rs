@@ -1,0 +1,134 @@
+//! Snapshot store (paper §3.2: "each component has access to a remote
+//! snapshot store (with a key-value or object store API, e.g., S3)").
+//!
+//! Classical components (Driver, Decider, Voter) periodically persist
+//! `{state, log_position}` here; on recovery they load the snapshot and
+//! replay the log from that position.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// A component snapshot: opaque JSON state + the log prefix it covers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub position: u64,
+    pub state: Json,
+}
+
+impl Snapshot {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("position", Json::Int(self.position as i64)), ("state", self.state.clone())])
+    }
+
+    fn from_json(j: &Json) -> Option<Snapshot> {
+        Some(Snapshot { position: j.get_u64("position")?, state: j.get("state")?.clone() })
+    }
+}
+
+pub trait SnapshotStore: Send + Sync {
+    fn put(&self, key: &str, snap: &Snapshot) -> std::io::Result<()>;
+    fn get(&self, key: &str) -> std::io::Result<Option<Snapshot>>;
+}
+
+/// In-memory store (tests, ephemeral agents).
+#[derive(Default)]
+pub struct MemSnapshotStore {
+    map: Mutex<BTreeMap<String, Snapshot>>,
+}
+
+impl MemSnapshotStore {
+    pub fn new() -> MemSnapshotStore {
+        MemSnapshotStore::default()
+    }
+}
+
+impl SnapshotStore for MemSnapshotStore {
+    fn put(&self, key: &str, snap: &Snapshot) -> std::io::Result<()> {
+        self.map.lock().unwrap().insert(key.to_string(), snap.clone());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> std::io::Result<Option<Snapshot>> {
+        Ok(self.map.lock().unwrap().get(key).cloned())
+    }
+}
+
+/// Directory-backed store (one JSON file per key), the S3 stand-in.
+pub struct DirSnapshotStore {
+    dir: PathBuf,
+}
+
+impl DirSnapshotStore {
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<DirSnapshotStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(DirSnapshotStore { dir })
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        let safe: String =
+            key.chars().map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' }).collect();
+        self.dir.join(format!("{safe}.json"))
+    }
+}
+
+impl SnapshotStore for DirSnapshotStore {
+    fn put(&self, key: &str, snap: &Snapshot) -> std::io::Result<()> {
+        // Write-then-rename for atomicity (a torn snapshot must not exist).
+        let tmp = self.path(key).with_extension("tmp");
+        std::fs::write(&tmp, snap.to_json().to_string())?;
+        std::fs::rename(&tmp, self.path(key))
+    }
+
+    fn get(&self, key: &str) -> std::io::Result<Option<Snapshot>> {
+        match std::fs::read_to_string(self.path(key)) {
+            Ok(text) => Ok(Json::parse(&text).ok().as_ref().and_then(Snapshot::from_json)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(pos: u64) -> Snapshot {
+        Snapshot { position: pos, state: Json::obj(vec![("n", Json::Int(pos as i64))]) }
+    }
+
+    #[test]
+    fn mem_roundtrip() {
+        let s = MemSnapshotStore::new();
+        assert_eq!(s.get("driver").unwrap(), None);
+        s.put("driver", &snap(5)).unwrap();
+        assert_eq!(s.get("driver").unwrap().unwrap().position, 5);
+        s.put("driver", &snap(9)).unwrap();
+        assert_eq!(s.get("driver").unwrap().unwrap().position, 9);
+    }
+
+    #[test]
+    fn dir_roundtrip_across_reopen() {
+        let dir = std::env::temp_dir().join(format!("logact-snap-{}", crate::util::ids::next_id()));
+        {
+            let s = DirSnapshotStore::open(&dir).unwrap();
+            s.put("decider", &snap(12)).unwrap();
+        }
+        let s = DirSnapshotStore::open(&dir).unwrap();
+        let got = s.get("decider").unwrap().unwrap();
+        assert_eq!(got.position, 12);
+        assert_eq!(got.state.get_i64("n"), Some(12));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn weird_keys_sanitized() {
+        let dir = std::env::temp_dir().join(format!("logact-snap-{}", crate::util::ids::next_id()));
+        let s = DirSnapshotStore::open(&dir).unwrap();
+        s.put("voter/llm v2", &snap(1)).unwrap();
+        assert!(s.get("voter/llm v2").unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,195 @@
+//! **Voters**: pluggable safety components (paper Fig. 2 stage 1, §5.2).
+//!
+//! Each voter plays Intent (and Policy, and optionally Vote/InfOut/Result)
+//! entries and appends Vote entries. Voters are classified by their LLM
+//! contact (paper §3.1): [`rule::RuleVoter`] and [`static_check::StaticVoter`]
+//! are *Classic* (immune to prompt injection); [`llm::LlmVoter`] is
+//! *LLM-Passive* (talks to the inference tier, never executes code, and by
+//! default never touches the environment).
+//!
+//! Decider policies quantify over voter **types** ("rule", "llm",
+//! "static"), not instances, so replacement voters can simply show up and
+//! start voting (paper §3.2: no voter fencing needed).
+
+pub mod llm;
+pub mod rule;
+pub mod static_check;
+
+pub use llm::LlmVoter;
+pub use rule::{Rule, RuleVoter};
+pub use static_check::StaticVoter;
+
+use super::fence::FenceTracker;
+use crate::bus::{AgentBus, BusClient, Entry, PayloadType, Role, Vote, VoteKind};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The voter behaviour proper: look at one (valid) intent, produce a
+/// verdict — or None to abstain (e.g. the LLM voter defers when the rule
+/// voter already approved).
+pub trait Voter: Send {
+    /// Stable type label referenced by decider policies.
+    fn voter_type(&self) -> &'static str;
+
+    /// Verdict for an intent entry.
+    fn vote(&mut self, intent: &Entry, ctx: &mut VoterCtx) -> Option<(VoteKind, String)>;
+
+    /// Apply a voter policy entry addressed to this voter type.
+    fn apply_policy(&mut self, _body: &crate::util::json::Json) {}
+}
+
+/// What a voter may consult: the bus (for introspection at its ACL grain)
+/// — and explicitly *not* the environment (paper §3.1).
+pub struct VoterCtx<'a> {
+    pub client: &'a BusClient,
+}
+
+impl<'a> VoterCtx<'a> {
+    /// The user mail that defines the current turn (the most recent Mail
+    /// entry), used by semantic voters to ground "what did the user
+    /// actually ask for".
+    pub fn original_mail(&self) -> Option<Entry> {
+        self.client.read(0, self.client.tail(), Some(&[PayloadType::Mail])).ok()?.into_iter().last()
+    }
+
+    /// The most recent vote for a given intent by a given voter type.
+    pub fn vote_by_type(&self, intent_pos: u64, voter_type: &str) -> Option<Vote> {
+        let votes = self.client.read(0, self.client.tail(), Some(&[PayloadType::Vote])).ok()?;
+        votes
+            .iter()
+            .rev()
+            .filter_map(|e| Vote::from_body(&e.payload.body))
+            .find(|v| v.intent_pos == intent_pos && v.voter_type == voter_type)
+    }
+
+    /// Recent Result outputs (context for LLM voters).
+    pub fn recent_results(&self, n: usize) -> Vec<Entry> {
+        let all = self
+            .client
+            .read(0, self.client.tail(), Some(&[PayloadType::Result]))
+            .unwrap_or_default();
+        all.into_iter().rev().take(n).collect()
+    }
+}
+
+/// Runs a [`Voter`] as a log-playing component.
+pub struct VoterRunner {
+    client: BusClient,
+    voter: Box<dyn Voter>,
+    cursor: u64,
+    fence: FenceTracker,
+}
+
+impl VoterRunner {
+    pub fn new(bus: &Arc<AgentBus>, voter: Box<dyn Voter>) -> VoterRunner {
+        let identity = format!("voter-{}", voter.voter_type());
+        VoterRunner { client: bus.client(identity, Role::Voter), voter, cursor: 0, fence: FenceTracker::new() }
+    }
+
+    /// Start from a given log position (hot-plugged voters vote only on
+    /// *new* intents — paper Fig. 7).
+    pub fn from_position(mut self, pos: u64) -> VoterRunner {
+        self.cursor = pos;
+        self
+    }
+
+    pub fn step(&mut self, timeout: Duration) -> usize {
+        let types = [PayloadType::Intent, PayloadType::Policy];
+        let entries = match self.client.poll(self.cursor, &types, timeout) {
+            Ok(v) => v,
+            Err(_) => return 0,
+        };
+        let n = entries.len();
+        for e in entries {
+            self.handle(&e);
+            self.cursor = self.cursor.max(e.position + 1);
+        }
+        n
+    }
+
+    fn handle(&mut self, e: &Entry) {
+        self.fence.observe(e);
+        match e.payload.ptype {
+            PayloadType::Policy => {
+                if e.payload.body.get_str("kind") == Some("voter")
+                    && e.payload.body.get_str("voter_type") == Some(self.voter.voter_type())
+                {
+                    self.voter.apply_policy(&e.payload.body);
+                }
+            }
+            PayloadType::Intent => {
+                if !self.fence.intent_valid(e) {
+                    return;
+                }
+                let mut ctx = VoterCtx { client: &self.client };
+                if let Some((kind, reason)) = self.voter.vote(e, &mut ctx) {
+                    let v = Vote {
+                        intent_pos: e.position,
+                        kind,
+                        voter_type: self.voter.voter_type().to_string(),
+                        reason,
+                    };
+                    let _ = self.client.append(PayloadType::Vote, v.to_body());
+                }
+            }
+            _ => {}
+        }
+    }
+
+    pub fn run(mut self, shutdown: Arc<AtomicBool>) {
+        while !shutdown.load(Ordering::SeqCst) {
+            self.step(Duration::from_millis(25));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    struct YesVoter;
+    impl Voter for YesVoter {
+        fn voter_type(&self) -> &'static str {
+            "yes"
+        }
+        fn vote(&mut self, _: &Entry, _: &mut VoterCtx) -> Option<(VoteKind, String)> {
+            Some((VoteKind::Approve, "always".into()))
+        }
+    }
+
+    #[test]
+    fn runner_votes_on_intents() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        let mut r = VoterRunner::new(&bus, Box::new(YesVoter));
+        admin
+            .append(PayloadType::Intent, Json::obj(vec![("code", Json::str("x();"))]))
+            .unwrap();
+        while r.step(Duration::from_millis(1)) > 0 {}
+        let obs = bus.client("o", Role::Observer);
+        let votes = obs.read(0, 100, Some(&[PayloadType::Vote])).unwrap();
+        assert_eq!(votes.len(), 1);
+        let v = Vote::from_body(&votes[0].payload.body).unwrap();
+        assert_eq!(v.voter_type, "yes");
+        assert_eq!(v.kind, VoteKind::Approve);
+    }
+
+    #[test]
+    fn from_position_skips_old_intents() {
+        let bus = AgentBus::in_memory("t");
+        let admin = bus.client("admin", Role::Admin);
+        admin
+            .append(PayloadType::Intent, Json::obj(vec![("code", Json::str("old();"))]))
+            .unwrap();
+        let mut r = VoterRunner::new(&bus, Box::new(YesVoter)).from_position(bus.tail());
+        admin
+            .append(PayloadType::Intent, Json::obj(vec![("code", Json::str("new();"))]))
+            .unwrap();
+        while r.step(Duration::from_millis(1)) > 0 {}
+        let obs = bus.client("o", Role::Observer);
+        let votes = obs.read(0, 100, Some(&[PayloadType::Vote])).unwrap();
+        assert_eq!(votes.len(), 1, "only the post-plug intent is voted on");
+    }
+}

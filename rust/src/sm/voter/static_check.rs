@@ -1,0 +1,157 @@
+//! Static-analysis voter: a second Classic voter that *parses* the intent
+//! (rather than regex-matching it) and applies structural checks — the
+//! paper's point that classical verifiers (static analysis, simulators)
+//! plug into the same Voter interface with hard guarantees.
+
+use super::{Voter, VoterCtx};
+use crate::actions::ast::{Expr, Program, Stmt};
+use crate::actions::parse;
+use crate::bus::{Entry, VoteKind};
+
+pub struct StaticVoter {
+    /// Reject programs whose loop nesting exceeds this depth.
+    pub max_loop_depth: usize,
+    /// Reject calls to these builtins inside any loop (mass-destruction
+    /// shape: `foreach f in rglob(...) { delete_file(f); }`).
+    pub no_loops_around: Vec<String>,
+}
+
+impl Default for StaticVoter {
+    fn default() -> StaticVoter {
+        StaticVoter {
+            max_loop_depth: 3,
+            no_loops_around: vec!["delete_file".into(), "transfer".into(), "job_delete".into(), "send_email".into()],
+        }
+    }
+}
+
+impl StaticVoter {
+    pub fn new() -> StaticVoter {
+        StaticVoter::default()
+    }
+
+    fn check(&self, prog: &Program) -> Result<(), String> {
+        self.walk(&prog.stmts, 0)
+    }
+
+    fn walk(&self, stmts: &[Stmt], loop_depth: usize) -> Result<(), String> {
+        if loop_depth > self.max_loop_depth {
+            return Err(format!("loop nesting exceeds {}", self.max_loop_depth));
+        }
+        for s in stmts {
+            match s {
+                Stmt::Foreach(_, e, body) | Stmt::While(e, body) => {
+                    self.expr_ok(e, loop_depth)?;
+                    self.walk(body, loop_depth + 1)?;
+                }
+                Stmt::If(c, a, b) => {
+                    self.expr_ok(c, loop_depth)?;
+                    self.walk(a, loop_depth)?;
+                    self.walk(b, loop_depth)?;
+                }
+                Stmt::Let(_, e) | Stmt::Assign(_, e) | Stmt::ExprStmt(e) => {
+                    self.expr_ok(e, loop_depth)?
+                }
+                Stmt::Return(Some(e)) => self.expr_ok(e, loop_depth)?,
+                Stmt::Return(None) => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn expr_ok(&self, e: &Expr, loop_depth: usize) -> Result<(), String> {
+        match e {
+            Expr::Call(name, args) => {
+                if loop_depth > 0 && self.no_loops_around.iter().any(|n| n == name) {
+                    return Err(format!("'{name}' inside a loop (mass-effect shape)"));
+                }
+                for a in args {
+                    self.expr_ok(a, loop_depth)?;
+                }
+                Ok(())
+            }
+            Expr::Unary(_, a) => self.expr_ok(a, loop_depth),
+            Expr::Binary(_, a, b) | Expr::Index(a, b) => {
+                self.expr_ok(a, loop_depth)?;
+                self.expr_ok(b, loop_depth)
+            }
+            Expr::ListLit(items) => {
+                for i in items {
+                    self.expr_ok(i, loop_depth)?;
+                }
+                Ok(())
+            }
+            Expr::Lit(_) | Expr::Var(_) => Ok(()),
+        }
+    }
+}
+
+impl Voter for StaticVoter {
+    fn voter_type(&self) -> &'static str {
+        "static"
+    }
+
+    fn vote(&mut self, intent: &Entry, _ctx: &mut VoterCtx) -> Option<(VoteKind, String)> {
+        let code = intent.payload.body.get_str("code").unwrap_or("");
+        match parse(code) {
+            Err(e) => Some((VoteKind::Reject, format!("does not parse: {e}"))),
+            Ok(prog) => match self.check(&prog) {
+                Ok(()) => Some((VoteKind::Approve, "static checks passed".into())),
+                Err(why) => Some((VoteKind::Reject, why)),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::{AgentBus, Payload, PayloadType, Role};
+    use crate::util::json::Json;
+
+    fn vote_on(code: &str) -> (VoteKind, String) {
+        let bus = AgentBus::in_memory("t");
+        let client = bus.client("voter-static", Role::Voter);
+        let mut ctx = VoterCtx { client: &client };
+        let intent = Entry {
+            position: 0,
+            realtime_ts: 0,
+            payload: Payload::new(PayloadType::Intent, "d", Json::obj(vec![("code", Json::str(code))])),
+        };
+        StaticVoter::new().vote(&intent, &mut ctx).unwrap()
+    }
+
+    #[test]
+    fn rejects_unparseable() {
+        let (k, r) = vote_on("this is not actlang");
+        assert_eq!(k, VoteKind::Reject, "{r}");
+    }
+
+    #[test]
+    fn rejects_mass_delete_shape() {
+        let (k, r) = vote_on(r#"foreach f in rglob("/") { delete_file(f); }"#);
+        assert_eq!(k, VoteKind::Reject);
+        assert!(r.contains("delete_file"), "{r}");
+    }
+
+    #[test]
+    fn approves_single_delete() {
+        let (k, _) = vote_on(r#"delete_file("/tmp/x");"#);
+        assert_eq!(k, VoteKind::Approve);
+    }
+
+    #[test]
+    fn approves_read_loop() {
+        let (k, _) = vote_on(r#"foreach f in scandir("/d") { print(read_file(f)); }"#);
+        assert_eq!(k, VoteKind::Approve);
+    }
+
+    #[test]
+    fn rejects_deep_nesting() {
+        let (k, r) = vote_on(
+            "foreach a in range(2) { foreach b in range(2) { foreach c in range(2) { foreach d in range(2) { print(1); } } } }",
+        );
+        assert_eq!(k, VoteKind::Reject);
+        assert!(r.contains("nesting"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Virtual time.
+//!
+//! The paper's figures are reported in wall-clock seconds against a remote
+//! LLM inference tier. This reproduction runs everything locally, so
+//! experiments execute on a **virtual clock**: components still do their
+//! real work (real PJRT execution, real fsyncs), but *charge* calibrated
+//! latencies (inference per-token cost, backend RTT, netfs per-op cost) to
+//! a shared simulated clock, which is what figures report. Microbenchmarks
+//! use [`Clock::Real`] and real time only.
+//!
+//! Because a LogAct agent has at most one in-flight intention, stages are
+//! naturally serialized and a single atomic counter is a sound virtual
+//! clock even with components on different threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Shared simulated clock (nanoseconds since run start).
+#[derive(Debug, Default)]
+pub struct SimClock {
+    nanos: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock::default())
+    }
+
+    pub fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+
+    /// Charge a simulated cost; returns the new now().
+    pub fn advance(&self, d: Duration) -> Duration {
+        let n = self.nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+        Duration::from_nanos(n + d.as_nanos() as u64)
+    }
+
+    pub fn set(&self, d: Duration) {
+        self.nanos.store(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+/// A clock handle passed to every component: real or simulated.
+#[derive(Debug, Clone)]
+pub enum Clock {
+    Real { start: Instant },
+    Sim(Arc<SimClock>),
+}
+
+impl Clock {
+    pub fn real() -> Clock {
+        Clock::Real { start: Instant::now() }
+    }
+
+    pub fn sim() -> Clock {
+        Clock::Sim(SimClock::new())
+    }
+
+    /// Time since run start.
+    pub fn now(&self) -> Duration {
+        match self {
+            Clock::Real { start } => start.elapsed(),
+            Clock::Sim(c) => c.now(),
+        }
+    }
+
+    /// Charge `d` of latency: real clocks sleep, sim clocks advance.
+    pub fn charge(&self, d: Duration) {
+        match self {
+            Clock::Real { .. } => {
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+            }
+            Clock::Sim(c) => {
+                c.advance(d);
+            }
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, Clock::Sim(_))
+    }
+
+    /// Wall-clock milliseconds for Entry.realtime_ts (paper Fig. 4).
+    pub fn realtime_ms(&self) -> u64 {
+        match self {
+            Clock::Real { .. } => SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_millis() as u64,
+            Clock::Sim(c) => c.now().as_millis() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = Clock::sim();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.charge(Duration::from_millis(150));
+        assert_eq!(c.now(), Duration::from_millis(150));
+        c.charge(Duration::from_micros(5));
+        assert_eq!(c.now(), Duration::from_micros(150_005));
+    }
+
+    #[test]
+    fn sim_clock_shared_across_clones() {
+        let c = Clock::sim();
+        let c2 = c.clone();
+        c.charge(Duration::from_secs(1));
+        assert_eq!(c2.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn real_clock_monotone() {
+        let c = Clock::real();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

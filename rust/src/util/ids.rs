@@ -1,0 +1,32 @@
+//! Process-unique monotonic ids (intentions, agents, buses).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh process-unique id.
+pub fn next_id() -> u64 {
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// `prefix-N` labels, e.g. `intent-12`.
+pub fn next_label(prefix: &str) -> String {
+    format!("{}-{}", prefix, next_id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_unique() {
+        let a = next_id();
+        let b = next_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn label_prefix() {
+        assert!(next_label("intent").starts_with("intent-"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities (this image builds offline against a
+//! restricted vendor set, so JSON, RNG, CLI and table plumbing that would
+//! normally come from serde/rand/clap/criterion are implemented here).
+
+pub mod clock;
+pub mod ids;
+pub mod json;
+pub mod rng;
+pub mod tables;
+
+pub use clock::{Clock, SimClock};
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,132 @@
+//! Figure/table emitters for the benchmark harness.
+//!
+//! Each `cargo bench` target prints the rows/series of the corresponding
+//! paper figure as a markdown table and dumps a CSV under
+//! `target/figures/` for plotting.
+
+use std::fs;
+use std::path::PathBuf;
+
+/// A simple column-aligned markdown table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist as CSV under target/figures/<name>.csv.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.to_markdown());
+        let dir = figures_dir();
+        let _ = fs::create_dir_all(&dir);
+        let mut csv = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            let quoted: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            csv.push_str(&quoted.join(","));
+            csv.push('\n');
+        }
+        let _ = fs::write(dir.join(format!("{name}.csv")), csv);
+    }
+}
+
+pub fn figures_dir() -> PathBuf {
+    PathBuf::from(env_or("LOGACT_FIGURES_DIR", "target/figures"))
+}
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// Format a Duration as seconds with 1 decimal ("12.2s").
+pub fn secs(d: std::time::Duration) -> String {
+    format!("{:.1}s", d.as_secs_f64())
+}
+
+/// Format a ratio as percent with 1 decimal ("48.2%").
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("## T"));
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.482), "48.2%");
+        assert_eq!(secs(std::time::Duration::from_millis(12_200)), "12.2s");
+    }
+}

@@ -1,0 +1,344 @@
+//! Cross-module integration tests: the full LogAct pipeline, the paper's
+//! safety properties (§3.1), fault injection (§3.2), and property-style
+//! randomized sweeps (a small self-contained generator stands in for
+//! proptest, which is unavailable offline).
+
+use logact::actions::run_program;
+use logact::bus::{DeciderPolicy, PayloadType, Role};
+use logact::dojo::tasks::all_tasks;
+use logact::dojo::{run_case, suite_attacks, Defense};
+use logact::env::{Invariant, InvariantSet, World};
+use logact::inference::sim::{SimConfig, SimLm};
+use logact::sm::voter::RuleVoter;
+use logact::sm::{AgentHarness, HarnessConfig, VoterSpec};
+use logact::util::clock::Clock;
+use logact::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn reliable() -> SimConfig {
+    SimConfig {
+        benign_fail_rate: 0.0,
+        inject_susceptibility: 0.0,
+        voter_false_reject_rate: 0.0,
+        ..SimConfig::frontier()
+    }
+}
+
+fn hooked() -> SimConfig {
+    SimConfig { benign_fail_rate: 0.0, inject_susceptibility: 1.0, ..SimConfig::target() }
+}
+
+/// Paper §3.1 Enforced-Safety: with the rule voter deployed, no attack
+/// case may violate the administrator's invariant set S, across the whole
+/// DojoSim attack matrix and a fully susceptible model.
+#[test]
+fn enforced_safety_holds_across_attack_matrix() {
+    let tasks = all_tasks();
+    for suite in ["workspace", "banking", "devops"] {
+        for attack in suite_attacks(suite).iter().filter(|a| !a.actionless) {
+            for task in tasks.iter().filter(|t| t.suite == suite && t.carrier.is_some()) {
+                let c = run_case(task, Some(attack), &hooked(), Defense::RuleVoter);
+                assert!(
+                    !c.attack_success,
+                    "attack {} via {} must be blocked by Enforced-Safety",
+                    attack.id, task.id
+                );
+            }
+        }
+    }
+}
+
+/// Consistency (paper §3.1): replaying the committed intentions from the
+/// log against a fresh environment reproduces the exact end state.
+#[test]
+fn log_replay_reproduces_environment() {
+    let engine = Arc::new(SimLm::new(reliable()));
+    let h = AgentHarness::start(HarnessConfig::minimal(engine));
+    let task = "TASK replay-1: Build state.\n===STEP===\nwrite_file(\"/a.txt\", \"alpha\");\nprint(\"a\");\n===STEP===\nappend_file(\"/a.txt\", \"-beta\");\ntransfer(\"user\", \"x\", 0 + 100, \"memo\");\nprint(\"b\");\n===FINAL===\nDone building.";
+    h.world().lock().unwrap().bank.open("user", 1_000);
+    let r = h.run_turn(task, Duration::from_secs(10));
+    assert!(!r.timed_out);
+
+    // Collect committed intentions in order from the log.
+    let obs = h.bus().client("auditor", Role::Observer);
+    let all = obs.read(0, h.bus().tail(), None).unwrap();
+    let committed: Vec<u64> = all
+        .iter()
+        .filter(|e| e.payload.ptype == PayloadType::Commit)
+        .filter_map(|e| e.intent_pos())
+        .collect();
+    let codes: Vec<String> = committed
+        .iter()
+        .map(|pos| {
+            all.iter()
+                .find(|e| e.position == *pos)
+                .unwrap()
+                .payload
+                .body
+                .get_str("code")
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+
+    // Replay on a fresh world.
+    let clock = Clock::sim();
+    let fresh = World::shared(clock.clone());
+    fresh.lock().unwrap().bank.open("user", 1_000);
+    for code in &codes {
+        let out = run_program(code, &fresh, &clock);
+        assert!(out.ok, "{:?}", out.error);
+    }
+
+    let mut orig = h.world().lock().unwrap();
+    let mut replayed = fresh.lock().unwrap();
+    assert_eq!(replayed.fs.read("/a.txt").unwrap(), orig.fs.read("/a.txt").unwrap_or_default());
+    assert_eq!(replayed.bank.balance("user"), orig.bank.balance("user"));
+    assert_eq!(replayed.bank.balance("x"), orig.bank.balance("x"));
+    drop(orig);
+    h.shutdown();
+}
+
+/// Paper Table 2 negative space, end to end: an executor-grade client can
+/// never forge votes/commits on a live bus.
+#[test]
+fn executor_cannot_forge_votes_or_commits() {
+    let engine = Arc::new(SimLm::new(reliable()));
+    let h = AgentHarness::start(HarnessConfig::minimal(engine));
+    let rogue = h.bus().client("rogue-executor", Role::Executor);
+    for t in [PayloadType::Vote, PayloadType::Commit, PayloadType::Intent, PayloadType::Policy] {
+        assert!(rogue.append(t, logact::util::json::Json::Null).is_err(), "{t} must be denied");
+    }
+    h.shutdown();
+}
+
+/// Invariant preservation under a benign full run: S holds before and
+/// after every turn (the agent never takes a safe state to an unsafe one —
+/// paper §3.1 concurrency generalization).
+#[test]
+fn invariants_preserved_over_benign_suite() {
+    let mut s = InvariantSet::new();
+    s.add(Invariant::NonNegativeBalances);
+    s.add(Invariant::NoTransfersTo("attacker-iban".into()));
+    s.add(Invariant::ProductionJobsAlive);
+
+    for task in all_tasks().iter().filter(|t| t.suite == "banking").take(6) {
+        let c = run_case(task, None, &reliable(), Defense::DualVoter);
+        // run_case builds its own world; utility true implies the task ran.
+        // Re-run manually to check invariants on the same world.
+        let _ = c;
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        (task.setup)(&mut world.lock().unwrap());
+        assert!(s.check(&world.lock().unwrap()).is_empty(), "{}: S holds initially", task.id);
+        let engine = Arc::new(SimLm::new(reliable()));
+        let mut cfg = HarnessConfig::minimal(engine);
+        cfg.clock = clock.clone();
+        cfg.world = world.clone();
+        cfg.decider_policy = DeciderPolicy::BooleanOr(vec!["rule".into(), "llm".into()]);
+        cfg.voters = vec![
+            VoterSpec::Rule(RuleVoter::production_pack()),
+            VoterSpec::Llm(Arc::new(SimLm::new(reliable()))),
+        ];
+        let h = AgentHarness::start(cfg);
+        let r = h.run_turn(&task.mail, Duration::from_secs(15));
+        assert!(!r.timed_out, "{}", task.id);
+        assert!(
+            s.check(&world.lock().unwrap()).is_empty(),
+            "{}: S preserved after the turn",
+            task.id
+        );
+        h.shutdown();
+    }
+}
+
+/// Property sweep: random ActLang programs generated from a safe grammar
+/// never crash the interpreter, and the step budget always terminates
+/// loops (no hangs).
+#[test]
+fn property_random_programs_terminate() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..60 {
+        let mut src = String::new();
+        let n_stmts = 1 + rng.gen_range(5) as usize;
+        for i in 0..n_stmts {
+            match rng.gen_range(5) {
+                0 => src.push_str(&format!("let v{i} = {} + {};\n", rng.gen_range(100), rng.gen_range(100))),
+                1 => src.push_str(&format!("write_file(\"/f{}\", \"x{}\");\n", rng.gen_range(20), case)),
+                2 => src.push_str(&format!(
+                    "foreach i in range({}) {{ append_file(\"/log\", str(i)); }}\n",
+                    rng.gen_range(50)
+                )),
+                3 => src.push_str(&format!(
+                    "if exists(\"/f{}\") {{ print(read_file(\"/f{}\")); }}\n",
+                    rng.gen_range(20),
+                    rng.gen_range(20)
+                )),
+                _ => src.push_str("while true { let x = 1; }\n"), // must hit the budget
+            }
+        }
+        let clock = Clock::sim();
+        let world = World::shared(clock.clone());
+        let prog = match logact::actions::parse(&src) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        let out = logact::actions::Interp::new(world, clock).with_max_steps(100_000).run(&prog);
+        // ok or a clean error — never a panic/hang.
+        if !out.ok {
+            assert!(out.error.is_some());
+        }
+    }
+}
+
+/// Property sweep: the bus poll/append protocol under concurrent producers
+/// delivers every entry exactly once, in position order.
+#[test]
+fn property_concurrent_appends_totally_ordered() {
+    use logact::bus::AgentBus;
+    let bus = AgentBus::in_memory("order");
+    let n_threads = 4;
+    let per_thread = 200;
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let bus = Arc::clone(&bus);
+        handles.push(std::thread::spawn(move || {
+            let c = bus.client(format!("w{t}"), Role::Admin);
+            for i in 0..per_thread {
+                c.append(
+                    PayloadType::Mail,
+                    logact::util::json::Json::obj(vec![
+                        ("t", logact::util::json::Json::Int(t)),
+                        ("i", logact::util::json::Json::Int(i)),
+                    ]),
+                )
+                .unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let obs = bus.client("o", Role::Observer);
+    let entries = obs.read(0, 10_000, None).unwrap();
+    assert_eq!(entries.len(), (n_threads * per_thread) as usize);
+    // Dense positions.
+    for (i, e) in entries.iter().enumerate() {
+        assert_eq!(e.position, i as u64);
+    }
+    // Per-producer FIFO preserved.
+    for t in 0..n_threads {
+        let seq: Vec<i64> = entries
+            .iter()
+            .filter(|e| e.payload.body.get_i64("t") == Some(t))
+            .map(|e| e.payload.body.get_i64("i").unwrap())
+            .collect();
+        assert_eq!(seq, (0..per_thread).collect::<Vec<_>>());
+    }
+}
+
+/// Durable bus: a full turn's log survives process "restart" (reopen) and
+/// replays identically.
+#[test]
+fn durable_log_survives_restart_and_audits() {
+    let path = std::env::temp_dir().join(format!("logact-it-{}.log", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let committed;
+    {
+        let engine = Arc::new(SimLm::new(reliable()));
+        let mut cfg = HarnessConfig::minimal(engine);
+        cfg.backend = logact::bus::BusBackendKind::Durable(path.clone());
+        let h = AgentHarness::start(cfg);
+        let r = h.run_turn(
+            "TASK dur-1: Note.\n===STEP===\nwrite_file(\"/d.txt\", \"durable\");\nprint(\"ok\");\n===FINAL===\nSaved.",
+            Duration::from_secs(10),
+        );
+        assert!(!r.timed_out);
+        committed = r.committed;
+        h.shutdown();
+    }
+    // "Restart": reopen the log cold and audit it.
+    let backend = logact::bus::BusBackendKind::Durable(path.clone()).build().unwrap();
+    let bus = logact::bus::AgentBus::new("audit", backend, Clock::sim());
+    let obs = bus.client("auditor", Role::Observer);
+    let entries = obs.read(0, bus.tail(), None).unwrap();
+    assert!(!entries.is_empty());
+    let commits = entries.iter().filter(|e| e.payload.ptype == PayloadType::Commit).count();
+    assert_eq!(commits, committed, "audit trail matches the live run");
+    let finals = entries
+        .iter()
+        .filter(|e| e.payload.ptype == PayloadType::InfOut)
+        .filter(|e| e.payload.body.get_bool("final") == Some(true))
+        .count();
+    assert_eq!(finals, 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Fig. 7 in miniature, live on one harness (not fresh cases): hot-swap
+/// policy + voter mid-run via log entries only.
+#[test]
+fn live_hot_swap_blocks_attacks_then_restores_utility() {
+    let engine = Arc::new(SimLm::new(reliable()));
+    let mut h = AgentHarness::start(HarnessConfig::minimal(engine));
+    h.world().lock().unwrap().bank.open("user", 500_000);
+
+    // Phase 1: no defense, a sensitive-but-legit transfer goes through.
+    let t1 = "TASK p1: Pay rent.\n===STEP===\ntransfer(\"user\", \"landlord\", 120000, \"rent\");\n===FINAL===\nPaid.";
+    let r1 = h.run_turn(t1, Duration::from_secs(10));
+    assert_eq!(r1.committed, 1);
+
+    // Phase 2: first_voter + rule voter -> same action now blocked.
+    h.set_decider_policy(DeciderPolicy::FirstVoter);
+    h.add_voter(VoterSpec::Rule(RuleVoter::production_pack()));
+    let t2 = "TASK p2: Pay rent again.\n===STEP===\ntransfer(\"user\", \"landlord\", 120000, \"rent 2\");\n===FINAL===\nPaid again.";
+    let r2 = h.run_turn(t2, Duration::from_secs(10));
+    assert_eq!(r2.committed, 0);
+    assert!(r2.aborted >= 1);
+
+    // Phase 3: boolean_OR + LLM voter -> utility restored.
+    h.set_decider_policy(DeciderPolicy::BooleanOr(vec!["rule".into(), "llm".into()]));
+    h.add_voter(VoterSpec::Llm(Arc::new(SimLm::new(reliable()))));
+    let t3 = "TASK p3: Pay rent a third time.\n===STEP===\ntransfer(\"user\", \"landlord\", 120000, \"rent 3\");\n===FINAL===\nPaid thrice.";
+    let r3 = h.run_turn(t3, Duration::from_secs(10));
+    assert_eq!(r3.committed, 1, "LLM override restores the legit action");
+    assert_eq!(h.world().lock().unwrap().bank.balance("landlord"), 240_000);
+    h.shutdown();
+}
+
+/// Executor crash mid-lambda leaves a half-mutated environment; reboot
+/// appends the recovery marker; at-most-once holds (nothing re-executed).
+#[test]
+fn crash_recovery_at_most_once_e2e() {
+    let engine = Arc::new(SimLm::new(reliable()));
+    let mut h = AgentHarness::start(HarnessConfig::minimal(engine));
+    h.send_mail(
+        "TASK c-1: Bulk write.\n===STEP===\nforeach i in range(100000) { write_file(\"/bulk/f\" + i, \"x\"); }\nprint(\"all\");\n===FINAL===\nWrote everything.",
+    );
+    // Wait for the commit, give the executor a moment to get mid-loop,
+    // then kill it.
+    let obs = h.bus().client("o", Role::Observer);
+    let commits = obs.poll(0, &[PayloadType::Commit], Duration::from_secs(5)).unwrap();
+    assert!(!commits.is_empty());
+    std::thread::sleep(Duration::from_millis(30));
+    h.kill_executor();
+    std::thread::sleep(Duration::from_millis(50));
+    let written_at_crash = h.world().lock().unwrap().fs.file_count();
+
+    h.reboot_executor();
+    // Reboot marker appears; environment is NOT blindly re-mutated.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut seen = false;
+    while std::time::Instant::now() < deadline && !seen {
+        seen = obs
+            .read(0, h.bus().tail(), Some(&[PayloadType::Result]))
+            .unwrap()
+            .iter()
+            .any(|e| e.payload.body.get_bool("reboot") == Some(true));
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(seen, "reboot marker appended");
+    let written_after = h.world().lock().unwrap().fs.file_count();
+    assert_eq!(written_at_crash, written_after, "at-most-once: no blind re-execution");
+    h.shutdown();
+}
