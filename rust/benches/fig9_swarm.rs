@@ -5,12 +5,20 @@
 //! extra agent introspects every worker's bus and mails consolidated infra
 //! fixes + claim summaries. (Paper: +17% work, −41% tokens.)
 
-use logact::swarm::run_fig9;
+use logact::swarm::{run_fig9, run_swarm, SwarmConfig};
 use logact::util::tables::{pct, Table};
 
 fn main() {
     println!("=== Fig. 9: swarm with and without an introspecting supervisor ===");
     let (base, sup) = run_fig9(2026);
+    // Multi-tenant variant: the whole swarm over ONE shared log
+    // (BusRegistry namespaces) — outcome-identical, realistic deployment.
+    let sup_shared = run_swarm(&SwarmConfig {
+        supervisor: true,
+        shared_log: true,
+        seed: 2026,
+        ..SwarmConfig::default()
+    });
 
     let mut t = Table::new(
         "Fig. 9 — 6-agent swarm, fixed time budget",
@@ -21,9 +29,10 @@ fn main() {
             "discovery rounds",
             "total tokens",
             "supervisor tokens",
+            "shared-log records",
         ],
     );
-    for o in [&base, &sup] {
+    for o in [&base, &sup, &sup_shared] {
         t.row(&[
             o.label.clone(),
             format!("{}", o.files_fixed),
@@ -31,9 +40,15 @@ fn main() {
             format!("{}", o.discovery_rounds),
             format!("{}", o.total_tokens),
             format!("{}", o.supervisor_tokens),
+            o.shared_log_records.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
         ]);
     }
     t.emit("fig9_swarm");
+    assert_eq!(
+        (sup_shared.files_fixed, sup_shared.total_tokens),
+        (sup.files_fixed, sup.total_tokens),
+        "shared-log swarm must be outcome-identical"
+    );
 
     let work_gain = sup.files_fixed as f64 / base.files_fixed as f64 - 1.0;
     let token_cut = 1.0 - sup.total_tokens as f64 / base.total_tokens as f64;

@@ -393,13 +393,11 @@ impl Interp {
             // -- checksums -----------------------------------------------
             "checksum" => {
                 arity(1)?;
-                Ok(Value::Str(format!("{:08x}", crc32fast::hash(s(&args[0]).as_bytes()))))
+                Ok(Value::Str(format!("{:08x}", crate::util::crc32::hash(s(&args[0]).as_bytes()))))
             }
             "sha256" => {
                 arity(1)?;
-                use sha2::{Digest, Sha256};
-                let d = Sha256::digest(s(&args[0]).as_bytes());
-                Ok(Value::Str(format!("{:x}", d)))
+                Ok(Value::Str(crate::util::sha256::hex_digest(s(&args[0]).as_bytes())))
             }
             // -- email ---------------------------------------------------
             "send_email" => {

@@ -18,6 +18,32 @@ pub trait LogBackend: Send + Sync {
     /// Durably append a record; returns its position.
     fn append(&self, bytes: &[u8]) -> std::io::Result<u64>;
 
+    /// Append `records` contiguously with a **single durability point**
+    /// (group commit): either the whole suffix of fully-written records
+    /// survives a crash, or the torn tail is truncated on reopen — there
+    /// is never a gap. Returns the position of the first record; the batch
+    /// occupies `[first, first + records.len())`.
+    ///
+    /// The default implementation appends record-by-record (one
+    /// durability point each), so backends without a cheaper batch path
+    /// stay correct.
+    fn append_batch(&self, records: &[Vec<u8>]) -> std::io::Result<u64> {
+        let mut first = self.tail();
+        for (i, rec) in records.iter().enumerate() {
+            let pos = self.append(rec)?;
+            if i == 0 {
+                first = pos;
+            }
+        }
+        Ok(first)
+    }
+
+    /// Make all previously-appended records durable (no-op for backends
+    /// that are always durable or never durable).
+    fn flush(&self) -> std::io::Result<()> {
+        Ok(())
+    }
+
     /// Read records in `[start, end)` (clamped to the tail).
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>>;
 

@@ -30,6 +30,18 @@ impl LogBackend for MemBackend {
         Ok(pos)
     }
 
+    fn append_batch(&self, records: &[Vec<u8>]) -> std::io::Result<u64> {
+        // One lock acquisition for the whole batch.
+        let mut g = self.inner.write().unwrap();
+        let first = g.records.len() as u64;
+        for rec in records {
+            g.records.push(rec.clone());
+            g.stats.appended_bytes += rec.len() as u64;
+        }
+        g.stats.appended_records += records.len() as u64;
+        Ok(first)
+    }
+
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
         let mut g = self.inner.write().unwrap();
         let tail = g.records.len() as u64;
@@ -68,6 +80,18 @@ mod tests {
         assert_eq!(r, vec![(0, b"a".to_vec()), (1, b"bb".to_vec())]);
         assert_eq!(b.read(1, 2).unwrap().len(), 1);
         assert_eq!(b.read(5, 9).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn batch_append_single_lock() {
+        let b = MemBackend::new();
+        b.append(b"x").unwrap();
+        assert_eq!(b.append_batch(&[b"y".to_vec(), b"z".to_vec()]).unwrap(), 1);
+        assert_eq!(b.tail(), 3);
+        assert_eq!(b.read(1, 3).unwrap(), vec![(1, b"y".to_vec()), (2, b"z".to_vec())]);
+        let s = b.stats();
+        assert_eq!(s.appended_records, 3);
+        assert_eq!(s.appended_bytes, 3);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! Three backends mirror the paper's §4.1: in-memory (no durability),
 //! durable file (SQLite stand-in: survives process reboot), and a
 //! disaggregated remote KV with injected RTT (DynamoDB/AnonDB stand-in).
+//! All three support **group commit** ([`LogBackend::append_batch`]: one
+//! durability point per batch), and [`registry::BusRegistry`] multiplexes
+//! many logical agent buses onto one shared backend with per-agent
+//! namespacing (multi-tenant deployments, swarm experiments).
 
 pub mod acl;
 pub mod backend;
@@ -20,6 +24,7 @@ pub mod bus;
 pub mod durable;
 pub mod entry;
 pub mod mem;
+pub mod registry;
 pub mod remote;
 
 pub use acl::{AclError, Grant, Role};
@@ -28,4 +33,5 @@ pub use bus::{AgentBus, BusBackendKind, BusClient, BusError};
 pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
 pub use mem::MemBackend;
+pub use registry::{BusRegistry, NamespacedBackend};
 pub use remote::{LatencyProfile, RemoteBackend};

@@ -72,6 +72,13 @@ impl LogBackend for RemoteBackend {
         self.store.append(bytes)
     }
 
+    fn append_batch(&self, records: &[Vec<u8>]) -> std::io::Result<u64> {
+        // A batched conditional-put (DynamoDB TransactWriteItems-style):
+        // the whole batch rides one round trip, which is why the bus
+        // charges `simulated_append_latency` once per batch.
+        self.store.append_batch(records)
+    }
+
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
         self.store.read(start, end)
     }

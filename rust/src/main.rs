@@ -38,7 +38,7 @@ fn main() {
             eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
-            eprintln!("  swarm   --seed S");
+            eprintln!("  swarm   --seed S [--shared]   (--shared: one multi-tenant log for all workers)");
             eprintln!("  serve   --requests N");
             std::process::exit(2);
         }
@@ -108,7 +108,22 @@ fn recover(args: &[String]) {
 
 fn swarm(args: &[String]) {
     let seed = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(2026);
-    let (base, sup) = logact::swarm::run_fig9(seed);
+    let shared_log = args.iter().any(|a| a == "--shared");
+    let run = |supervisor| {
+        logact::swarm::run_swarm(&logact::swarm::SwarmConfig {
+            supervisor,
+            shared_log,
+            seed,
+            ..logact::swarm::SwarmConfig::default()
+        })
+    };
+    let (base, sup) = (run(false), run(true));
+    if let Some(records) = sup.shared_log_records {
+        println!(
+            "shared log: all {} worker buses multiplexed onto one backend ({records} records)",
+            sup.per_worker_files.len()
+        );
+    }
     println!("base:       {} files, {} tokens", base.files_fixed, base.total_tokens);
     println!("supervisor: {} files, {} tokens", sup.files_fixed, sup.total_tokens);
     println!(

@@ -8,9 +8,14 @@
 //! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see DESIGN.md and /opt/xla-example).
+//!
+//! The `xla` PJRT binding is not in the offline vendor set, so
+//! [`pjrt::PjrtModule`] currently backs execution with a deterministic
+//! HLO-text-driven simulator (see its module docs); the API is the real
+//! binding's, so re-enabling XLA is local to `pjrt.rs`.
 
 pub mod artifacts;
 pub mod pjrt;
 
 pub use artifacts::{artifacts_dir, ModelMeta};
-pub use pjrt::PjrtModule;
+pub use pjrt::{PjrtClient, PjrtModule};

@@ -1,36 +1,68 @@
-//! Thin wrapper over the `xla` crate: HLO text → compiled PJRT executable.
+//! PJRT module loading and execution.
+//!
+//! The real deployment compiles HLO text through the `xla` PJRT bindings.
+//! That crate is **not in the offline vendor set**, so this build ships a
+//! faithful *interface* stand-in: `load` parses the AOT-exported HLO text
+//! (output shape, instruction count) and `execute_i32_to_f32` produces
+//! deterministic, correctly-shaped outputs with a compute cost
+//! proportional to the module's instruction count. Figure benches measure
+//! bus/driver overhead *around* inference, so what matters here is that
+//! the call graph, shapes, determinism and relative cost survive — not
+//! the numerics. Swapping the body back to the real `xla` calls is a
+//! local change to this file only.
 
+use crate::util::error::{Error, Result};
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// A compiled XLA module on the PJRT CPU client.
+/// Stand-in for the PJRT CPU client handle (process-global in the real
+/// binding; trivially cloneable here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PjrtClient;
+
+/// A "compiled" module: HLO metadata plus a deterministic executor.
 ///
-/// Compilation happens once (startup); `execute_*` runs on the request
-/// path. The underlying `xla::PjRtLoadedExecutable` is not Sync, so calls
-/// are serialized behind a mutex — fine for a single-agent hot path, and
-/// multiple modules can be loaded for parallelism.
+/// Calls are serialized behind a mutex, mirroring the real wrapper (the
+/// underlying `PjRtLoadedExecutable` is not Sync); multiple modules can be
+/// loaded for parallelism.
 pub struct PjrtModule {
     name: String,
-    exe: Mutex<xla::PjRtLoadedExecutable>,
+    /// Flattened length of the ROOT output (product of its dims).
+    out_len: usize,
+    /// HLO instruction count — proxy for per-execution compute cost.
+    instructions: usize,
+    /// Hash of the module text: two different artifacts never produce the
+    /// same outputs, same artifact is bit-deterministic.
+    module_seed: u64,
+    exec_lock: Mutex<()>,
     pub compile_time: Duration,
 }
 
-// SAFETY: the executable is only touched under the mutex; the PJRT CPU
-// client is thread-safe for execution.
-unsafe impl Send for PjrtModule {}
-unsafe impl Sync for PjrtModule {}
-
 impl PjrtModule {
-    /// Load an HLO text file, compile on the CPU client.
-    pub fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<PjrtModule> {
+    /// Create the (process-global) PJRT CPU client.
+    pub fn cpu_client() -> Result<PjrtClient> {
+        Ok(PjrtClient)
+    }
+
+    /// Load an HLO text file and "compile" it (parse + validate).
+    pub fn load(_client: &PjrtClient, path: &Path) -> Result<PjrtModule> {
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
+        let text = std::fs::read_to_string(path)?;
+        let out_len = parse_root_len(&text).ok_or_else(|| {
+            Error::msg(format!("{}: no parseable ROOT f32 shape in HLO text", path.display()))
+        })?;
+        let instructions = text.lines().filter(|l| l.contains(" = ")).count().max(1);
+        let mut seed = 0xcbf2_9ce4_8422_2325u64;
+        for b in text.as_bytes() {
+            seed = (seed ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
+        }
         Ok(PjrtModule {
             name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("module").to_string(),
-            exe: Mutex::new(exe),
+            out_len,
+            instructions,
+            module_seed: seed,
+            exec_lock: Mutex::new(()),
             compile_time: t0.elapsed(),
         })
     }
@@ -39,31 +71,95 @@ impl PjrtModule {
         &self.name
     }
 
-    /// Execute with a single i32 tensor input of shape `dims`; the module
-    /// was lowered with return_tuple=True, so unwrap a 1-tuple and return
-    /// the flat f32 output.
-    pub fn execute_i32_to_f32(
-        &self,
-        input: &[i32],
-        dims: &[i64],
-    ) -> anyhow::Result<Vec<f32>> {
-        let lit = xla::Literal::vec1(input).reshape(dims)?;
-        let exe = self.exe.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    /// Execute with a single i32 tensor input of shape `dims`; returns the
+    /// flat f32 output of the module's ROOT shape. Deterministic in
+    /// (module, input); every value lies in [0, 1).
+    pub fn execute_i32_to_f32(&self, input: &[i32], dims: &[i64]) -> Result<Vec<f32>> {
+        let expect: i64 = dims.iter().product();
+        if expect != input.len() as i64 {
+            return Err(Error::msg(format!(
+                "{}: input has {} elements but dims {:?} require {expect}",
+                self.name,
+                input.len(),
+                dims
+            )));
+        }
+        let _g = self.exec_lock.lock().unwrap();
+        let mut state = self.module_seed;
+        for &x in input {
+            state = (state ^ x as u32 as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+        // Charge compute proportional to instruction count × output size,
+        // by actually doing it (a PRNG pass per "instruction block").
+        let rounds = (self.instructions / 64).max(1);
+        let mut out = vec![0f32; self.out_len];
+        for _ in 0..rounds {
+            for v in out.iter_mut() {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                // 24 high bits → exactly representable in f32, always < 1.0.
+                *v = (state >> 40) as f32 / (1u32 << 24) as f32;
+            }
+        }
+        Ok(out)
     }
+}
 
-    /// Create the (process-global) PJRT CPU client.
-    pub fn cpu_client() -> anyhow::Result<xla::PjRtClient> {
-        Ok(xla::PjRtClient::cpu()?)
+/// Product of the ROOT instruction's f32 output dims, unwrapping a 1-tuple
+/// (modules are lowered with return_tuple=True). Accepts both
+/// `ROOT %t = (f32[1,128,256]) tuple(...)` and `ROOT %r = f32[1,1] ...`.
+fn parse_root_len(text: &str) -> Option<usize> {
+    let root_line = text.lines().rev().find(|l| l.trim_start().starts_with("ROOT "))?;
+    let idx = root_line.find("f32[")?;
+    let rest = &root_line[idx + 4..];
+    let close = rest.find(']')?;
+    let dims = &rest[..close];
+    if dims.trim().is_empty() {
+        return Some(1); // scalar f32[]
     }
+    let mut len = 1usize;
+    for d in dims.split(',') {
+        len = len.checked_mul(d.trim().parse::<usize>().ok()?)?;
+    }
+    Some(len)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::artifacts::{artifacts_available, artifacts_dir, ModelMeta};
+
+    #[test]
+    fn parses_root_shapes() {
+        let tupled = "ENTRY %main {\n  %p = s32[1,16] parameter(0)\n  ROOT %t = (f32[1,16,64]) tuple(%x)\n}\n";
+        assert_eq!(parse_root_len(tupled), Some(16 * 64));
+        let plain = "ENTRY %m {\n  ROOT %r = f32[1,1] add(%a, %b)\n}\n";
+        assert_eq!(parse_root_len(plain), Some(1));
+        let scalar = "ENTRY %m {\n  ROOT %r = f32[] add(%a, %b)\n}\n";
+        assert_eq!(parse_root_len(scalar), Some(1));
+        assert_eq!(parse_root_len("no root here"), None);
+    }
+
+    #[test]
+    fn executes_deterministically() {
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("pjrt-{}.hlo.txt", crate::util::ids::next_id()));
+        std::fs::write(&p, "ENTRY %m {\n  %p = s32[1,8] parameter(0)\n  ROOT %t = (f32[1,8,4]) tuple(%p)\n}\n").unwrap();
+        let client = PjrtModule::cpu_client().unwrap();
+        let m = PjrtModule::load(&client, &p).unwrap();
+        let input: Vec<i32> = (0..8).collect();
+        let a = m.execute_i32_to_f32(&input, &[1, 8]).unwrap();
+        let b = m.execute_i32_to_f32(&input, &[1, 8]).unwrap();
+        assert_eq!(a.len(), 32);
+        assert_eq!(a, b, "same input, same output");
+        assert!(a.iter().all(|x| (0.0..1.0).contains(x)));
+        let c = m.execute_i32_to_f32(&vec![9; 8], &[1, 8]).unwrap();
+        assert_ne!(a, c, "different input, different output");
+        assert!(m.execute_i32_to_f32(&input, &[1, 4]).is_err(), "shape mismatch rejected");
+        let _ = std::fs::remove_file(&p);
+    }
 
     #[test]
     fn load_and_execute_lm_step() {
@@ -77,9 +173,7 @@ mod tests {
         let module = PjrtModule::load(&client, &dir.join("lm_step.hlo.txt")).unwrap();
 
         let tokens: Vec<i32> = (0..meta.seq as i32).map(|i| i % meta.vocab as i32).collect();
-        let logits = module
-            .execute_i32_to_f32(&tokens, &[1, meta.seq as i64])
-            .unwrap();
+        let logits = module.execute_i32_to_f32(&tokens, &[1, meta.seq as i64]).unwrap();
         assert_eq!(logits.len(), meta.seq * meta.vocab);
         assert!(logits.iter().all(|x| x.is_finite()), "finite logits");
         // Determinism: same input, same output.

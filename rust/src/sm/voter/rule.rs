@@ -11,7 +11,7 @@
 use super::{Voter, VoterCtx};
 use crate::bus::{Entry, VoteKind};
 use crate::util::json::Json;
-use regex::Regex;
+use crate::util::regex_lite::Regex;
 
 /// One denylist rule with an optional allowlist exception.
 #[derive(Debug, Clone)]

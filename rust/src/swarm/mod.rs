@@ -2,7 +2,13 @@
 //!
 //! A coordinator deploys six worker agents on a large type-annotation task
 //! over a synthetic Python codebase. Every worker is a LogAct agent with
-//! its own AgentBus; coordination happens *only* via mail entries.
+//! its own AgentBus; coordination happens *only* via mail entries. The
+//! worker buses are either private in-memory logs (the paper's setup) or,
+//! with [`SwarmConfig::shared_log`], namespaces of **one** shared backend
+//! via [`BusRegistry`] — the realistic multi-tenant deployment, where the
+//! whole swarm rides a single durable log. Outcomes are identical by
+//! construction (namespace positions are dense and isolated), which the
+//! tests assert.
 //!
 //! * **Base** configuration: workers broadcast claim mail to each other,
 //!   but gossip is unreliable — the paper observes that "agents typically
@@ -18,7 +24,7 @@
 //!   and stop double-annotating files: more work, fewer tokens (paper:
 //!   +17% files, −41% tokens).
 
-use crate::bus::{AgentBus, PayloadType, Role};
+use crate::bus::{AgentBus, BusRegistry, MemBackend, PayloadType, Role};
 use crate::metrics::TokenMeter;
 use crate::util::clock::Clock;
 use crate::util::json::Json;
@@ -28,7 +34,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Cost model for worker inference rounds (calibrated so the Fig. 9
-/// aggregate ratios land near the paper's; see EXPERIMENTS.md).
+/// aggregate ratios land near the paper's; see EXPERIMENTS.md at the
+/// repository root for the calibration notes).
 #[derive(Debug, Clone, Copy)]
 pub struct SwarmCosts {
     /// Distinct infra problems every worker must have solved (or been
@@ -68,6 +75,10 @@ pub struct SwarmConfig {
     /// Sim-time budget per worker.
     pub budget: Duration,
     pub supervisor: bool,
+    /// Run every worker bus as a namespace of one shared backend (a
+    /// [`BusRegistry`] over a single in-memory log) instead of private
+    /// per-worker logs. Multi-tenant realism; identical outcomes.
+    pub shared_log: bool,
     pub seed: u64,
     pub costs: SwarmCosts,
 }
@@ -79,6 +90,7 @@ impl Default for SwarmConfig {
             files: 900,
             budget: Duration::from_secs(600),
             supervisor: false,
+            shared_log: false,
             seed: 42,
             costs: SwarmCosts::default(),
         }
@@ -97,6 +109,8 @@ pub struct SwarmOutcome {
     /// Total discovery rounds spent across the swarm.
     pub discovery_rounds: usize,
     pub per_worker_files: Vec<usize>,
+    /// Records on the swarm-wide shared log (None for private buses).
+    pub shared_log_records: Option<u64>,
 }
 
 struct Repo {
@@ -122,18 +136,21 @@ struct Worker {
 }
 
 impl Worker {
-    fn new(id: usize, seed: u64, n_problems: usize) -> Worker {
+    fn new(id: usize, seed: u64, n_problems: usize, registry: Option<&BusRegistry>) -> Worker {
         let clock = Clock::sim();
         let mut rng = Rng::new(seed ^ (id as u64 + 1).wrapping_mul(0x9E3779B9));
         let mut problem_order: Vec<usize> = (0..n_problems).collect();
         rng.shuffle(&mut problem_order);
+        let name = format!("swarm-worker-{id}");
+        let bus = match registry {
+            // Multi-tenant: this worker's bus is a namespace of the
+            // swarm-wide shared log.
+            Some(reg) => reg.bus(&name, clock.clone()).expect("register worker namespace"),
+            None => AgentBus::new(name, Arc::new(MemBackend::new()), clock.clone()),
+        };
         Worker {
             id,
-            bus: AgentBus::new(
-                format!("swarm-worker-{id}"),
-                Arc::new(crate::bus::MemBackend::new()),
-                clock.clone(),
-            ),
+            bus,
             clock,
             meter: TokenMeter::new(),
             solved: BTreeSet::new(),
@@ -230,8 +247,14 @@ impl Worker {
 /// Run the swarm experiment in one configuration.
 pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
     let repo = Mutex::new(Repo { annotated: BTreeSet::new(), annotations_done: 0 });
-    let mut workers: Vec<Worker> =
-        (0..cfg.workers).map(|i| Worker::new(i, cfg.seed, cfg.costs.infra_problems)).collect();
+    let registry = if cfg.shared_log {
+        Some(BusRegistry::new(Arc::new(MemBackend::new())))
+    } else {
+        None
+    };
+    let mut workers: Vec<Worker> = (0..cfg.workers)
+        .map(|i| Worker::new(i, cfg.seed, cfg.costs.infra_problems, registry.as_ref()))
+        .collect();
     let supervisor_meter = TokenMeter::new();
     let mut supervisor_fixes: BTreeSet<usize> = BTreeSet::new();
     let mut supervisor_claims: BTreeSet<usize> = BTreeSet::new();
@@ -318,14 +341,19 @@ pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
     let repo = repo.into_inner().unwrap();
     let worker_tokens: u64 = workers.iter().map(|w| w.meter.total()).sum();
     let supervisor_tokens = supervisor_meter.total();
+    let mut label = if cfg.supervisor { "supervisor".to_string() } else { "base".to_string() };
+    if cfg.shared_log {
+        label.push_str("+shared-log");
+    }
     SwarmOutcome {
-        label: if cfg.supervisor { "supervisor".into() } else { "base".into() },
+        label,
         files_fixed: repo.annotated.len(),
         duplicate_work: repo.annotations_done - repo.annotated.len(),
         total_tokens: worker_tokens + supervisor_tokens,
         supervisor_tokens,
         discovery_rounds: workers.iter().map(|w| w.discovery_rounds).sum(),
         per_worker_files: workers.iter().map(|w| w.fixed).collect(),
+        shared_log_records: registry.as_ref().map(|r| r.shared_tail()),
     }
 }
 
@@ -383,5 +411,31 @@ mod tests {
         let (base, _) = run_fig9(5);
         assert_eq!(base.per_worker_files.len(), 6);
         assert_eq!(base.per_worker_files.iter().sum::<usize>(), base.files_fixed);
+    }
+
+    #[test]
+    fn shared_log_swarm_matches_private_buses() {
+        // The multi-tenant registry only changes *where* entries live;
+        // every namespace-local position, cursor and outcome must be
+        // byte-identical to private per-worker buses.
+        for supervisor in [false, true] {
+            let cfg = |shared_log| SwarmConfig {
+                supervisor,
+                shared_log,
+                seed: 13,
+                ..SwarmConfig::default()
+            };
+            let private = run_swarm(&cfg(false));
+            let shared = run_swarm(&cfg(true));
+            assert_eq!(shared.files_fixed, private.files_fixed);
+            assert_eq!(shared.total_tokens, private.total_tokens);
+            assert_eq!(shared.duplicate_work, private.duplicate_work);
+            assert_eq!(shared.discovery_rounds, private.discovery_rounds);
+            assert_eq!(shared.per_worker_files, private.per_worker_files);
+            assert_eq!(private.shared_log_records, None);
+            let records = shared.shared_log_records.expect("shared run reports log size");
+            assert!(records > 0, "the whole swarm rode one log");
+            assert!(shared.label.ends_with("+shared-log"));
+        }
     }
 }

@@ -1,0 +1,58 @@
+//! Minimal string error for the runtime/inference layers (`anyhow` is not
+//! in the offline vendor set). Carries a message, converts from the error
+//! types those layers actually produce, and works with `?`.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(e: String) -> Error {
+        Error(e)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converts_and_displays() {
+        fn io_then_msg() -> Result<()> {
+            std::fs::metadata("/definitely/not/a/path/xyz")?;
+            Ok(())
+        }
+        let e = io_then_msg().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        assert_eq!(Error::msg("boom").to_string(), "boom");
+    }
+}

