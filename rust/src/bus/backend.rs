@@ -3,8 +3,87 @@
 //! A backend is a dumb, position-addressed byte log: the typed API, ACL and
 //! poll live above it in [`super::bus::AgentBus`]. Positions are dense and
 //! start at 0; append returns the position assigned to the record.
+//!
+//! Backends that recognize entry frames additionally maintain a
+//! [`TypeIndex`] — per-[`PayloadType`] position lists kept on append and
+//! rebuilt on reopen — so a filtered read resolves to exactly the matching
+//! positions ([`LogBackend::positions_for_type`]) instead of scanning and
+//! decoding the whole range.
 
+use super::entry::{Entry, PayloadType};
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+/// Per-type position index over one backend's records.
+///
+/// Fed every appended record via [`TypeIndex::note`] (a header peek — one
+/// byte compare for binary frames). Records that are not entry frames
+/// (raw test bytes, foreign writers) bump `untyped`; while any such record
+/// exists the index answers `None` and callers fall back to scanning, so
+/// the index is never silently wrong.
+#[derive(Default)]
+pub struct TypeIndex {
+    by_tag: BTreeMap<u8, Vec<u64>>,
+    untyped: u64,
+}
+
+impl TypeIndex {
+    pub fn new() -> TypeIndex {
+        TypeIndex::default()
+    }
+
+    /// Record `record` at position `pos`. Positions must be fed in
+    /// ascending order (append order), which keeps each per-type list
+    /// sorted for the binary searches below.
+    pub fn note(&mut self, pos: u64, record: &[u8]) {
+        match Entry::peek_type(record) {
+            Some(t) => self.by_tag.entry(t.tag()).or_default().push(pos),
+            None => self.untyped += 1,
+        }
+    }
+
+    /// Positions in `[start, end)` holding an entry of type `t`, ascending.
+    /// `None` if the log contains any untypeable record (caller must scan).
+    pub fn positions(&self, t: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        if self.untyped > 0 {
+            return None;
+        }
+        let v = match self.by_tag.get(&t.tag()) {
+            Some(v) => v,
+            None => return Some(Vec::new()),
+        };
+        let lo = v.partition_point(|&p| p < start);
+        let hi = v.partition_point(|&p| p < end);
+        Some(v[lo..hi].to_vec())
+    }
+
+    /// Total indexed records per type (diagnostics / tests).
+    pub fn counts(&self) -> BTreeMap<u8, usize> {
+        self.by_tag.iter().map(|(t, v)| (*t, v.len())).collect()
+    }
+
+    pub fn untyped_records(&self) -> u64 {
+        self.untyped
+    }
+}
+
+/// Split a sorted position list into maximal contiguous `[start, end)`
+/// runs, so point lookups batch into as few backend range-reads as
+/// possible (index-resolved bus reads, registry namespace reads).
+pub fn contiguous_runs(sorted: &[u64]) -> Vec<(u64, u64)> {
+    let mut runs = Vec::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let start = sorted[i];
+        let mut j = i + 1;
+        while j < sorted.len() && sorted[j] == start + (j - i) as u64 {
+            j += 1;
+        }
+        runs.push((start, start + (j - i) as u64));
+        i = j;
+    }
+    runs
+}
 
 /// Counters every backend maintains (Fig. 5-middle reports bytes logged).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -47,6 +126,16 @@ pub trait LogBackend: Send + Sync {
     /// Read records in `[start, end)` (clamped to the tail).
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>>;
 
+    /// Positions in `[start, end)` whose record is an entry of type
+    /// `ptype`, ascending — the per-type index lookup that makes filtered
+    /// reads O(matches). `None` means the backend keeps no (complete)
+    /// index for this log and the caller must scan the range instead; the
+    /// default implementation always says so.
+    fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        let _ = (ptype, start, end);
+        None
+    }
+
     /// One past the last appended position.
     fn tail(&self) -> u64;
 
@@ -63,5 +152,67 @@ pub trait LogBackend: Send + Sync {
 
     fn simulated_read_latency(&self) -> Duration {
         Duration::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::entry::Payload;
+    use super::*;
+    use crate::util::json::Json;
+
+    fn frame(pos: u64, t: PayloadType) -> Vec<u8> {
+        Entry { position: pos, realtime_ts: 0, payload: Payload::new(t, "x", Json::Null) }
+            .to_bytes()
+    }
+
+    #[test]
+    fn index_answers_range_queries_per_type() {
+        let mut ix = TypeIndex::new();
+        // mail, intent, mail, vote, mail
+        for (pos, t) in [
+            (0, PayloadType::Mail),
+            (1, PayloadType::Intent),
+            (2, PayloadType::Mail),
+            (3, PayloadType::Vote),
+            (4, PayloadType::Mail),
+        ] {
+            ix.note(pos, &frame(pos, t));
+        }
+        assert_eq!(ix.positions(PayloadType::Mail, 0, 5), Some(vec![0, 2, 4]));
+        assert_eq!(ix.positions(PayloadType::Mail, 1, 4), Some(vec![2]));
+        assert_eq!(ix.positions(PayloadType::Intent, 0, 5), Some(vec![1]));
+        assert_eq!(ix.positions(PayloadType::Commit, 0, 5), Some(vec![]));
+        assert_eq!(ix.positions(PayloadType::Mail, 5, 9), Some(vec![]));
+        assert_eq!(ix.untyped_records(), 0);
+    }
+
+    #[test]
+    fn untyped_record_disables_the_index() {
+        let mut ix = TypeIndex::new();
+        ix.note(0, &frame(0, PayloadType::Mail));
+        ix.note(1, b"raw non-entry bytes");
+        assert_eq!(ix.untyped_records(), 1);
+        assert_eq!(ix.positions(PayloadType::Mail, 0, 2), None, "must force a scan");
+    }
+
+    #[test]
+    fn contiguous_runs_batch_sorted_positions() {
+        assert_eq!(contiguous_runs(&[]), Vec::<(u64, u64)>::new());
+        assert_eq!(contiguous_runs(&[5]), vec![(5, 6)]);
+        assert_eq!(contiguous_runs(&[1, 2, 3]), vec![(1, 4)]);
+        assert_eq!(contiguous_runs(&[0, 2, 3, 7, 8, 9, 11]), vec![(0, 1), (2, 4), (7, 10), (11, 12)]);
+    }
+
+    #[test]
+    fn legacy_json_frames_are_indexed_too() {
+        let mut ix = TypeIndex::new();
+        let e = Entry {
+            position: 0,
+            realtime_ts: 0,
+            payload: Payload::new(PayloadType::Policy, "a", Json::Null),
+        };
+        ix.note(0, &e.to_json_bytes());
+        assert_eq!(ix.positions(PayloadType::Policy, 0, 1), Some(vec![0]));
     }
 }

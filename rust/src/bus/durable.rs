@@ -17,7 +17,8 @@
 //!   shared file cursor, so a reader can never perturb where the next
 //!   append lands and readers don't pay seek-restore round-trips.
 
-use super::backend::{BackendStats, LogBackend};
+use super::backend::{BackendStats, LogBackend, TypeIndex};
+use super::entry::PayloadType;
 use crate::util::crc32;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
@@ -37,6 +38,11 @@ struct Inner {
     file: File,
     /// `(frame byte offset, payload byte length)` per record.
     frames: Vec<(u64, u32)>,
+    /// Per-[`PayloadType`] position index, maintained on append and
+    /// rebuilt by [`DurableBackend::open`]'s recovery scan (the scan
+    /// already reads every payload for its CRC, so classifying it is one
+    /// header peek away).
+    types: TypeIndex,
     write_pos: u64,
     stats: BackendStats,
     /// Set when a failed commit could not be rolled back (the physical
@@ -80,9 +86,12 @@ impl DurableBackend {
         }
         let mut file = OpenOptions::new().read(true).append(true).create(true).open(&path)?;
 
-        // Scan existing records.
+        // Scan existing records, rebuilding both the offset index and the
+        // per-type position index (the payload is already in hand for the
+        // CRC check; classifying it is one header peek).
         let len = file.metadata()?.len();
         let mut frames = Vec::new();
+        let mut types = TypeIndex::new();
         let mut pos = 0u64;
         let mut header = [0u8; FRAME_HEADER];
         while pos + FRAME_HEADER as u64 <= len {
@@ -97,6 +106,7 @@ impl DurableBackend {
             if crc32::hash(&buf) != crc {
                 break; // corrupt tail
             }
+            types.note(frames.len() as u64, &buf);
             frames.push((pos, rec_len));
             pos += FRAME_HEADER as u64 + rec_len as u64;
         }
@@ -111,6 +121,7 @@ impl DurableBackend {
             inner: Mutex::new(Inner {
                 file,
                 frames,
+                types,
                 write_pos: pos,
                 stats: BackendStats::default(),
                 poisoned: false,
@@ -153,9 +164,13 @@ impl DurableBackend {
         }
         let first = g.frames.len() as u64;
         let mut off = g.write_pos;
-        for &len in lens {
+        let mut blob_off = 0usize;
+        for (i, &len) in lens.iter().enumerate() {
+            let payload = &blob[blob_off + FRAME_HEADER..blob_off + FRAME_HEADER + len as usize];
+            g.types.note(first + i as u64, payload);
             g.frames.push((off, len));
             off += (FRAME_HEADER + len as usize) as u64;
+            blob_off += FRAME_HEADER + len as usize;
         }
         g.write_pos = off;
         g.stats.appended_records += lens.len() as u64;
@@ -206,6 +221,10 @@ impl LogBackend for DurableBackend {
         }
         g.stats.read_records += out.len() as u64;
         Ok(out)
+    }
+
+    fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        self.inner.lock().unwrap().types.positions(ptype, start, end)
     }
 
     fn tail(&self) -> u64 {
@@ -454,6 +473,46 @@ mod tests {
         }
         assert!(b.read(6, 2).unwrap().is_empty());
         assert!(b.read(9, 3).unwrap().is_empty());
+    }
+
+    #[test]
+    fn type_index_rebuilt_on_reopen_across_both_codecs() {
+        use crate::bus::entry::{Entry, Payload};
+        use crate::util::json::Json;
+        let entry = |pos: u64, t: PayloadType| Entry {
+            position: pos,
+            realtime_ts: 0,
+            payload: Payload::new(t, "w", Json::obj(vec![("k", Json::Int(pos as i64))])),
+        };
+        let p = tmp("type-index");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            // A mixed-version log: legacy JSON frames first (pre-binary
+            // codec), binary frames after.
+            b.append(&entry(0, PayloadType::Mail).to_json_bytes()).unwrap();
+            b.append(&entry(1, PayloadType::Intent).to_json_bytes()).unwrap();
+            b.append(&entry(2, PayloadType::Mail).to_bytes()).unwrap();
+            b.append_batch(&[
+                entry(3, PayloadType::Vote).to_bytes(),
+                entry(4, PayloadType::Mail).to_bytes(),
+            ])
+            .unwrap();
+            // Live-maintained index covers both codecs.
+            assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2, 4]));
+        }
+        // Reopen: the index is rebuilt by the recovery scan, identically.
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2, 4]));
+        assert_eq!(b.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![1]));
+        assert_eq!(b.positions_for_type(PayloadType::Vote, 0, 9), Some(vec![3]));
+        assert_eq!(b.positions_for_type(PayloadType::Commit, 0, 9), Some(vec![]));
+        // And every frame still decodes to the entry it was written from.
+        for (pos, bytes) in b.read(0, 9).unwrap() {
+            let e = Entry::from_bytes(&bytes).unwrap();
+            assert_eq!(e.position, pos);
+            assert_eq!(e.payload.body.get_u64("k"), Some(pos));
+        }
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -1,7 +1,22 @@
-//! Typed log entries (paper Fig. 4 / Table 2).
+//! Typed log entries (paper Fig. 4 / Table 2) and their wire codecs.
+//!
+//! Two frame codecs coexist on disk:
+//!
+//! * **v1 binary** (current, [`Entry::to_bytes`]) — a fixed 24-byte header
+//!   (`magic`, one-byte [`PayloadType`] tag, `position`, `ts`, author/body
+//!   lengths) followed by the UTF-8 author and the JSON-encoded body. Only
+//!   the free-form body is JSON; everything a filtered reader needs to
+//!   decide "do I care about this record" sits in the header, so
+//!   [`Entry::peek_type`] classifies a frame without parsing any JSON.
+//! * **v0 JSON** (legacy, [`Entry::to_json_bytes`]) — the whole entry as
+//!   one deterministic JSON object. Still decoded transparently by
+//!   [`Entry::from_bytes`] (the first byte selects the codec: `0x01` for
+//!   binary, `{` for JSON), so durable logs written before the binary
+//!   codec reopen and replay identically.
 
 use crate::util::json::Json;
 use std::fmt;
+use std::sync::Arc;
 
 /// The entry type tag. Append/read/poll filter on these, and access control
 /// is enforced at this granularity.
@@ -58,6 +73,26 @@ impl PayloadType {
     pub fn from_name(s: &str) -> Option<PayloadType> {
         PayloadType::ALL.iter().copied().find(|t| t.name() == s)
     }
+
+    /// Stable one-byte wire tag (the binary frame header carries this, and
+    /// per-type backend indexes key on it). Never reassign a value.
+    pub fn tag(self) -> u8 {
+        match self {
+            PayloadType::InfIn => 0,
+            PayloadType::InfOut => 1,
+            PayloadType::Intent => 2,
+            PayloadType::Vote => 3,
+            PayloadType::Commit => 4,
+            PayloadType::Abort => 5,
+            PayloadType::Result => 6,
+            PayloadType::Mail => 7,
+            PayloadType::Policy => 8,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<PayloadType> {
+        PayloadType::ALL.iter().copied().find(|t| t.tag() == tag)
+    }
 }
 
 impl fmt::Display for PayloadType {
@@ -71,12 +106,15 @@ impl fmt::Display for PayloadType {
 pub struct Payload {
     pub ptype: PayloadType,
     /// Identity of the appending component ("driver-1", "voter-rule", ...).
-    pub author: String,
+    /// `Arc<str>`: many entries share one author, and entries themselves are
+    /// shared (`Arc<Entry>`) across the N state-machine readers — cloning a
+    /// payload must never re-allocate the identity string.
+    pub author: Arc<str>,
     pub body: Json,
 }
 
 impl Payload {
-    pub fn new(ptype: PayloadType, author: impl Into<String>, body: Json) -> Payload {
+    pub fn new(ptype: PayloadType, author: impl Into<Arc<str>>, body: Json) -> Payload {
         Payload { ptype, author: author.into(), body }
     }
 }
@@ -89,22 +127,93 @@ pub struct Entry {
     pub payload: Payload,
 }
 
+/// First byte of a v1 binary frame. Distinct from `{` (0x7B), the first
+/// byte of every v0 JSON frame, so the codec is selected per record.
+pub const FRAME_MAGIC_V1: u8 = 0x01;
+
+/// v1 binary header: magic(1) + tag(1) + position(8) + ts(8) +
+/// author_len(2, u16 LE) + body_len(4, u32 LE).
+pub const FRAME_HEADER_V1: usize = 24;
+
 impl Entry {
-    /// Byte serialization used by every backend (JSON, deterministic key
-    /// order — entries must survive reboot byte-for-byte).
+    /// Byte serialization used by every backend — the v1 binary frame.
+    /// The body is the only JSON inside; header fields (including the type
+    /// tag) are fixed-offset binary, so filtered readers never touch the
+    /// JSON parser for records they skip. Deterministic byte-for-byte
+    /// (entries must survive reboot byte-for-byte): the body writer
+    /// serializes objects in key order.
     pub fn to_bytes(&self) -> Vec<u8> {
+        let author = self.payload.author.as_bytes();
+        let body = self.payload.body.to_string().into_bytes();
+        if author.len() > u16::MAX as usize || body.len() > u32::MAX as usize {
+            // Pathological field sizes would wrap the fixed-width header
+            // lengths and make the frame undecodable after a successful
+            // append; the v0 JSON codec has no length fields, so encode
+            // such records with it instead (from_bytes decodes both).
+            return self.to_json_bytes();
+        }
+        let mut out = Vec::with_capacity(FRAME_HEADER_V1 + author.len() + body.len());
+        out.push(FRAME_MAGIC_V1);
+        out.push(self.payload.ptype.tag());
+        out.extend_from_slice(&self.position.to_le_bytes());
+        out.extend_from_slice(&self.realtime_ts.to_le_bytes());
+        out.extend_from_slice(&(author.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(author);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Legacy v0 JSON frame (the pre-binary wire format). Kept so
+    /// migration tests can author old-style logs and because mixed-version
+    /// logs remain first-class: [`Entry::from_bytes`] decodes both.
+    pub fn to_json_bytes(&self) -> Vec<u8> {
         Json::obj(vec![
             ("position", Json::Int(self.position as i64)),
             ("ts", Json::Int(self.realtime_ts as i64)),
             ("type", Json::str(self.payload.ptype.name())),
-            ("author", Json::str(self.payload.author.clone())),
+            ("author", Json::str(&*self.payload.author)),
             ("body", self.payload.body.clone()),
         ])
         .to_string()
         .into_bytes()
     }
 
+    /// Decode either codec; the first byte selects it.
     pub fn from_bytes(bytes: &[u8]) -> Option<Entry> {
+        match bytes.first() {
+            Some(&FRAME_MAGIC_V1) => Entry::from_binary(bytes),
+            Some(&b'{') => Entry::from_json_bytes(bytes),
+            _ => None,
+        }
+    }
+
+    fn from_binary(bytes: &[u8]) -> Option<Entry> {
+        if bytes.len() < FRAME_HEADER_V1 || bytes[0] != FRAME_MAGIC_V1 {
+            return None;
+        }
+        let ptype = PayloadType::from_tag(bytes[1])?;
+        let position = u64::from_le_bytes(bytes[2..10].try_into().ok()?);
+        let realtime_ts = u64::from_le_bytes(bytes[10..18].try_into().ok()?);
+        let author_len = u16::from_le_bytes(bytes[18..20].try_into().ok()?) as usize;
+        let body_len = u32::from_le_bytes(bytes[20..24].try_into().ok()?) as usize;
+        if bytes.len() != FRAME_HEADER_V1 + author_len + body_len {
+            return None;
+        }
+        let author = std::str::from_utf8(&bytes[FRAME_HEADER_V1..FRAME_HEADER_V1 + author_len]).ok()?;
+        let body_text = std::str::from_utf8(&bytes[FRAME_HEADER_V1 + author_len..]).ok()?;
+        Some(Entry {
+            position,
+            realtime_ts,
+            payload: Payload {
+                ptype,
+                author: Arc::from(author),
+                body: Json::parse(body_text).ok()?,
+            },
+        })
+    }
+
+    fn from_json_bytes(bytes: &[u8]) -> Option<Entry> {
         let text = std::str::from_utf8(bytes).ok()?;
         let v = Json::parse(text).ok()?;
         Some(Entry {
@@ -112,10 +221,24 @@ impl Entry {
             realtime_ts: v.get_u64("ts")?,
             payload: Payload {
                 ptype: PayloadType::from_name(v.get_str("type")?)?,
-                author: v.get_str("author")?.to_string(),
+                author: Arc::from(v.get_str("author")?),
                 body: v.get("body")?.clone(),
             },
         })
+    }
+
+    /// Classify a frame by type **without decoding it**: one byte compare
+    /// for v1 binary frames; legacy JSON frames fall back to a full parse
+    /// (they carry no header — only reopened pre-binary logs pay this).
+    /// `None` means "not an entry frame" (foreign/corrupt bytes).
+    pub fn peek_type(bytes: &[u8]) -> Option<PayloadType> {
+        match bytes.first() {
+            Some(&FRAME_MAGIC_V1) if bytes.len() >= FRAME_HEADER_V1 => {
+                PayloadType::from_tag(bytes[1])
+            }
+            Some(&b'{') => Entry::from_json_bytes(bytes).map(|e| e.payload.ptype),
+            _ => None,
+        }
     }
 
     /// For Vote/Commit/Abort/Result entries: the log position of the
@@ -229,15 +352,84 @@ mod tests {
     fn entry_roundtrip() {
         let e = sample();
         let bytes = e.to_bytes();
+        assert_eq!(bytes[0], FRAME_MAGIC_V1);
         assert_eq!(Entry::from_bytes(&bytes).unwrap(), e);
+    }
+
+    #[test]
+    fn legacy_json_frame_decodes_identically() {
+        // A frame written by the pre-binary codec must decode to the exact
+        // same entry the binary codec produces.
+        let e = sample();
+        let json = e.to_json_bytes();
+        assert_eq!(json[0], b'{');
+        let from_json = Entry::from_bytes(&json).unwrap();
+        let from_bin = Entry::from_bytes(&e.to_bytes()).unwrap();
+        assert_eq!(from_json, from_bin);
+        assert_eq!(from_json, e);
+    }
+
+    #[test]
+    fn peek_type_reads_header_without_body_parse() {
+        for t in PayloadType::ALL {
+            let e = Entry {
+                position: 3,
+                realtime_ts: 7,
+                payload: Payload::new(t, "a", Json::obj(vec![("k", Json::str("v"))])),
+            };
+            assert_eq!(Entry::peek_type(&e.to_bytes()), Some(t));
+            assert_eq!(Entry::peek_type(&e.to_json_bytes()), Some(t), "legacy peek");
+        }
+        // A binary frame with a corrupt *body* still peeks by header alone.
+        let mut bytes = sample().to_bytes();
+        let n = bytes.len();
+        bytes[n - 1] = b'!';
+        assert_eq!(Entry::peek_type(&bytes), Some(PayloadType::Intent));
+        assert!(Entry::from_bytes(&bytes).is_none(), "decode still catches the corruption");
     }
 
     #[test]
     fn type_names_roundtrip() {
         for t in PayloadType::ALL {
             assert_eq!(PayloadType::from_name(t.name()), Some(t));
+            assert_eq!(PayloadType::from_tag(t.tag()), Some(t));
         }
         assert_eq!(PayloadType::from_name("bogus"), None);
+        assert_eq!(PayloadType::from_tag(9), None);
+        assert_eq!(PayloadType::from_tag(0xFF), None);
+    }
+
+    #[test]
+    fn binary_frame_rejects_length_mismatch_and_bad_tag() {
+        let good = sample().to_bytes();
+        // Truncated payload.
+        assert!(Entry::from_bytes(&good[..good.len() - 1]).is_none());
+        // Extra trailing byte.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(Entry::from_bytes(&long).is_none());
+        // Unknown type tag.
+        let mut bad_tag = good.clone();
+        bad_tag[1] = 0xEE;
+        assert!(Entry::from_bytes(&bad_tag).is_none());
+        assert_eq!(Entry::peek_type(&bad_tag), None);
+        // Header-only frame (shorter than the fixed header).
+        assert!(Entry::from_bytes(&[FRAME_MAGIC_V1, 0, 1]).is_none());
+    }
+
+    #[test]
+    fn oversized_author_falls_back_to_json_codec() {
+        // An author longer than the u16 header field must not wrap the
+        // length and poison the log; it encodes as a legacy JSON frame.
+        let e = Entry {
+            position: 1,
+            realtime_ts: 2,
+            payload: Payload::new(PayloadType::Mail, "a".repeat(70_000), Json::Null),
+        };
+        let bytes = e.to_bytes();
+        assert_eq!(bytes[0], b'{', "encoded as a JSON frame");
+        assert_eq!(Entry::from_bytes(&bytes).unwrap(), e);
+        assert_eq!(Entry::peek_type(&bytes), Some(PayloadType::Mail));
     }
 
     #[test]

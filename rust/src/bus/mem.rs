@@ -1,6 +1,7 @@
 //! In-memory backend: fastest, no durability (paper §4.1 variant 1).
 
-use super::backend::{BackendStats, LogBackend};
+use super::backend::{BackendStats, LogBackend, TypeIndex};
+use super::entry::PayloadType;
 use std::sync::RwLock;
 
 #[derive(Default)]
@@ -12,6 +13,7 @@ pub struct MemBackend {
 struct Inner {
     records: Vec<Vec<u8>>,
     stats: BackendStats,
+    types: TypeIndex,
 }
 
 impl MemBackend {
@@ -24,6 +26,7 @@ impl LogBackend for MemBackend {
     fn append(&self, bytes: &[u8]) -> std::io::Result<u64> {
         let mut g = self.inner.write().unwrap();
         let pos = g.records.len() as u64;
+        g.types.note(pos, bytes);
         g.records.push(bytes.to_vec());
         g.stats.appended_records += 1;
         g.stats.appended_bytes += bytes.len() as u64;
@@ -34,7 +37,8 @@ impl LogBackend for MemBackend {
         // One lock acquisition for the whole batch.
         let mut g = self.inner.write().unwrap();
         let first = g.records.len() as u64;
-        for rec in records {
+        for (i, rec) in records.iter().enumerate() {
+            g.types.note(first + i as u64, rec);
             g.records.push(rec.clone());
             g.stats.appended_bytes += rec.len() as u64;
         }
@@ -50,6 +54,10 @@ impl LogBackend for MemBackend {
         let out: Vec<(u64, Vec<u8>)> = (lo..hi).map(|i| (i as u64, g.records[i].clone())).collect();
         g.stats.read_records += out.len() as u64;
         Ok(out)
+    }
+
+    fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        self.inner.read().unwrap().types.positions(ptype, start, end)
     }
 
     fn tail(&self) -> u64 {
@@ -102,5 +110,23 @@ mod tests {
         let s = b.stats();
         assert_eq!(s.appended_records, 2);
         assert_eq!(s.appended_bytes, 5);
+    }
+
+    #[test]
+    fn type_index_tracks_entry_frames_and_disables_on_raw_bytes() {
+        use crate::bus::entry::{Entry, Payload};
+        use crate::util::json::Json;
+        let frame = |pos: u64, t: PayloadType| {
+            Entry { position: pos, realtime_ts: 0, payload: Payload::new(t, "x", Json::Null) }
+                .to_bytes()
+        };
+        let b = MemBackend::new();
+        b.append(&frame(0, PayloadType::Mail)).unwrap();
+        b.append_batch(&[frame(1, PayloadType::Intent), frame(2, PayloadType::Mail)]).unwrap();
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 3), Some(vec![0, 2]));
+        assert_eq!(b.positions_for_type(PayloadType::Intent, 0, 3), Some(vec![1]));
+        // A raw (non-entry) record disables the index rather than lying.
+        b.append(b"raw").unwrap();
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 4), None);
     }
 }

@@ -17,6 +17,15 @@
 //! durability point per batch), and [`registry::BusRegistry`] multiplexes
 //! many logical agent buses onto one shared backend with per-agent
 //! namespacing (multi-tenant deployments, swarm experiments).
+//!
+//! Entries ride a **versioned binary frame** ([`entry::Entry::to_bytes`]:
+//! fixed header with a one-byte type tag; JSON only for the free-form
+//! body), backends keep a **per-type position index**
+//! ([`backend::TypeIndex`], rebuilt on reopen), and every bus interns
+//! decoded records as `Arc<Entry>` — so a filtered `read`/`poll` touches
+//! O(matches) records and the deconstructed state machine's N readers
+//! decode each entry at most once. Legacy JSON-framed logs (the pre-binary
+//! codec) decode transparently.
 
 pub mod acl;
 pub mod backend;
@@ -28,8 +37,8 @@ pub mod registry;
 pub mod remote;
 
 pub use acl::{AclError, Grant, Role};
-pub use backend::{BackendStats, LogBackend};
-pub use bus::{AgentBus, BusBackendKind, BusClient, BusError};
+pub use backend::{BackendStats, LogBackend, TypeIndex};
+pub use bus::{AgentBus, BusBackendKind, BusClient, BusError, DecodeStats};
 pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
 pub use mem::MemBackend;

@@ -20,8 +20,9 @@
 //! * group commit composes — a namespaced `append_batch` is one batch on
 //!   the shared backend.
 
-use super::backend::{BackendStats, LogBackend};
+use super::backend::{contiguous_runs, BackendStats, LogBackend, TypeIndex};
 use super::bus::AgentBus;
+use super::entry::PayloadType;
 use crate::util::clock::Clock;
 use std::collections::BTreeMap;
 use std::io;
@@ -46,6 +47,10 @@ struct ScanState {
 struct NsState {
     /// Global position of each local record, ascending.
     globals: Mutex<Vec<u64>>,
+    /// Per-type index over *local* positions, maintained on append and
+    /// during reopen ingest (the ingest scan already decodes the namespace
+    /// prefix; classifying the payload is one header peek).
+    types: Mutex<TypeIndex>,
     stats: Mutex<BackendStats>,
 }
 
@@ -89,9 +94,14 @@ fn ingest_to_tail(shared: &Shared, scan: &mut ScanState) -> io::Result<()> {
         return Ok(());
     }
     for (global, record) in shared.backend.read(scan.ingested, tail)? {
-        let (name, _) = decode(&record)?;
+        let (name, payload) = decode(&record)?;
         let ns = ns_entry(scan, name);
-        ns.globals.lock().unwrap().push(global);
+        let local = {
+            let mut globals = ns.globals.lock().unwrap();
+            globals.push(global);
+            globals.len() as u64 - 1
+        };
+        ns.types.lock().unwrap().note(local, payload);
         scan.ingested = global + 1;
     }
     scan.ingested = tail;
@@ -214,6 +224,7 @@ impl LogBackend for NamespacedBackend {
             globals.push(global);
             globals.len() as u64 - 1
         };
+        self.ns.types.lock().unwrap().note(local, bytes);
         let mut stats = self.ns.stats.lock().unwrap();
         stats.appended_records += 1;
         stats.appended_bytes += bytes.len() as u64;
@@ -236,6 +247,12 @@ impl LogBackend for NamespacedBackend {
             globals.extend(first_global..first_global + records.len() as u64);
             first_local
         };
+        {
+            let mut types = self.ns.types.lock().unwrap();
+            for (i, rec) in records.iter().enumerate() {
+                types.note(local + i as u64, rec);
+            }
+        }
         let mut stats = self.ns.stats.lock().unwrap();
         stats.appended_records += records.len() as u64;
         stats.appended_bytes += records.iter().map(|r| r.len() as u64).sum::<u64>();
@@ -246,24 +263,32 @@ impl LogBackend for NamespacedBackend {
         self.shared.backend.flush()
     }
 
+    fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        {
+            let mut scan = self.shared.scan.lock().unwrap();
+            // On a corrupt/foreign shared-log suffix, decline: the caller
+            // falls back to a scanning read, which surfaces the error.
+            if ingest_to_tail(&self.shared, &mut scan).is_err() {
+                return None;
+            }
+        }
+        self.ns.types.lock().unwrap().positions(ptype, start, end)
+    }
+
     fn read(&self, start: u64, end: u64) -> io::Result<Vec<(u64, Vec<u8>)>> {
         let globals = self.globals_for(start, end)?;
         let mut out = Vec::with_capacity(globals.len());
-        // Batch contiguous global runs into single shared reads.
-        let mut i = 0;
-        while i < globals.len() {
-            let run_start = globals[i];
-            let mut j = i + 1;
-            while j < globals.len() && globals[j] == run_start + (j - i) as u64 {
-                j += 1;
-            }
-            let run = self.shared.backend.read(run_start, run_start + (j - i) as u64)?;
-            for (k, (_, record)) in run.into_iter().enumerate() {
+        // Batch contiguous global runs into single shared reads. Runs
+        // cover `globals` in order, so the local position of each emitted
+        // record is `start + #emitted`.
+        for (run_start, run_end) in contiguous_runs(&globals) {
+            let run = self.shared.backend.read(run_start, run_end)?;
+            for (_, record) in run {
                 let (name, payload) = decode(&record)?;
                 debug_assert_eq!(name, self.name, "namespace map pointed at a foreign record");
-                out.push((start + (i + k) as u64, payload.to_vec()));
+                let local = start + out.len() as u64;
+                out.push((local, payload.to_vec()));
             }
-            i = j;
         }
         self.ns.stats.lock().unwrap().read_records += out.len() as u64;
         Ok(out)
@@ -453,6 +478,73 @@ mod tests {
         }
         assert!(a.read(0, 10).is_err(), "reads surface the corrupt shared log");
         assert_eq!(a.tail(), 2);
+    }
+
+    #[test]
+    fn per_type_index_rebuilt_for_every_tenant_on_reopen() {
+        use crate::bus::entry::{Entry, Payload};
+        let frame = |pos: u64, t: PayloadType| {
+            Entry { position: pos, realtime_ts: 0, payload: Payload::new(t, "w", Json::Null) }
+                .to_bytes()
+        };
+        let p = tmp("registry-type-index");
+        {
+            let reg = BusRegistry::new(Arc::new(DurableBackend::open(&p).unwrap()));
+            let a = reg.backend("alpha").unwrap();
+            let b = reg.backend("beta").unwrap();
+            a.append(&frame(0, PayloadType::Mail)).unwrap();
+            b.append(&frame(0, PayloadType::Intent)).unwrap();
+            a.append_batch(&[frame(1, PayloadType::Intent), frame(2, PayloadType::Mail)]).unwrap();
+            b.append(&frame(1, PayloadType::Intent)).unwrap();
+            // Live-maintained index, local positions.
+            assert_eq!(a.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2]));
+            assert_eq!(b.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![0, 1]));
+        }
+        // Reopen from the single shared file: ingest rebuilds each
+        // tenant's per-type index from the namespace-framed records.
+        let reg = BusRegistry::new(Arc::new(DurableBackend::open(&p).unwrap()));
+        let a = reg.backend("alpha").unwrap();
+        let b = reg.backend("beta").unwrap();
+        assert_eq!(a.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2]));
+        assert_eq!(a.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![1]));
+        assert_eq!(b.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![0, 1]));
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![]));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn reopen_with_corrupt_record_mid_log_keeps_prefix_and_index_stable() {
+        use crate::bus::entry::{Entry, Payload};
+        let frame = |pos: u64, t: PayloadType| {
+            Entry { position: pos, realtime_ts: 0, payload: Payload::new(t, "w", Json::Null) }
+                .to_bytes()
+        };
+        let p = tmp("registry-corrupt-mid");
+        {
+            // Two valid tenant records, then a foreign (non-registry)
+            // record written straight to the shared backend, then another
+            // valid record beyond it.
+            let shared = Arc::new(DurableBackend::open(&p).unwrap());
+            let reg = BusRegistry::new(Arc::clone(&shared));
+            let a = reg.backend("a").unwrap();
+            a.append(&frame(0, PayloadType::Mail)).unwrap();
+            a.append(&frame(1, PayloadType::Intent)).unwrap();
+            shared.append(b"").unwrap(); // undecodable: empty record
+            shared.append(&encode("a", &frame(2, PayloadType::Mail))).unwrap();
+        }
+        let reg = BusRegistry::new(Arc::new(DurableBackend::open(&p).unwrap()));
+        let a = reg.backend("a").unwrap();
+        // Ingest stops at the corrupt record; the valid prefix is mapped
+        // exactly once and stays stable across repeated probes.
+        for _ in 0..3 {
+            assert_eq!(a.tail(), 2);
+            assert_eq!(a.positions_for_type(PayloadType::Mail, 0, 9), None, "index declines");
+        }
+        assert!(a.read(0, 10).is_err(), "reads surface the corrupt shared log");
+        // And the stable prefix means the frontier never re-ingested (and
+        // so never duplicated) the two valid records.
+        assert_eq!(a.tail(), 2);
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

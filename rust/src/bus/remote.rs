@@ -9,6 +9,7 @@
 //! ("AnonDB").
 
 use super::backend::{BackendStats, LogBackend};
+use super::entry::PayloadType;
 use super::mem::MemBackend;
 use std::time::Duration;
 
@@ -81,6 +82,12 @@ impl LogBackend for RemoteBackend {
 
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
         self.store.read(start, end)
+    }
+
+    fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
+        // The paper's KV shim keeps a per-type secondary index server-side
+        // (a query, not extra RTTs): delegate to the in-process store.
+        self.store.positions_for_type(ptype, start, end)
     }
 
     fn tail(&self) -> u64 {

@@ -47,7 +47,9 @@ impl StageBreakdown {
 
     /// Reconstruct the breakdown from a played log. Entries must be in
     /// position order; timestamps are the bus-assigned realtime ms.
-    pub fn from_entries(entries: &[Entry]) -> StageBreakdown {
+    /// Generic over owned (`Entry`) and shared (`Arc<Entry>`) slices —
+    /// bus reads hand back decode-once `Arc<Entry>`s.
+    pub fn from_entries<E: std::borrow::Borrow<Entry>>(entries: &[E]) -> StageBreakdown {
         use PayloadType::*;
         let mut per_stage: BTreeMap<Stage, Duration> = BTreeMap::new();
         let mut add = |stage: Stage, from_ms: u64, to_ms: u64| {
@@ -64,6 +66,7 @@ impl StageBreakdown {
         let mut commit_ts: Option<u64> = None;
 
         for e in entries {
+            let e: &Entry = e.borrow();
             let ts = e.realtime_ts;
             match e.payload.ptype {
                 Mail | Result | Abort => {

@@ -121,7 +121,7 @@ pub struct Fig8Outcome {
     /// Per-folder speedup of phase 2 over phase 1.
     pub speedup: f64,
     /// The recovery agent's bus (the Fig. 8-right trace).
-    pub recovery_entries: Vec<Entry>,
+    pub recovery_entries: Vec<Arc<Entry>>,
     pub total_folders: usize,
     pub verified: bool,
 }

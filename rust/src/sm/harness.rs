@@ -94,7 +94,8 @@ pub struct TurnReport {
     pub inference_calls: u64,
     pub committed: usize,
     pub aborted: usize,
-    pub entries: Vec<Entry>,
+    /// The turn's full log slice (shared, decode-once entries).
+    pub entries: Vec<Arc<Entry>>,
     pub timed_out: bool,
 }
 

@@ -108,7 +108,7 @@ mod tests {
     use crate::inference::sim::{SimConfig, SimLm};
     use crate::util::json::Json;
 
-    fn setup(rule_verdict: Option<bool>) -> (Arc<AgentBus>, Entry) {
+    fn setup(rule_verdict: Option<bool>) -> (Arc<AgentBus>, Arc<Entry>) {
         let bus = AgentBus::in_memory("t");
         let admin = bus.client("admin", Role::Admin);
         let mail = "TASK t-9: Pay rent.\n===STEP===\ntransfer(\"user\", \"landlord\", 120000, \"rent\");\n===FINAL===\nPaid.";

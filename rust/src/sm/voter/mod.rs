@@ -49,7 +49,7 @@ impl<'a> VoterCtx<'a> {
     /// The user mail that defines the current turn (the most recent Mail
     /// entry), used by semantic voters to ground "what did the user
     /// actually ask for".
-    pub fn original_mail(&self) -> Option<Entry> {
+    pub fn original_mail(&self) -> Option<Arc<Entry>> {
         self.client.read(0, self.client.tail(), Some(&[PayloadType::Mail])).ok()?.into_iter().last()
     }
 
@@ -64,7 +64,7 @@ impl<'a> VoterCtx<'a> {
     }
 
     /// Recent Result outputs (context for LLM voters).
-    pub fn recent_results(&self, n: usize) -> Vec<Entry> {
+    pub fn recent_results(&self, n: usize) -> Vec<Arc<Entry>> {
         let all = self
             .client
             .read(0, self.client.tail(), Some(&[PayloadType::Result]))
