@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Bench regression gate over BENCH_bus.json headline metrics.
+
+CI runs `cargo bench --bench bus_micro -- --json`, which writes
+BENCH_bus.json at the repo root, then calls this script against the
+previous run's file (restored from the actions cache). Any headline
+metric that regressed by more than --factor (default 2x) fails the job.
+
+Metric direction is inferred from the name: times (`*_ms`) and
+per-entry/per-read cost ratios are lower-is-better; everything else
+(speedups, `*_krecs` throughputs) is higher-is-better. Keep new bench
+metric names consistent with those conventions.
+
+Exit codes: 0 = pass (or no baseline yet), 1 = regression, 2 = bad input.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def lower_is_better(name: str) -> bool:
+    return name.endswith("_ms") or "per_entry" in name or "per_read" in name
+
+
+def load_metrics(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        raise ValueError(f"{path}: no 'metrics' object")
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="previous run's BENCH_bus.json")
+    ap.add_argument("--current", required=True, help="this run's BENCH_bus.json")
+    ap.add_argument("--factor", type=float, default=2.0, help="allowed regression factor")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench gate: no baseline at {args.baseline}; passing (this run seeds it)")
+        return 0
+    try:
+        base = load_metrics(args.baseline)
+        cur = load_metrics(args.current)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench gate: unreadable input: {e}")
+        return 2
+
+    failures = []
+    for name in sorted(base):
+        b = base[name]
+        if name not in cur:
+            # A renamed/removed metric is legitimate bench evolution, and
+            # failing here would wedge CI (the baseline only updates on
+            # green runs). Warn; the next green run drops it from the
+            # baseline.
+            print(f"gone  {name}: in baseline, absent from current run (not gating)")
+            continue
+        c = cur[name]
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        if b <= 0 or c <= 0:
+            # Ratio undefined (a zero timing on a fast machine, say): note
+            # it but never gate on it.
+            print(f"skip  {name}: baseline={b} current={c} (non-positive)")
+            continue
+        # regression > 1 means "worse", whatever the metric's direction.
+        regression = (c / b) if lower_is_better(name) else (b / c)
+        verdict = "FAIL" if regression > args.factor else "ok"
+        print(f"{verdict:4}  {name}: baseline={b:.6g} current={c:.6g} regression={regression:.2f}x")
+        if regression > args.factor:
+            failures.append(
+                f"{name}: {regression:.2f}x worse than baseline "
+                f"({b:.6g} -> {c:.6g}, allowed {args.factor}x)"
+            )
+    for name in sorted(set(cur) - set(base)):
+        print(f"new   {name}: {cur[name]} (no baseline yet)")
+
+    if failures:
+        print(f"\nbench gate: {len(failures)} metric(s) regressed >{args.factor}x:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench gate: all headline metrics within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,9 @@
 //! positions ([`LogBackend::positions_for_type`]) instead of scanning and
 //! decoding the whole range.
 
+use super::checkpoint::CheckpointStats;
 use super::entry::{Entry, PayloadType};
+use crate::util::varint::{self, Reader};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -21,7 +23,13 @@ use std::time::Duration;
 /// (raw test bytes, foreign writers) bump `untyped`; while any such record
 /// exists the index answers `None` and callers fall back to scanning, so
 /// the index is never silently wrong.
-#[derive(Default)]
+///
+/// The index has a wire form ([`TypeIndex::to_bytes`] /
+/// [`TypeIndex::from_bytes`]) so the durable backend's checkpoint sidecar
+/// can persist it across reopen instead of rebuilding it by scanning:
+/// per-type position lists are dense ascending u64s, so they
+/// delta-encode to ~1 byte per record.
+#[derive(Clone, Default)]
 pub struct TypeIndex {
     by_tag: BTreeMap<u8, Vec<u64>>,
     untyped: u64,
@@ -64,6 +72,57 @@ impl TypeIndex {
 
     pub fn untyped_records(&self) -> u64 {
         self.untyped
+    }
+
+    /// Total positions indexed across all types (excludes `untyped`).
+    pub fn total_indexed(&self) -> u64 {
+        self.by_tag.values().map(|v| v.len() as u64).sum()
+    }
+
+    /// Highest indexed position, if any.
+    pub fn max_position(&self) -> Option<u64> {
+        self.by_tag.values().filter_map(|v| v.last().copied()).max()
+    }
+
+    /// Wire form: varint tag count; per tag (ascending) the tag byte, a
+    /// varint position count, the first position and then varint deltas;
+    /// finally the untyped counter. Framing (length prefix, checksum) is
+    /// the container's job — the checkpoint sidecar CRCs the whole file.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write_u64(&mut out, self.by_tag.len() as u64);
+        for (&tag, positions) in &self.by_tag {
+            out.push(tag);
+            varint::write_ascending(&mut out, positions);
+        }
+        varint::write_u64(&mut out, self.untyped);
+        out
+    }
+
+    /// Decode [`TypeIndex::to_bytes`]. `None` on truncation, trailing
+    /// garbage, out-of-order tags, or a non-ascending position list — a
+    /// checkpointed index is trusted to binary-search, so ordering is
+    /// validated here rather than assumed.
+    pub fn from_bytes(bytes: &[u8]) -> Option<TypeIndex> {
+        let mut r = Reader::new(bytes);
+        let n_tags = r.read_u64()?;
+        let mut by_tag = BTreeMap::new();
+        let mut prev_tag: Option<u8> = None;
+        for _ in 0..n_tags {
+            let tag = *r.read_exact(1)?.first()?;
+            if prev_tag.is_some_and(|p| p >= tag) {
+                return None;
+            }
+            prev_tag = Some(tag);
+            // read_ascending validates ordering, duplicates, overflow and
+            // the count-vs-remaining allocation bound.
+            by_tag.insert(tag, varint::read_ascending(&mut r)?);
+        }
+        let untyped = r.read_u64()?;
+        if !r.is_empty() {
+            return None;
+        }
+        Some(TypeIndex { by_tag, untyped })
     }
 }
 
@@ -141,6 +200,30 @@ pub trait LogBackend: Send + Sync {
 
     fn stats(&self) -> BackendStats;
 
+    /// Reopen/checkpoint counters, for backends with a checkpointed
+    /// reopen path (the durable file backend; namespaced views forward to
+    /// their shared backend). `None` means "no checkpoint machinery".
+    fn checkpoint_stats(&self) -> Option<CheckpointStats> {
+        None
+    }
+
+    /// Stash an opaque keyed blob alongside the log's durable state —
+    /// written into the checkpoint sidecar by backends that keep one, so
+    /// layers above the backend (the registry's namespace maps) recover
+    /// without rescanning. Backends without durable sidecars drop it:
+    /// their callers rebuild from the log as before, so persistence here
+    /// is an amortization, never a correctness dependency.
+    fn persist_aux(&self, key: &str, bytes: Vec<u8>) {
+        let _ = (key, bytes);
+    }
+
+    /// The last blob persisted under `key`, if this backend retains one
+    /// (loaded from a verified checkpoint sidecar on reopen).
+    fn load_aux(&self, key: &str) -> Option<Vec<u8>> {
+        let _ = key;
+        None
+    }
+
     /// Human label for figures ("mem", "durable", "anondb-geo").
     fn label(&self) -> String;
 
@@ -202,6 +285,61 @@ mod tests {
         assert_eq!(contiguous_runs(&[5]), vec![(5, 6)]);
         assert_eq!(contiguous_runs(&[1, 2, 3]), vec![(1, 4)]);
         assert_eq!(contiguous_runs(&[0, 2, 3, 7, 8, 9, 11]), vec![(0, 1), (2, 4), (7, 10), (11, 12)]);
+    }
+
+    #[test]
+    fn wire_form_roundtrips_and_preserves_queries() {
+        let mut ix = TypeIndex::new();
+        for (pos, t) in [
+            (0, PayloadType::Mail),
+            (1, PayloadType::Intent),
+            (5, PayloadType::Mail),
+            (130, PayloadType::Mail),
+            (131, PayloadType::Vote),
+        ] {
+            ix.note(pos, &frame(pos, t));
+        }
+        ix.note(200, b"raw bytes"); // untyped survives the trip too
+        let bytes = ix.to_bytes();
+        let d = TypeIndex::from_bytes(&bytes).expect("decodes");
+        assert_eq!(d.positions(PayloadType::Mail, 0, 1000), ix.positions(PayloadType::Mail, 0, 1000));
+        assert_eq!(d.untyped_records(), 1);
+        assert_eq!(d.counts(), ix.counts());
+        assert_eq!(d.total_indexed(), 5);
+        assert_eq!(d.max_position(), Some(131));
+        // Empty index roundtrips.
+        let empty = TypeIndex::from_bytes(&TypeIndex::new().to_bytes()).unwrap();
+        assert_eq!(empty.total_indexed(), 0);
+        assert_eq!(empty.max_position(), None);
+        assert_eq!(empty.positions(PayloadType::Mail, 0, 10), Some(vec![]));
+    }
+
+    #[test]
+    fn wire_form_rejects_structural_damage() {
+        let mut ix = TypeIndex::new();
+        for pos in 0..4 {
+            ix.note(pos, &frame(pos, PayloadType::Mail));
+        }
+        let good = ix.to_bytes();
+        assert!(TypeIndex::from_bytes(&good).is_some());
+        // Truncations.
+        for cut in 0..good.len() {
+            assert!(TypeIndex::from_bytes(&good[..cut]).is_none(), "truncation to {cut}");
+        }
+        // Trailing garbage.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(TypeIndex::from_bytes(&long).is_none());
+        // A zero delta (duplicate position) is rejected: hand-encode
+        // tag=Mail with positions [3, 3].
+        let mut bad = Vec::new();
+        crate::util::varint::write_u64(&mut bad, 1);
+        bad.push(PayloadType::Mail.tag());
+        crate::util::varint::write_u64(&mut bad, 2);
+        crate::util::varint::write_u64(&mut bad, 3);
+        crate::util::varint::write_u64(&mut bad, 0);
+        crate::util::varint::write_u64(&mut bad, 0);
+        assert!(TypeIndex::from_bytes(&bad).is_none(), "non-ascending positions accepted");
     }
 
     #[test]

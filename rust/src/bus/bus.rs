@@ -18,6 +18,7 @@
 
 use super::acl::{AclError, Grant, Role};
 use super::backend::{contiguous_runs, BackendStats, LogBackend};
+use super::checkpoint::CheckpointStats;
 use super::durable::DurableBackend;
 use super::entry::{Entry, Payload, PayloadType};
 use super::mem::MemBackend;
@@ -181,6 +182,14 @@ impl AgentBus {
 
     pub fn stats(&self) -> BackendStats {
         self.backend.stats()
+    }
+
+    /// Reopen/checkpoint counters of the backing log, when it has a
+    /// checkpointed reopen path (durable files and namespaced views over
+    /// them; `None` for mem/remote). `reopen_scanned_bytes` vs
+    /// `segment_bytes_at_open` is the reopen-amortization headline.
+    pub fn checkpoint_stats(&self) -> Option<CheckpointStats> {
+        self.backend.checkpoint_stats()
     }
 
     pub fn bytes_by_type(&self) -> BTreeMap<PayloadType, u64> {
@@ -816,6 +825,34 @@ mod tests {
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].payload.body.get_str("text"), Some("persisted"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checkpoint_stats_surface_through_the_bus() {
+        let mem = AgentBus::in_memory("m");
+        assert!(mem.checkpoint_stats().is_none(), "mem backend keeps no checkpoint");
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("bus-ckpt-{}.log", crate::util::ids::next_id()));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(format!("{}.ckpt", path.display()));
+        {
+            let backend = BusBackendKind::Durable(path.clone()).build().unwrap();
+            let bus = AgentBus::new("d", backend, Clock::sim());
+            let admin = bus.client("admin", Role::Admin);
+            for i in 0..24 {
+                admin.append(Mail, mail(&format!("{i}"))).unwrap();
+            }
+            bus.flush().unwrap();
+        }
+        let backend = BusBackendKind::Durable(path.clone()).build().unwrap();
+        let bus = AgentBus::new("d", backend, Clock::sim());
+        let s = bus.checkpoint_stats().expect("durable bus reports checkpoint stats");
+        assert!(s.sidecar_loaded);
+        assert_eq!(s.frames_from_checkpoint, 24);
+        assert_eq!(s.reopen_scanned_bytes, 0, "flush checkpointed the whole log");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(format!("{}.ckpt", path.display()));
     }
 
     #[test]

@@ -1,13 +1,12 @@
 //! Durable file backend (the paper's SQLite variant).
 //!
-//! One append-only segment file; each record is framed as
+//! One append-only segment file: a 32-byte preamble stamping the log's
+//! UUID (see [`super::checkpoint`]), then records framed as
 //! `[u32 len][u32 crc32][bytes]`, so the log survives process reboot (not
 //! disk loss — same guarantee the paper assigns its SQLite backend). An
-//! in-memory `(offset, len)` index makes reads O(1) per record;
-//! [`DurableBackend::open`] rebuilds the index by scanning the file and
-//! truncates a torn tail (crash-during-append recovery).
+//! in-memory `(offset, len)` index makes reads O(1) per record.
 //!
-//! Two hot-path properties matter for the bus overhead budget:
+//! Hot-path properties (PR 1/PR 2):
 //!
 //! * **Group commit** — [`LogBackend::append_batch`] writes all frames
 //!   with one `write_all` and one `fsync`, so durability cost is paid per
@@ -16,58 +15,102 @@
 //! * **Positioned reads** — reads use `read_exact_at` (pread), never the
 //!   shared file cursor, so a reader can never perturb where the next
 //!   append lands and readers don't pay seek-restore round-trips.
+//!
+//! Cold-path properties (this layer's overhaul):
+//!
+//! * **Checkpointed reopen** — [`DurableBackend::open`] first tries the
+//!   CRC-guarded `.ckpt` sidecar: if it verifies against the segment
+//!   (UUID, covered length, structural consistency, last-frame spot
+//!   check) the offset and per-type indexes are restored without reading
+//!   the checkpointed prefix, and only the tail since the checkpoint is
+//!   scanned — O(tail), not O(log). Any doubt falls back to the full
+//!   scan, which behaves exactly as before, then rewrites a fresh
+//!   sidecar. Note the trade this encodes: frames inside a verified
+//!   checkpoint were CRC-checked when written, and are *not* re-hashed on
+//!   reopen — [`DurableBackend::verify`] is the explicit full scrub for
+//!   callers that want bit-rot detection over the whole segment.
+//! * **Pluggable I/O** — every segment and sidecar operation goes through
+//!   a [`SegmentIo`], so crash points (torn batch write, failed rollback,
+//!   torn checkpoint write) are deterministically testable via
+//!   [`super::io::FaultIo`] instead of hand-picked truncations.
 
 use super::backend::{BackendStats, LogBackend, TypeIndex};
+use super::checkpoint::{
+    check_preamble, encode_preamble, fresh_uuid, Checkpoint, CheckpointStats, PreambleCheck,
+    PREAMBLE_LEN,
+};
 use super::entry::PayloadType;
+use super::io::{FsIo, SegmentIo};
 use crate::util::crc32;
+use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
-use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 pub struct DurableBackend {
     path: PathBuf,
+    ckpt_path: PathBuf,
+    io: Arc<dyn SegmentIo>,
     inner: Mutex<Inner>,
     /// fsync at every commit point — once per `append`, once per
     /// `append_batch` (disable to measure raw write cost; `flush` still
     /// syncs explicitly).
     pub sync_each_append: bool,
+    /// Write the checkpoint sidecar on `flush` and on drop (default on;
+    /// tests and benches turn it off to pin the full-scan reopen path or
+    /// to simulate a crash that outruns the final checkpoint).
+    auto_checkpoint: AtomicBool,
 }
 
 struct Inner {
     file: File,
+    /// This segment's identity, stamped in the preamble; 0 for legacy
+    /// preamble-less segments. The sidecar must present the same UUID.
+    uuid: u128,
+    /// Byte offset of the first frame (`PREAMBLE_LEN`, or 0 for legacy).
+    data_start: u64,
     /// `(frame byte offset, payload byte length)` per record.
     frames: Vec<(u64, u32)>,
     /// Per-[`PayloadType`] position index, maintained on append and
-    /// rebuilt by [`DurableBackend::open`]'s recovery scan (the scan
-    /// already reads every payload for its CRC, so classifying it is one
-    /// header peek away).
+    /// restored from the checkpoint (or rebuilt by the recovery scan) on
+    /// reopen.
     types: TypeIndex,
     write_pos: u64,
     stats: BackendStats,
+    ckpt_stats: CheckpointStats,
+    /// Opaque keyed blobs persisted through the sidecar for layers above
+    /// the backend (the registry's namespace maps).
+    aux: BTreeMap<String, Vec<u8>>,
+    /// False when the segment's preamble is damaged: the UUID is
+    /// unknowable, so no sidecar we write could ever be trusted by a
+    /// future open — writing one would just churn bytes and mislead the
+    /// `sidecar_rejected` stat on every reopen.
+    sidecar_writable: bool,
+    /// Frames (or aux blobs) appended since the last checkpoint write.
+    dirty: bool,
     /// Set when a failed commit could not be rolled back (the physical
     /// file no longer matches the index): all further appends refuse
     /// rather than silently interleave good frames with torn garbage.
+    /// Reads of the indexed prefix stay valid — the index only ever
+    /// points at bytes that were committed intact.
     poisoned: bool,
 }
 
-const FRAME_HEADER: usize = 8; // u32 len + u32 crc
+pub const FRAME_HEADER: usize = 8; // u32 len + u32 crc
 
-/// Read exactly `buf.len()` bytes at `offset` without touching the file
-/// cursor (pread on unix).
-#[cfg(unix)]
-fn read_exact_at(file: &mut File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-    use std::os::unix::fs::FileExt;
-    (&*file).read_exact_at(buf, offset)
+fn poisoned_err() -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::Other,
+        "durable log poisoned by an earlier unrecoverable I/O error",
+    )
 }
 
-/// Seek-based fallback off unix — safe because appends run in O_APPEND
-/// mode and position explicitly, both under the same lock as readers.
-#[cfg(not(unix))]
-fn read_exact_at(file: &mut File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-    use std::io::{Read, Seek, SeekFrom};
-    file.seek(SeekFrom::Start(offset))?;
-    file.read_exact(buf)
+/// `<log>.ckpt`, alongside the segment.
+fn sidecar_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".ckpt");
+    PathBuf::from(os)
 }
 
 fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
@@ -77,32 +120,102 @@ fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
 }
 
 impl DurableBackend {
-    /// Open (or create) the log at `path`, recovering the offset index and
-    /// truncating any torn tail.
+    /// Open (or create) the log at `path` with real filesystem I/O.
     pub fn open(path: impl AsRef<Path>) -> std::io::Result<DurableBackend> {
+        DurableBackend::open_with_io(path, Arc::new(FsIo))
+    }
+
+    /// Open with an explicit [`SegmentIo`] (fault injection in tests).
+    ///
+    /// Recovery order: read/stamp the preamble, adopt the sidecar if it
+    /// verifies, scan whatever the sidecar doesn't cover, truncate any
+    /// torn tail, and rewrite the sidecar if the one on disk didn't fully
+    /// describe the recovered log.
+    pub fn open_with_io(
+        path: impl AsRef<Path>,
+        io: Arc<dyn SegmentIo>,
+    ) -> std::io::Result<DurableBackend> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut file = OpenOptions::new().read(true).append(true).create(true).open(&path)?;
+        let ckpt_path = sidecar_path(&path);
+        let file = OpenOptions::new().read(true).append(true).create(true).open(&path)?;
+        let mut len = file.metadata()?.len();
 
-        // Scan existing records, rebuilding both the offset index and the
-        // per-type position index (the payload is already in hand for the
-        // CRC check; classifying it is one header peek).
-        let len = file.metadata()?.len();
-        let mut frames = Vec::new();
+        // Preamble: stamp fresh segments; classify existing heads. A
+        // damaged (bit-rotted) preamble keeps its frames readable at the
+        // fixed offset but makes the UUID unknowable, so no sidecar can
+        // be trusted against it.
+        let mut uuid;
+        let mut data_start;
+        let mut sidecar_writable = true;
+        if len == 0 {
+            uuid = fresh_uuid();
+            io.write_all(&file, &encode_preamble(uuid))?;
+            io.sync(&file)?;
+            data_start = PREAMBLE_LEN;
+            len = PREAMBLE_LEN;
+        } else if len >= PREAMBLE_LEN {
+            let mut head = [0u8; PREAMBLE_LEN as usize];
+            io.read_exact_at(&file, &mut head, 0)?;
+            match check_preamble(&head) {
+                PreambleCheck::Valid(u) => {
+                    uuid = u;
+                    data_start = PREAMBLE_LEN;
+                }
+                PreambleCheck::Damaged => {
+                    uuid = fresh_uuid(); // matches no sidecar, ever
+                    data_start = PREAMBLE_LEN;
+                    sidecar_writable = false; // and none we write would be trusted
+                }
+                PreambleCheck::Absent => {
+                    uuid = 0; // legacy segment: frames from byte 0
+                    data_start = 0;
+                }
+            }
+        } else {
+            // Shorter than a preamble: a legacy stub or a head torn
+            // mid-stamp. Scanned (and truncated) as a legacy segment.
+            uuid = 0;
+            data_start = 0;
+        }
+
+        let mut ckpt_stats = CheckpointStats { segment_bytes_at_open: len, ..Default::default() };
+        let mut frames: Vec<(u64, u32)> = Vec::new();
         let mut types = TypeIndex::new();
-        let mut pos = 0u64;
+        let mut aux: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        let mut scan_from = data_start;
+
+        if let Ok(bytes) = std::fs::read(&ckpt_path) {
+            match DurableBackend::try_adopt(&*io, &file, &bytes, uuid, data_start, len) {
+                Some((ck_frames, ck_types, ck_aux, ck_len)) => {
+                    ckpt_stats.sidecar_loaded = true;
+                    ckpt_stats.frames_from_checkpoint = ck_frames.len() as u64;
+                    frames = ck_frames;
+                    types = ck_types;
+                    aux = ck_aux;
+                    scan_from = ck_len;
+                }
+                None => ckpt_stats.sidecar_rejected = true,
+            }
+        }
+
+        // Scan the uncovered suffix, rebuilding (or extending) both
+        // indexes. The scan reads every payload for its CRC check, so
+        // classifying it for the type index is one header peek away.
+        ckpt_stats.reopen_scanned_bytes = len - scan_from;
+        let mut pos = scan_from;
         let mut header = [0u8; FRAME_HEADER];
         while pos + FRAME_HEADER as u64 <= len {
-            read_exact_at(&mut file, &mut header, pos)?;
+            io.read_exact_at(&file, &mut header, pos)?;
             let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
             let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
             if pos + FRAME_HEADER as u64 + rec_len as u64 > len {
                 break; // torn write: truncate below
             }
             let mut buf = vec![0u8; rec_len as usize];
-            read_exact_at(&mut file, &mut buf, pos + FRAME_HEADER as u64)?;
+            io.read_exact_at(&file, &mut buf, pos + FRAME_HEADER as u64)?;
             if crc32::hash(&buf) != crc {
                 break; // corrupt tail
             }
@@ -112,26 +225,177 @@ impl DurableBackend {
         }
         if pos < len {
             // Drop the torn/corrupt suffix so future appends are clean.
-            file.set_len(pos)?;
-            file.sync_data()?;
+            io.truncate(&file, pos)?;
+            io.sync(&file)?;
+        }
+        if pos == 0 && data_start == 0 {
+            // A legacy or torn-headed segment scanned down to nothing:
+            // the file is empty now, so adopt the preamble format.
+            uuid = fresh_uuid();
+            io.write_all(&file, &encode_preamble(uuid))?;
+            io.sync(&file)?;
+            data_start = PREAMBLE_LEN;
+            pos = PREAMBLE_LEN;
         }
 
-        Ok(DurableBackend {
+        let rewrite = ckpt_stats.sidecar_rejected
+            || frames.len() as u64 != ckpt_stats.frames_from_checkpoint;
+        let backend = DurableBackend {
             path,
+            ckpt_path,
+            io,
             inner: Mutex::new(Inner {
                 file,
+                uuid,
+                data_start,
                 frames,
                 types,
                 write_pos: pos,
                 stats: BackendStats::default(),
+                ckpt_stats,
+                aux,
+                sidecar_writable,
+                dirty: false,
                 poisoned: false,
             }),
             sync_each_append: true,
-        })
+            auto_checkpoint: AtomicBool::new(true),
+        };
+        if rewrite {
+            // Best effort: a failed sidecar write costs the next open a
+            // full scan, never correctness.
+            let _ = backend.write_checkpoint();
+        }
+        Ok(backend)
+    }
+
+    /// Verify a decoded sidecar against this segment. `None` (reject) on
+    /// any doubt; the caller falls back to the full scan.
+    ///
+    /// Identity caveat: legacy preamble-less segments all carry uuid 0,
+    /// so for them the UUID check only separates legacy from stamped
+    /// logs — the first/last-frame spot checks below are the remaining
+    /// defense against a sidecar copied between two legacy logs. Stamped
+    /// segments (everything written since the preamble landed) get the
+    /// full UUID guarantee.
+    fn try_adopt(
+        io: &dyn SegmentIo,
+        file: &File,
+        sidecar: &[u8],
+        uuid: u128,
+        data_start: u64,
+        file_len: u64,
+    ) -> Option<(Vec<(u64, u32)>, TypeIndex, BTreeMap<String, Vec<u8>>, u64)> {
+        let c = Checkpoint::decode(sidecar)?; // magic + CRC + structure
+        if c.uuid != uuid || c.data_start != data_start || c.log_len > file_len {
+            return None;
+        }
+        let frames = c.frames()?; // lengths must lay out to exactly log_len
+        let n = frames.len() as u64;
+        if c.types.total_indexed() + c.types.untyped_records() != n {
+            return None;
+        }
+        if c.types.max_position().is_some_and(|m| m >= n) {
+            return None;
+        }
+        // Spot checks: the first and last checkpointed frames must still
+        // be intact on disk (catches a swapped or rewritten segment that
+        // happens to be long enough). Two frame reads — O(1), not O(log).
+        let spot = |&(off, flen): &(u64, u32)| -> Option<()> {
+            let mut header = [0u8; FRAME_HEADER];
+            io.read_exact_at(file, &mut header, off).ok()?;
+            let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+            if rec_len != flen {
+                return None;
+            }
+            let mut buf = vec![0u8; flen as usize];
+            io.read_exact_at(file, &mut buf, off + FRAME_HEADER as u64).ok()?;
+            if crc32::hash(&buf) != crc {
+                return None;
+            }
+            Some(())
+        };
+        if let Some(last) = frames.last() {
+            spot(last)?;
+        }
+        if frames.len() > 1 {
+            spot(frames.first().unwrap())?;
+        }
+        Some((frames, c.types, c.aux, c.log_len))
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// The checkpoint sidecar's path (`<log>.ckpt`).
+    pub fn checkpoint_path(&self) -> &Path {
+        &self.ckpt_path
+    }
+
+    /// This segment's preamble UUID (0 for legacy preamble-less logs).
+    pub fn segment_uuid(&self) -> u128 {
+        self.inner.lock().unwrap().uuid
+    }
+
+    /// Enable/disable automatic checkpoint writes on `flush` and drop.
+    pub fn set_auto_checkpoint(&self, on: bool) {
+        self.auto_checkpoint.store(on, Ordering::Relaxed);
+    }
+
+    /// Snapshot the current durable state into the sidecar: fsync the
+    /// segment (the sidecar must never describe frames the disk might not
+    /// hold), then rewrite `<log>.ckpt` in place and fsync it. A crash
+    /// anywhere in between leaves either the old sidecar or a torn one —
+    /// both fall back to the full scan on reopen.
+    pub fn write_checkpoint(&self) -> std::io::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return Err(poisoned_err());
+        }
+        self.io.sync(&g.file)?;
+        if !g.sidecar_writable {
+            // Damaged preamble: the segment is durable (synced above) but
+            // a sidecar stamped with this session's throwaway UUID would
+            // be rejected by every future open — don't write one.
+            return Ok(());
+        }
+        let ck = Checkpoint {
+            uuid: g.uuid,
+            data_start: g.data_start,
+            log_len: g.write_pos,
+            frame_lens: g.frames.iter().map(|&(_, l)| l).collect(),
+            types: g.types.clone(),
+            aux: g.aux.clone(),
+        };
+        let bytes = ck.encode();
+        let f = self.io.create(&self.ckpt_path)?;
+        self.io.write_all(&f, &bytes)?;
+        self.io.sync(&f)?;
+        g.ckpt_stats.checkpoints_written += 1;
+        g.dirty = false;
+        Ok(())
+    }
+
+    /// Full bit-rot scrub: re-hash every indexed frame against its stored
+    /// CRC. Returns the first mismatching position, or `None` if the
+    /// whole segment verifies. This is the explicit O(log) check that
+    /// checkpointed reopen deliberately skips.
+    pub fn verify(&self) -> std::io::Result<Option<u64>> {
+        let g = self.inner.lock().unwrap();
+        let mut header = [0u8; FRAME_HEADER];
+        for (i, &(off, len)) in g.frames.iter().enumerate() {
+            self.io.read_exact_at(&g.file, &mut header, off)?;
+            let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+            let mut buf = vec![0u8; len as usize];
+            self.io.read_exact_at(&g.file, &mut buf, off + FRAME_HEADER as u64)?;
+            if rec_len != len || crc32::hash(&buf) != crc {
+                return Ok(Some(i as u64));
+            }
+        }
+        Ok(None)
     }
 
     /// Write one encoded blob holding `n` frames, fsync once (group
@@ -143,21 +407,18 @@ impl DurableBackend {
     fn commit(&self, blob: &[u8], lens: &[u32], payload_bytes: u64) -> std::io::Result<u64> {
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::Other,
-                "durable log poisoned by an earlier unrecoverable I/O error",
-            ));
+            return Err(poisoned_err());
         }
-        let wrote = g.file.write_all(blob);
+        let wrote = self.io.write_all(&g.file, blob);
         let committed = match wrote {
-            Ok(()) if self.sync_each_append => g.file.sync_data(),
+            Ok(()) if self.sync_each_append => self.io.sync(&g.file),
             other => other,
         };
         if let Err(e) = committed {
             // Roll the file back to the indexed state; if even that
             // fails, refuse all future appends.
             let indexed = g.write_pos;
-            if g.file.set_len(indexed).is_err() {
+            if self.io.truncate(&g.file, indexed).is_err() {
                 g.poisoned = true;
             }
             return Err(e);
@@ -175,7 +436,22 @@ impl DurableBackend {
         g.write_pos = off;
         g.stats.appended_records += lens.len() as u64;
         g.stats.appended_bytes += payload_bytes;
+        g.dirty = true;
         Ok(first)
+    }
+}
+
+impl Drop for DurableBackend {
+    /// Final checkpoint so the next open is O(1) after a clean shutdown.
+    /// Best effort by design: a crash (which never runs this) or a failed
+    /// write here leaves the previous sidecar, and reopen scans the tail
+    /// it doesn't cover.
+    fn drop(&mut self) {
+        let should = self.auto_checkpoint.load(Ordering::Relaxed)
+            && self.inner.lock().map(|g| g.dirty && !g.poisoned).unwrap_or(false);
+        if should {
+            let _ = self.write_checkpoint();
+        }
     }
 }
 
@@ -203,7 +479,16 @@ impl LogBackend for DurableBackend {
     }
 
     fn flush(&self) -> std::io::Result<()> {
-        self.inner.lock().unwrap().file.sync_data()
+        if self.auto_checkpoint.load(Ordering::Relaxed) {
+            // write_checkpoint fsyncs the segment before the sidecar.
+            self.write_checkpoint()
+        } else {
+            let g = self.inner.lock().unwrap();
+            if g.poisoned {
+                return Err(poisoned_err());
+            }
+            self.io.sync(&g.file)
+        }
     }
 
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
@@ -216,7 +501,7 @@ impl LogBackend for DurableBackend {
         for i in lo..hi {
             let (off, len) = g.frames[i as usize];
             let mut buf = vec![0u8; len as usize];
-            read_exact_at(&mut g.file, &mut buf, off + FRAME_HEADER as u64)?;
+            self.io.read_exact_at(&g.file, &mut buf, off + FRAME_HEADER as u64)?;
             out.push((i, buf));
         }
         g.stats.read_records += out.len() as u64;
@@ -235,6 +520,20 @@ impl LogBackend for DurableBackend {
         self.inner.lock().unwrap().stats
     }
 
+    fn checkpoint_stats(&self) -> Option<CheckpointStats> {
+        Some(self.inner.lock().unwrap().ckpt_stats)
+    }
+
+    fn persist_aux(&self, key: &str, bytes: Vec<u8>) {
+        let mut g = self.inner.lock().unwrap();
+        g.aux.insert(key.to_string(), bytes);
+        g.dirty = true;
+    }
+
+    fn load_aux(&self, key: &str) -> Option<Vec<u8>> {
+        self.inner.lock().unwrap().aux.get(key).cloned()
+    }
+
     fn label(&self) -> String {
         "durable".into()
     }
@@ -242,8 +541,9 @@ impl LogBackend for DurableBackend {
 
 #[cfg(test)]
 mod tests {
+    use super::super::io::{FaultIo, FaultMode};
     use super::*;
-    use std::io::{Seek, SeekFrom};
+    use std::io::{Seek, SeekFrom, Write};
     use std::sync::Arc;
 
     fn tmp(name: &str) -> PathBuf {
@@ -251,7 +551,17 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join(format!("{}-{}.log", name, crate::util::ids::next_id()));
         let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar_path(&p));
         p
+    }
+
+    /// A v1 entry frame with a fixed-size body (29 payload bytes), so
+    /// tests can do offset arithmetic.
+    fn entry_frame(pos: u64, t: PayloadType) -> Vec<u8> {
+        use crate::bus::entry::{Entry, Payload};
+        use crate::util::json::Json;
+        Entry { position: pos, realtime_ts: 0, payload: Payload::new(t, "w", Json::Null) }
+            .to_bytes()
     }
 
     #[test]
@@ -304,8 +614,40 @@ mod tests {
             f.seek(SeekFrom::Start(len - 1)).unwrap();
             f.write_all(&[0xFF]).unwrap();
         }
+        // Pin the full-scan path: a checkpointed reopen deliberately
+        // trusts the checkpointed prefix without re-hashing it (that's
+        // `verify()`'s job), and both records are inside the checkpoint.
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
         let b = DurableBackend::open(&p).unwrap();
         assert_eq!(b.tail(), 1, "corrupt record and everything after dropped");
+    }
+
+    #[test]
+    fn verify_scrubs_bit_rot_that_checkpointed_reopen_trusts() {
+        let p = tmp("scrub");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.append(b"aaaa").unwrap();
+            b.append(b"bbbb").unwrap();
+            b.append(b"cccc").unwrap();
+        }
+        // Rot the *middle* record; keep the sidecar so reopen uses it.
+        {
+            let mut f = OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            let mid_payload = PREAMBLE_LEN + (FRAME_HEADER as u64 + 4) + FRAME_HEADER as u64;
+            f.seek(SeekFrom::Start(mid_payload)).unwrap();
+            f.write_all(&[0xFF]).unwrap();
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded, "checkpoint accepted (rot is mid-prefix, spot checks are first/last)");
+        assert_eq!(b.tail(), 3, "checkpointed reopen does not re-hash the prefix");
+        assert_eq!(b.verify().unwrap(), Some(1), "the explicit scrub finds it");
+        // The full-scan path still detects it, as ever.
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.tail(), 1);
+        assert_eq!(b.verify().unwrap(), None, "after truncation the prefix is clean");
     }
 
     #[test]
@@ -357,7 +699,9 @@ mod tests {
     fn torn_tail_truncated_mid_batch() {
         // Crash mid-batch: the file ends inside the 3rd frame of a 4-frame
         // group commit. Reopen must keep the fully-written prefix (frames
-        // 1-2 of the batch) and truncate the rest cleanly.
+        // 1-2 of the batch) and truncate the rest cleanly. The sidecar
+        // written at drop covers the whole batch, so it is rejected
+        // (log_len beyond the truncated segment) and recovery full-scans.
         let p = tmp("torn-batch");
         {
             let b = DurableBackend::open(&p).unwrap();
@@ -379,6 +723,8 @@ mod tests {
             f.set_len(full - frame - 3).unwrap();
         }
         let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_rejected, "stale sidecar describes bytes the crash destroyed");
         assert_eq!(b.tail(), 3, "pre + first two batch frames survive");
         let r = b.read(0, 10).unwrap();
         assert_eq!(r[0].1, b"pre");
@@ -393,21 +739,23 @@ mod tests {
     #[test]
     fn corrupt_crc_truncated_mid_batch() {
         // Bit-rot inside a group-committed frame: everything from the
-        // corrupt frame on is dropped, the prefix survives.
+        // corrupt frame on is dropped, the prefix survives (full-scan
+        // path — the sidecar is removed, see `corrupt_crc_truncated`).
         let p = tmp("crc-batch");
         let frame2_payload_off;
         {
             let b = DurableBackend::open(&p).unwrap();
             b.append_batch(&[b"aaaa".to_vec(), b"bbbb".to_vec(), b"cccc".to_vec()])
                 .unwrap();
-            // Frame layout: 3 × (8-byte header + 4-byte payload).
-            frame2_payload_off = (FRAME_HEADER + 4) as u64 + FRAME_HEADER as u64;
+            // Frame layout: preamble, then 3 × (8-byte header + 4 bytes).
+            frame2_payload_off = PREAMBLE_LEN + (FRAME_HEADER + 4) as u64 + FRAME_HEADER as u64;
         }
         {
             let mut f = OpenOptions::new().read(true).write(true).open(&p).unwrap();
             f.seek(SeekFrom::Start(frame2_payload_off)).unwrap();
             f.write_all(&[0xFF]).unwrap();
         }
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
         let b = DurableBackend::open(&p).unwrap();
         assert_eq!(b.tail(), 1, "only the frame before the corruption survives");
         assert_eq!(b.read(0, 9).unwrap()[0].1, b"aaaa");
@@ -500,8 +848,9 @@ mod tests {
             // Live-maintained index covers both codecs.
             assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2, 4]));
         }
-        // Reopen: the index is rebuilt by the recovery scan, identically.
+        // Reopen: the index is restored from the checkpoint, identically.
         let b = DurableBackend::open(&p).unwrap();
+        assert!(b.checkpoint_stats().unwrap().sidecar_loaded);
         assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2, 4]));
         assert_eq!(b.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![1]));
         assert_eq!(b.positions_for_type(PayloadType::Vote, 0, 9), Some(vec![3]));
@@ -512,6 +861,13 @@ mod tests {
             assert_eq!(e.position, pos);
             assert_eq!(e.payload.body.get_u64("k"), Some(pos));
         }
+        drop(b);
+        // Without the sidecar, the recovery scan rebuilds the same index.
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        assert!(!b.checkpoint_stats().unwrap().sidecar_loaded);
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 2, 4]));
+        assert_eq!(b.positions_for_type(PayloadType::Vote, 0, 9), Some(vec![3]));
         let _ = std::fs::remove_file(&p);
     }
 
@@ -525,5 +881,272 @@ mod tests {
         drop(b);
         let b = DurableBackend::open(&p).unwrap();
         assert_eq!(b.tail(), 1);
+    }
+
+    #[test]
+    fn checkpointed_reopen_scans_only_the_tail() {
+        // The reopen-amortization acceptance shape at unit-test scale:
+        // checkpoint covers 512 records, 8 land after it, reopen must
+        // examine only the 8 — and a missing sidecar must reopen to the
+        // identical state via the full scan.
+        let p = tmp("ckpt-tail");
+        let tail_bytes: u64;
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            let recs: Vec<Vec<u8>> = (0..512)
+                .map(|i| entry_frame(i, PayloadType::ALL[(i % 9) as usize]))
+                .collect();
+            b.append_batch(&recs).unwrap();
+            b.flush().unwrap(); // sidecar now covers all 512
+            b.set_auto_checkpoint(false); // the "crash": no final sidecar
+            let mut tb = 0u64;
+            for i in 512..520 {
+                let f = entry_frame(i, PayloadType::ALL[(i % 9) as usize]);
+                tb += (FRAME_HEADER + f.len()) as u64;
+                b.append(&f).unwrap();
+            }
+            tail_bytes = tb;
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded && !s.sidecar_rejected);
+        assert_eq!(s.frames_from_checkpoint, 512);
+        assert_eq!(s.reopen_scanned_bytes, tail_bytes, "only the post-checkpoint tail");
+        assert!(
+            s.reopen_scanned_bytes * 8 < s.segment_bytes_at_open,
+            "scanned {} of {} segment bytes",
+            s.reopen_scanned_bytes,
+            s.segment_bytes_at_open
+        );
+        assert_eq!(b.tail(), 520);
+        let via_ckpt = b.read(0, 520).unwrap();
+        let mail_ckpt = b.positions_for_type(PayloadType::Mail, 0, 1000);
+        drop(b);
+        // Full-scan reopen (no sidecar) recovers bit-identical state.
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(!s.sidecar_loaded && !s.sidecar_rejected);
+        assert_eq!(s.reopen_scanned_bytes, s.segment_bytes_at_open - PREAMBLE_LEN);
+        assert_eq!(b.tail(), 520);
+        assert_eq!(b.read(0, 520).unwrap(), via_ckpt);
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 1000), mail_ckpt);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn sidecar_with_bad_crc_is_ignored_and_rewritten() {
+        let p = tmp("ckpt-crc");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            for i in 0..32 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+        } // drop writes the sidecar
+        let cp = sidecar_path(&p);
+        let mut bytes = std::fs::read(&cp).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&cp, &bytes).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_rejected && !s.sidecar_loaded);
+        assert_eq!(s.reopen_scanned_bytes, s.segment_bytes_at_open - PREAMBLE_LEN, "full scan");
+        assert_eq!(b.tail(), 32);
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 99), Some((0..32).collect()));
+        assert!(s.checkpoints_written >= 1, "fresh sidecar rewritten after the fallback");
+        drop(b);
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded, "the rewritten sidecar is good");
+        assert_eq!(s.reopen_scanned_bytes, 0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn sidecar_covering_bytes_beyond_truncated_segment_is_ignored() {
+        let p = tmp("ckpt-len");
+        let frame = (FRAME_HEADER + entry_frame(0, PayloadType::Mail).len()) as u64;
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            for i in 0..16 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+            b.flush().unwrap(); // sidecar covers all 16
+            b.set_auto_checkpoint(false);
+        }
+        // Crash-truncate into the 6th frame: 5 intact frames remain.
+        {
+            let f = OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            f.set_len(PREAMBLE_LEN + 5 * frame + 3).unwrap();
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_rejected, "log_len exceeds the truncated segment");
+        assert_eq!(b.tail(), 5, "clean frame prefix recovered");
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 99), Some((0..5).collect()));
+        drop(b);
+        let b = DurableBackend::open(&p).unwrap();
+        assert!(b.checkpoint_stats().unwrap().sidecar_loaded, "fresh sidecar rewritten");
+        assert_eq!(b.tail(), 5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn sidecar_from_another_log_is_ignored_by_uuid() {
+        // Two logs with byte-identical frames, so the foreign sidecar is
+        // structurally plausible — only the UUID gives it away.
+        let pa = tmp("uuid-a");
+        let pb = tmp("uuid-b");
+        for p in [&pa, &pb] {
+            let b = DurableBackend::open(p).unwrap();
+            for i in 0..8 {
+                b.append(&entry_frame(i, PayloadType::Intent)).unwrap();
+            }
+        }
+        std::fs::copy(sidecar_path(&pb), sidecar_path(&pa)).unwrap();
+        let b = DurableBackend::open(&pa).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_rejected && !s.sidecar_loaded, "foreign uuid distrusted");
+        assert_eq!(b.tail(), 8, "full scan recovers everything");
+        drop(b);
+        let b = DurableBackend::open(&pa).unwrap();
+        assert!(b.checkpoint_stats().unwrap().sidecar_loaded, "rewritten with our uuid");
+        for p in [&pa, &pb] {
+            let _ = std::fs::remove_file(p);
+            let _ = std::fs::remove_file(sidecar_path(p));
+        }
+    }
+
+    #[test]
+    fn legacy_preamble_less_segment_reopens_and_adopts_checkpoint() {
+        // A segment written before the preamble existed: frames from
+        // byte 0, no uuid. It must open as-is (uuid 0), index correctly,
+        // and still benefit from checkpoints on the next reopen.
+        let p = tmp("legacy");
+        {
+            let mut f = std::fs::File::create(&p).unwrap();
+            let mut blob = Vec::new();
+            for i in 0..6 {
+                encode_frame(&mut blob, &entry_frame(i, PayloadType::ALL[(i % 3) as usize]));
+            }
+            f.write_all(&blob).unwrap();
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.tail(), 6);
+        assert_eq!(b.segment_uuid(), 0, "legacy logs have no uuid");
+        let s = b.checkpoint_stats().unwrap();
+        assert!(!s.sidecar_loaded);
+        assert_eq!(s.reopen_scanned_bytes, s.segment_bytes_at_open, "no preamble: whole file");
+        assert_eq!(b.positions_for_type(PayloadType::InfIn, 0, 9), Some(vec![0, 3]));
+        assert_eq!(b.append(&entry_frame(6, PayloadType::Mail)).unwrap(), 6);
+        drop(b); // writes a uuid-0 sidecar
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded, "legacy logs checkpoint too");
+        assert_eq!(s.reopen_scanned_bytes, 0);
+        assert_eq!(b.tail(), 7);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn damaged_preamble_full_scans_and_stops_writing_sidecars() {
+        // Bit rot inside the preamble makes the UUID unknowable: reopen
+        // must distrust the (otherwise valid) sidecar, recover by full
+        // scan, and stop churning out sidecars no future open could ever
+        // trust — while the segment itself stays fully usable.
+        let p = tmp("damaged-preamble");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            for i in 0..4 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+            b.flush().unwrap();
+        }
+        {
+            use std::io::Read;
+            let mut f = OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            f.seek(SeekFrom::Start(20)).unwrap(); // inside the uuid field
+            let mut one = [0u8; 1];
+            f.read_exact(&mut one).unwrap();
+            f.seek(SeekFrom::Start(20)).unwrap();
+            f.write_all(&[one[0] ^ 0x55]).unwrap();
+        }
+        let sidecar_before = std::fs::read(sidecar_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        let s = b.checkpoint_stats().unwrap();
+        assert!(s.sidecar_rejected, "uuid unknowable: sidecar distrusted");
+        assert_eq!(b.tail(), 4, "full scan still recovers every frame");
+        assert_eq!(s.checkpoints_written, 0, "no untrustable sidecar written at open");
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0, 1, 2, 3]));
+        b.append(&entry_frame(4, PayloadType::Mail)).unwrap();
+        b.flush().unwrap(); // segment durability still works
+        drop(b); // and the drop-time checkpoint is skipped too
+        assert_eq!(
+            std::fs::read(sidecar_path(&p)).unwrap(),
+            sidecar_before,
+            "the on-disk sidecar was left exactly as found"
+        );
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar_path(&p));
+    }
+
+    #[test]
+    fn aux_blobs_persist_through_the_sidecar() {
+        let p = tmp("aux");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.append(b"rec").unwrap();
+            b.persist_aux("registry", vec![7, 7, 7]);
+            assert_eq!(b.load_aux("registry"), Some(vec![7, 7, 7]));
+            b.flush().unwrap();
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.load_aux("registry"), Some(vec![7, 7, 7]));
+        assert_eq!(b.load_aux("other"), None);
+        drop(b);
+        // A rejected sidecar drops its aux sections with it.
+        std::fs::remove_file(sidecar_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.load_aux("registry"), None);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn failed_rollback_poisons_appends_but_prefix_reads_survive() {
+        // FaultIo drives the double failure luck could never schedule:
+        // the batch blob write tears, then the rollback truncate fails.
+        // The backend must poison (no further appends) while indexed
+        // reads of the committed prefix keep working.
+        let p = tmp("poison");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+        for i in 0..4 {
+            b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+        }
+        // First batch record is large so the torn half-blob cannot
+        // contain a complete frame (reopen must recover exactly 4).
+        let batch =
+            vec![vec![0x7Bu8; 200], entry_frame(5, PayloadType::Vote), entry_frame(6, PayloadType::Vote)];
+        io.fail_after(1, FaultMode::Torn); // the blob write
+        io.fail_after(2, FaultMode::Fail); // the rollback truncate
+        let err = b.append_batch(&batch).unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        let err = b.append(b"more").unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert!(b.flush().is_err(), "flush refuses on a poisoned log");
+        assert_eq!(b.tail(), 4, "index never saw the failed batch");
+        assert_eq!(b.positions_for_type(PayloadType::Mail, 0, 10), Some(vec![0, 1, 2, 3]));
+        let r = b.read(0, 10).unwrap();
+        assert_eq!(r.len(), 4);
+        for (pos, bytes) in &r {
+            let e = crate::bus::entry::Entry::from_bytes(bytes).unwrap();
+            assert_eq!(e.position, *pos);
+        }
+        drop(b); // poisoned: must not write a sidecar describing torn bytes
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.tail(), 4, "reopen truncates the torn half-blob");
+        assert_eq!(b.append(b"clean").unwrap(), 4);
+        let _ = std::fs::remove_file(&p);
     }
 }

@@ -1,0 +1,301 @@
+//! The durable backend's file-operation seam.
+//!
+//! [`DurableBackend`](super::DurableBackend) performs every segment and
+//! sidecar operation through a [`SegmentIo`] — a five-verb trait
+//! (`create` / `write_all` / `sync` / `read_exact_at` / `truncate`) with
+//! two implementations:
+//!
+//! * [`FsIo`] — the real thing, a thin pass-through to `std::fs`;
+//! * [`FaultIo`] — a test double that counts every operation, records an
+//!   op-log, and can be armed to fail (or torn-write) at an exact
+//!   operation index. "Crash during batch commit", "crash during
+//!   checkpoint write" and "rollback fails mid-truncate" become
+//!   deterministic unit tests: run a scenario once unarmed to count its
+//!   operations, then re-run it once per operation index with a fault
+//!   armed there — every failure site, no luck involved.
+//!
+//! The seam is also the stepping stone for the cross-process registry
+//! work: a lease-holding coordinator slots in here without the backend's
+//! recovery logic noticing.
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// The operation kinds [`FaultIo`] counts and logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoOp {
+    /// Open-for-write-truncating (sidecar rewrites).
+    Create,
+    /// Append bytes to a file opened in append mode.
+    Write,
+    /// fsync (`sync_data`).
+    Sync,
+    /// Positioned read that never moves the file cursor.
+    Read,
+    /// `set_len` (torn-tail drop, failed-commit rollback).
+    Truncate,
+}
+
+/// File operations the durable backend needs, as a mockable seam. All
+/// methods take `&File`: appends rely on `O_APPEND`, reads are positioned,
+/// so no method needs (or may assume) exclusive handle access.
+pub trait SegmentIo: Send + Sync {
+    /// Open `path` for writing, creating it and truncating any previous
+    /// content (checkpoint sidecar rewrites).
+    fn create(&self, path: &Path) -> io::Result<File>;
+
+    fn write_all(&self, file: &File, buf: &[u8]) -> io::Result<()>;
+
+    fn sync(&self, file: &File) -> io::Result<()>;
+
+    fn read_exact_at(&self, file: &File, buf: &mut [u8], offset: u64) -> io::Result<()>;
+
+    fn truncate(&self, file: &File, len: u64) -> io::Result<()>;
+}
+
+/// The production [`SegmentIo`]: straight to the filesystem.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FsIo;
+
+impl SegmentIo for FsIo {
+    fn create(&self, path: &Path) -> io::Result<File> {
+        OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)
+    }
+
+    fn write_all(&self, mut file: &File, buf: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        file.write_all(buf)
+    }
+
+    fn sync(&self, file: &File) -> io::Result<()> {
+        file.sync_data()
+    }
+
+    /// pread on unix: never touches the shared cursor.
+    #[cfg(unix)]
+    fn read_exact_at(&self, file: &File, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)
+    }
+
+    /// Seek-based fallback off unix — safe because appends run in
+    /// O_APPEND mode and land at EOF regardless of the cursor, and the
+    /// backend serializes readers under its own lock.
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, mut file: &File, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(buf)
+    }
+
+    fn truncate(&self, file: &File, len: u64) -> io::Result<()> {
+        file.set_len(len)
+    }
+}
+
+/// How an armed fault manifests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The operation fails having done nothing.
+    Fail,
+    /// A write lands only a prefix of its buffer before failing (the torn
+    /// write a power cut produces). For non-write operations this behaves
+    /// like [`FaultMode::Fail`].
+    Torn,
+}
+
+/// One entry of the [`FaultIo`] op-log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpRecord {
+    /// 1-based global operation index.
+    pub index: u64,
+    pub op: IoOp,
+    /// Bytes written/read, or the target length for truncate; 0 otherwise.
+    pub bytes: u64,
+}
+
+struct FaultState {
+    counter: u64,
+    plan: std::collections::BTreeMap<u64, FaultMode>,
+    log: Vec<OpRecord>,
+}
+
+/// Deterministic fault-injecting [`SegmentIo`] wrapping [`FsIo`].
+///
+/// Operations are numbered 1, 2, 3, … across the whole backend lifetime
+/// (open scan included). [`FaultIo::ops`] reads the current count, so a
+/// test can snapshot it, run the scenario under test, and arm faults at
+/// `snapshot + k` for every `k` up to the scenario's measured op count.
+/// Each armed fault fires exactly once; unarmed operations pass through.
+pub struct FaultIo {
+    inner: FsIo,
+    state: Mutex<FaultState>,
+}
+
+impl FaultIo {
+    pub fn new() -> Arc<FaultIo> {
+        Arc::new(FaultIo {
+            inner: FsIo,
+            state: Mutex::new(FaultState {
+                counter: 0,
+                plan: std::collections::BTreeMap::new(),
+                log: Vec::new(),
+            }),
+        })
+    }
+
+    /// Arm a fault at absolute (1-based) operation index `index`.
+    pub fn fail_op(&self, index: u64, mode: FaultMode) {
+        self.state.lock().unwrap().plan.insert(index, mode);
+    }
+
+    /// Arm a fault at the `n`-th upcoming operation (`n = 1` is the very
+    /// next one).
+    pub fn fail_after(&self, n: u64, mode: FaultMode) {
+        let mut g = self.state.lock().unwrap();
+        let at = g.counter + n;
+        g.plan.insert(at, mode);
+    }
+
+    /// Operations performed so far.
+    pub fn ops(&self) -> u64 {
+        self.state.lock().unwrap().counter
+    }
+
+    /// The recorded op-log (every operation, faulted or not).
+    pub fn oplog(&self) -> Vec<OpRecord> {
+        self.state.lock().unwrap().log.clone()
+    }
+
+    /// Count this operation, log it, and report the fault armed for it
+    /// (if any).
+    fn enter(&self, op: IoOp, bytes: u64) -> (u64, Option<FaultMode>) {
+        let mut g = self.state.lock().unwrap();
+        g.counter += 1;
+        let index = g.counter;
+        g.log.push(OpRecord { index, op, bytes });
+        (index, g.plan.remove(&index))
+    }
+
+    fn injected(index: u64, op: IoOp) -> io::Error {
+        io::Error::new(io::ErrorKind::Other, format!("injected fault at op {index} ({op:?})"))
+    }
+}
+
+impl SegmentIo for FaultIo {
+    fn create(&self, path: &Path) -> io::Result<File> {
+        match self.enter(IoOp::Create, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Create)),
+            _ => self.inner.create(path),
+        }
+    }
+
+    fn write_all(&self, file: &File, buf: &[u8]) -> io::Result<()> {
+        match self.enter(IoOp::Write, buf.len() as u64) {
+            (i, Some(FaultMode::Fail)) => Err(FaultIo::injected(i, IoOp::Write)),
+            (i, Some(FaultMode::Torn)) => {
+                // Land a prefix, then "crash": exactly what a power cut
+                // mid-write leaves on disk.
+                self.inner.write_all(file, &buf[..buf.len() / 2])?;
+                Err(FaultIo::injected(i, IoOp::Write))
+            }
+            _ => self.inner.write_all(file, buf),
+        }
+    }
+
+    fn sync(&self, file: &File) -> io::Result<()> {
+        match self.enter(IoOp::Sync, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Sync)),
+            _ => self.inner.sync(file),
+        }
+    }
+
+    fn read_exact_at(&self, file: &File, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        match self.enter(IoOp::Read, buf.len() as u64) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Read)),
+            _ => self.inner.read_exact_at(file, buf, offset),
+        }
+    }
+
+    fn truncate(&self, file: &File, len: u64) -> io::Result<()> {
+        match self.enter(IoOp::Truncate, len) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Truncate)),
+            _ => self.inner.truncate(file, len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("io-{}-{}.bin", name, crate::util::ids::next_id()))
+    }
+
+    #[test]
+    fn counts_and_logs_every_op() {
+        let p = tmp("count");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap();
+        io.write_all(&f, b"hello world").unwrap();
+        io.sync(&f).unwrap();
+        let mut buf = [0u8; 5];
+        io.read_exact_at(&f, &mut buf, 6).unwrap();
+        assert_eq!(&buf, b"world");
+        io.truncate(&f, 5).unwrap();
+        assert_eq!(io.ops(), 5);
+        let log = io.oplog();
+        assert_eq!(
+            log.iter().map(|r| r.op).collect::<Vec<_>>(),
+            vec![IoOp::Create, IoOp::Write, IoOp::Sync, IoOp::Read, IoOp::Truncate]
+        );
+        assert_eq!(log[1].bytes, 11);
+        assert_eq!(log[4].bytes, 5);
+        assert_eq!(log[0].index, 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn armed_fault_fires_exactly_once() {
+        let p = tmp("once");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap();
+        io.fail_after(1, FaultMode::Fail);
+        let err = io.write_all(&f, b"x").unwrap_err();
+        assert!(err.to_string().contains("injected fault at op 2"), "{err}");
+        // The same operation index never fires twice; later ops pass.
+        io.write_all(&f, b"y").unwrap();
+        io.sync(&f).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"y");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_write_lands_half_the_buffer() {
+        let p = tmp("torn");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap();
+        io.write_all(&f, b"good").unwrap();
+        io.fail_after(1, FaultMode::Torn);
+        assert!(io.write_all(&f, b"ABCDEFGH").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"goodABCD", "prefix landed, suffix lost");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn absolute_and_relative_arming_agree() {
+        let p = tmp("arm");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap(); // op 1
+        io.fail_op(3, FaultMode::Fail);
+        io.write_all(&f, b"a").unwrap(); // op 2
+        assert!(io.sync(&f).is_err()); // op 3
+        assert_eq!(io.ops(), 3);
+        let _ = std::fs::remove_file(&p);
+    }
+}

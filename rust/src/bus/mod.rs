@@ -26,12 +26,22 @@
 //! O(matches) records and the deconstructed state machine's N readers
 //! decode each entry at most once. Legacy JSON-framed logs (the pre-binary
 //! codec) decode transparently.
+//!
+//! The durable cold path is **checkpointed**: a CRC-guarded sidecar
+//! ([`checkpoint`]) snapshots the offset/type indexes (and the registry's
+//! namespace maps) so reopen scans only the tail since the last
+//! checkpoint, falling back to the full scan on any doubt. All durable
+//! file operations run through a pluggable [`io::SegmentIo`], whose
+//! [`io::FaultIo`] test double makes every crash point deterministically
+//! reachable.
 
 pub mod acl;
 pub mod backend;
 pub mod bus;
+pub mod checkpoint;
 pub mod durable;
 pub mod entry;
+pub mod io;
 pub mod mem;
 pub mod registry;
 pub mod remote;
@@ -39,8 +49,10 @@ pub mod remote;
 pub use acl::{AclError, Grant, Role};
 pub use backend::{BackendStats, LogBackend, TypeIndex};
 pub use bus::{AgentBus, BusBackendKind, BusClient, BusError, DecodeStats};
+pub use checkpoint::{Checkpoint, CheckpointStats, PREAMBLE_LEN};
 pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
+pub use io::{FaultIo, FaultMode, FsIo, IoOp, SegmentIo};
 pub use mem::MemBackend;
 pub use registry::{BusRegistry, NamespacedBackend};
 pub use remote::{LatencyProfile, RemoteBackend};

@@ -22,12 +22,18 @@
 
 use super::backend::{contiguous_runs, BackendStats, LogBackend, TypeIndex};
 use super::bus::AgentBus;
+use super::checkpoint::CheckpointStats;
 use super::entry::PayloadType;
 use crate::util::clock::Clock;
+use crate::util::varint::{self, Reader};
 use std::collections::BTreeMap;
 use std::io;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Key of the registry's section in the shared backend's checkpoint
+/// sidecar (see `LogBackend::persist_aux`).
+const REGISTRY_AUX_KEY: &str = "registry-namespaces";
 
 /// Shared state behind every namespaced view.
 struct Shared {
@@ -83,6 +89,78 @@ fn ns_entry(scan: &mut ScanState, name: &str) -> Arc<NsState> {
     scan.namespaces.entry(name.to_string()).or_default().clone()
 }
 
+/// Serialize the whole scan state (ingest frontier + every namespace's
+/// global-position map and per-type index) for the shared backend's
+/// checkpoint sidecar: varint version, frontier, then per namespace the
+/// name, delta-encoded globals, and the [`TypeIndex`] wire form.
+/// Session counters (per-namespace stats) are deliberately not persisted
+/// — reopen has always started them at zero.
+fn serialize_scan(scan: &ScanState) -> Vec<u8> {
+    let mut out = Vec::new();
+    varint::write_u64(&mut out, 1); // version
+    varint::write_u64(&mut out, scan.ingested);
+    varint::write_u64(&mut out, scan.namespaces.len() as u64);
+    for (name, ns) in &scan.namespaces {
+        varint::write_u64(&mut out, name.len() as u64);
+        out.extend_from_slice(name.as_bytes());
+        varint::write_ascending(&mut out, &ns.globals.lock().unwrap());
+        let types = ns.types.lock().unwrap().to_bytes();
+        varint::write_u64(&mut out, types.len() as u64);
+        out.extend_from_slice(&types);
+    }
+    out
+}
+
+/// Decode [`serialize_scan`] output, distrusting it: any truncation,
+/// non-ascending global list, record mapped at or beyond the frontier,
+/// frontier beyond the actual shared tail, or index inconsistent with
+/// its namespace's record count rejects the whole blob — the caller then
+/// rebuilds by scanning from 0, which is always correct.
+fn deserialize_scan(bytes: &[u8], shared_tail: u64) -> Option<ScanState> {
+    let mut r = Reader::new(bytes);
+    if r.read_u64()? != 1 {
+        return None;
+    }
+    let ingested = r.read_u64()?;
+    if ingested > shared_tail {
+        return None;
+    }
+    let n = r.read_u64()?;
+    let mut namespaces = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = r.read_u64()? as usize;
+        let name = String::from_utf8(r.read_exact(name_len)?.to_vec()).ok()?;
+        // read_ascending validates ordering, duplicates, overflow and the
+        // allocation bound; ascending order means checking the last value
+        // covers the whole list against the frontier.
+        let globals = varint::read_ascending(&mut r)?;
+        if globals.last().is_some_and(|&g| g >= ingested) {
+            return None; // maps a record beyond the frontier
+        }
+        let count = globals.len() as u64;
+        let tlen = r.read_u64()? as usize;
+        let types = TypeIndex::from_bytes(r.read_exact(tlen)?)?;
+        if types.total_indexed() + types.untyped_records() != count {
+            return None;
+        }
+        if types.max_position().is_some_and(|m| m >= count) {
+            return None;
+        }
+        namespaces.insert(
+            name,
+            Arc::new(NsState {
+                globals: Mutex::new(globals),
+                types: Mutex::new(types),
+                stats: Mutex::new(BackendStats::default()),
+            }),
+        );
+    }
+    if !r.is_empty() {
+        return None;
+    }
+    Some(ScanState { ingested, namespaces })
+}
+
 /// Decode shared-log records in `[ingested, tail)` into the namespace
 /// maps. Called under the scan lock. The frontier advances per record,
 /// so a decode failure (foreign/corrupt record on the shared log) leaves
@@ -118,17 +196,38 @@ pub struct BusRegistry {
 }
 
 impl BusRegistry {
-    /// Wrap a shared backend. If the backend already holds records (a
-    /// reopened durable log), every tenant is recovered lazily on first
-    /// touch.
+    /// Wrap a shared backend. If the backend retained this registry's
+    /// section in its checkpoint sidecar (a reopened durable log closed
+    /// through [`BusRegistry::checkpoint`]/flush/drop), every tenant's
+    /// position map and per-type index are restored from it and only the
+    /// shared log's tail since the persisted frontier is ever scanned.
+    /// Otherwise — or if the persisted state fails validation — tenants
+    /// are recovered lazily on first touch by scanning, as before.
     pub fn new(backend: Arc<dyn LogBackend>) -> BusRegistry {
+        let scan = backend
+            .load_aux(REGISTRY_AUX_KEY)
+            .and_then(|bytes| deserialize_scan(&bytes, backend.tail()))
+            .unwrap_or(ScanState { ingested: 0, namespaces: BTreeMap::new() });
         BusRegistry {
-            shared: Arc::new(Shared {
-                backend,
-                scan: Mutex::new(ScanState { ingested: 0, namespaces: BTreeMap::new() }),
-            }),
+            shared: Arc::new(Shared { backend, scan: Mutex::new(scan) }),
             buses: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Persist the namespace maps into the shared backend's checkpoint
+    /// sidecar and flush it: one durable snapshot of the whole registry.
+    /// (Flushing any tenant's [`NamespacedBackend`] does the same.)
+    pub fn checkpoint(&self) -> io::Result<()> {
+        {
+            let scan = self.shared.scan.lock().unwrap();
+            self.shared.backend.persist_aux(REGISTRY_AUX_KEY, serialize_scan(&scan));
+        }
+        self.shared.backend.flush()
+    }
+
+    /// Reopen/checkpoint counters of the underlying shared backend.
+    pub fn checkpoint_stats(&self) -> Option<CheckpointStats> {
+        self.shared.backend.checkpoint_stats()
     }
 
     /// A raw namespaced backend view for `name` (creating the namespace
@@ -177,6 +276,18 @@ impl BusRegistry {
     /// Stats of the underlying shared backend.
     pub fn shared_stats(&self) -> BackendStats {
         self.shared.backend.stats()
+    }
+}
+
+impl Drop for BusRegistry {
+    /// Hand the latest namespace maps to the backend so its drop-time
+    /// checkpoint includes them (a no-op for backends without sidecars).
+    /// Best effort by design: a crash skips this and reopen falls back
+    /// to scanning from the last persisted frontier — or from 0.
+    fn drop(&mut self) {
+        if let Ok(scan) = self.shared.scan.lock() {
+            self.shared.backend.persist_aux(REGISTRY_AUX_KEY, serialize_scan(&scan));
+        }
     }
 }
 
@@ -260,7 +371,18 @@ impl LogBackend for NamespacedBackend {
     }
 
     fn flush(&self) -> io::Result<()> {
+        // Snapshot the registry's namespace maps into the backend's
+        // sidecar before the durability point, so a reopen after this
+        // flush recovers every tenant without rescanning the shared log.
+        {
+            let scan = self.shared.scan.lock().unwrap();
+            self.shared.backend.persist_aux(REGISTRY_AUX_KEY, serialize_scan(&scan));
+        }
         self.shared.backend.flush()
+    }
+
+    fn checkpoint_stats(&self) -> Option<CheckpointStats> {
+        self.shared.backend.checkpoint_stats()
     }
 
     fn positions_for_type(&self, ptype: PayloadType, start: u64, end: u64) -> Option<Vec<u64>> {
@@ -334,6 +456,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join(format!("{}-{}.log", name, crate::util::ids::next_id()));
         let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(format!("{}.ckpt", p.display()));
         p
     }
 
@@ -396,6 +519,122 @@ mod tests {
         assert_eq!(a.read(1, 2).unwrap()[0].1, b"a1");
         // New appends interleave correctly after recovery.
         assert_eq!(a.append(b"a2").unwrap(), 2);
+        assert_eq!(reg.shared_tail(), 5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn reopen_recovers_tenants_from_sidecar_without_rescanning() {
+        // A cleanly-closed registry persists its namespace maps through
+        // the shared backend's checkpoint sidecar; reopening must restore
+        // every tenant without reading a single shared-log record.
+        let p = tmp("registry-aux");
+        {
+            let shared = Arc::new(DurableBackend::open(&p).unwrap());
+            let reg = BusRegistry::new(Arc::clone(&shared));
+            let a = reg.backend("alpha").unwrap();
+            let b = reg.backend("beta").unwrap();
+            a.append(b"a0").unwrap();
+            b.append_batch(&[b"b0".to_vec(), b"b1".to_vec()]).unwrap();
+            a.append(b"a1").unwrap();
+        } // registry drop hands the maps to the backend's drop-time sidecar
+        let shared = Arc::new(DurableBackend::open(&p).unwrap());
+        assert!(shared.checkpoint_stats().unwrap().sidecar_loaded);
+        let reg = BusRegistry::new(Arc::clone(&shared));
+        let a = reg.backend("alpha").unwrap();
+        let b = reg.backend("beta").unwrap();
+        assert_eq!(a.tail(), 2);
+        assert_eq!(b.tail(), 2);
+        assert_eq!(
+            shared.stats().read_records, 0,
+            "tenant recovery came from the sidecar, not a shared-log scan"
+        );
+        // The maps are correct, not just present.
+        assert_eq!(a.read(0, 9).unwrap()[1].1, b"a1");
+        assert_eq!(b.read(0, 9).unwrap()[0].1, b"b0");
+        assert_eq!(a.append(b"a2").unwrap(), 2);
+        // Without the sidecar, the same reopen rescans — identically.
+        drop(reg);
+        drop(a);
+        drop(b);
+        drop(shared);
+        std::fs::remove_file(format!("{}.ckpt", p.display())).unwrap();
+        let reg = BusRegistry::new(Arc::new(DurableBackend::open(&p).unwrap()));
+        let a = reg.backend("alpha").unwrap();
+        assert_eq!(a.tail(), 3);
+        assert_eq!(a.read(2, 3).unwrap()[0].1, b"a2");
+        assert_eq!(reg.backend("beta").unwrap().tail(), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn crash_mid_batch_reopens_via_checkpoint_losing_only_the_torn_tail() {
+        // Two tenants, mixed v0/v1 codecs, checkpoint at a flush, then a
+        // crash that tears namespace beta's in-flight batch. Reopen must
+        // ride the flush-time checkpoint (not a full scan), replay alpha
+        // identically, and trim beta to the surviving batch prefix.
+        use crate::bus::entry::{Entry, Payload};
+        let entry = |pos: u64, t: PayloadType| Entry {
+            position: pos,
+            realtime_ts: 0,
+            payload: Payload::new(t, "w", Json::Null),
+        };
+        let p = tmp("registry-crash");
+        let cut;
+        {
+            let shared = Arc::new(DurableBackend::open(&p).unwrap());
+            let reg = BusRegistry::new(Arc::clone(&shared));
+            let a = reg.backend("alpha").unwrap();
+            let b = reg.backend("beta").unwrap();
+            a.append(&entry(0, PayloadType::Mail).to_json_bytes()).unwrap(); // legacy codec
+            a.append(&entry(1, PayloadType::Intent).to_bytes()).unwrap(); // binary codec
+            b.append(&entry(0, PayloadType::Mail).to_bytes()).unwrap();
+            a.flush().unwrap(); // sidecar: 3 shared records + registry maps
+            let batch: Vec<Vec<u8>> =
+                (1..4).map(|i| entry(i, PayloadType::Vote).to_bytes()).collect();
+            b.append_batch(&batch).unwrap();
+            // "Crash": the drop-time sidecar never happens…
+            shared.set_auto_checkpoint(false);
+            // …and the segment loses the 3rd batch frame plus 3 bytes of
+            // the 2nd (shared frame = 8B header + 1B ns-len + "beta" +
+            // payload).
+            let full = std::fs::metadata(&p).unwrap().len();
+            let rec = (8 + 1 + "beta".len() + entry(1, PayloadType::Vote).to_bytes().len()) as u64;
+            cut = full - rec - 3;
+        }
+        {
+            let f = std::fs::OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            f.set_len(cut).unwrap();
+        }
+        let shared = Arc::new(DurableBackend::open(&p).unwrap());
+        let s = shared.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded, "reopen rides the flush-time checkpoint");
+        assert!(
+            s.reopen_scanned_bytes < s.segment_bytes_at_open / 2,
+            "only the post-checkpoint tail was scanned ({} of {})",
+            s.reopen_scanned_bytes,
+            s.segment_bytes_at_open
+        );
+        assert_eq!(shared.tail(), 4, "3 checkpointed records + 1 surviving batch frame");
+        let reg = BusRegistry::new(Arc::clone(&shared));
+        assert!(reg.checkpoint_stats().unwrap().sidecar_loaded);
+        let a = reg.backend("alpha").unwrap();
+        assert_eq!(a.tail(), 2, "alpha replays identically");
+        let ra = a.read(0, 10).unwrap();
+        let a0 = Entry::from_bytes(&ra[0].1).unwrap();
+        let a1 = Entry::from_bytes(&ra[1].1).unwrap();
+        assert_eq!(a0.payload.ptype, PayloadType::Mail);
+        assert_eq!(a1.payload.ptype, PayloadType::Intent);
+        assert_eq!(a.positions_for_type(PayloadType::Mail, 0, 9), Some(vec![0]));
+        assert_eq!(a.positions_for_type(PayloadType::Intent, 0, 9), Some(vec![1]));
+        let b = reg.backend("beta").unwrap();
+        assert_eq!(b.tail(), 2, "beta keeps its prefix plus the surviving batch frame");
+        let rb = b.read(0, 10).unwrap();
+        assert_eq!(Entry::from_bytes(&rb[0].1).unwrap().payload.ptype, PayloadType::Mail);
+        assert_eq!(Entry::from_bytes(&rb[1].1).unwrap().payload.ptype, PayloadType::Vote);
+        assert_eq!(b.positions_for_type(PayloadType::Vote, 0, 9), Some(vec![1]));
+        // Life goes on: appends land after the trimmed tail.
+        assert_eq!(b.append(&entry(9, PayloadType::Mail).to_bytes()).unwrap(), 2);
         assert_eq!(reg.shared_tail(), 5);
         let _ = std::fs::remove_file(&p);
     }

@@ -12,6 +12,7 @@ pub mod regex_lite;
 pub mod rng;
 pub mod sha256;
 pub mod tables;
+pub mod varint;
 
 pub use clock::{Clock, SimClock};
 pub use json::Json;

@@ -1,0 +1,206 @@
+//! LEB128 variable-length u64 encoding (the delta codec the durable-log
+//! checkpoint sidecar uses for positions and lengths; protobuf's wire
+//! varint, not in the offline vendor set).
+//!
+//! Dense ascending position lists delta-encode to ~1 byte per entry, so a
+//! checkpointed index over millions of records stays megabytes, not tens
+//! of megabytes of raw u64s.
+
+/// Append `v` to `out` as an LEB128 varint (1..=10 bytes).
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Append a strictly-ascending u64 list: varint count, then the first
+/// value followed by varint deltas. Dense position lists (the per-type
+/// index, the registry's global maps) encode to ~1 byte per entry.
+pub fn write_ascending(out: &mut Vec<u8>, values: &[u64]) {
+    write_u64(out, values.len() as u64);
+    let mut prev = 0u64;
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(i == 0 || v > prev, "write_ascending given a non-ascending list");
+        write_u64(out, if i == 0 { v } else { v - prev });
+        prev = v;
+    }
+}
+
+/// Decode [`write_ascending`] output from `r`, validating as it goes:
+/// `None` on truncation, a zero delta (duplicate value), overflow, or a
+/// claimed count larger than the bytes that could possibly encode it
+/// (bounding the allocation before trusting the count). The returned
+/// list is guaranteed strictly ascending — callers may binary-search it.
+pub fn read_ascending(r: &mut Reader) -> Option<Vec<u64>> {
+    let count = r.read_u64()?;
+    if count > r.remaining() as u64 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count as usize);
+    let mut prev = 0u64;
+    for i in 0..count {
+        let d = r.read_u64()?;
+        if i != 0 && d == 0 {
+            return None; // duplicate value
+        }
+        let v = if i == 0 { d } else { prev.checked_add(d)? };
+        out.push(v);
+        prev = v;
+    }
+    Some(out)
+}
+
+/// Bounds-checked sequential reader over an encoded buffer. Every method
+/// returns `None` instead of panicking on truncated or over-long input,
+/// so a corrupt checkpoint can never take the process down.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Decode one LEB128 u64. Rejects encodings longer than 10 bytes and
+    /// any 10th byte carrying bits beyond the 64th (non-canonical tails).
+    pub fn read_u64(&mut self) -> Option<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = *self.buf.get(self.pos)?;
+            self.pos += 1;
+            if shift == 63 && b > 1 {
+                return None; // would overflow u64
+            }
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return Some(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return None;
+            }
+        }
+    }
+
+    /// The next `n` raw bytes, advancing past them.
+    pub fn read_exact(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_edges() {
+        let samples = [0u64, 1, 127, 128, 255, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        let mut buf = Vec::new();
+        for &v in &samples {
+            write_u64(&mut buf, v);
+        }
+        let mut r = Reader::new(&buf);
+        for &v in &samples {
+            assert_eq!(r.read_u64(), Some(v));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn encoding_is_minimal_length() {
+        let mut one = Vec::new();
+        write_u64(&mut one, 127);
+        assert_eq!(one.len(), 1);
+        let mut two = Vec::new();
+        write_u64(&mut two, 128);
+        assert_eq!(two.len(), 2);
+        let mut ten = Vec::new();
+        write_u64(&mut ten, u64::MAX);
+        assert_eq!(ten.len(), 10);
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 1 << 40);
+        buf.pop();
+        assert_eq!(Reader::new(&buf).read_u64(), None);
+        assert_eq!(Reader::new(&[]).read_u64(), None);
+    }
+
+    #[test]
+    fn overlong_and_overflowing_rejected() {
+        // Eleven continuation bytes: longer than any canonical u64.
+        let overlong = [0x80u8; 10];
+        assert_eq!(Reader::new(&overlong).read_u64(), None);
+        // Ten bytes whose last carries bits past 2^64.
+        let mut overflow = vec![0xFFu8; 9];
+        overflow.push(0x02);
+        assert_eq!(Reader::new(&overflow).read_u64(), None);
+        // u64::MAX itself is fine.
+        let mut max = Vec::new();
+        write_u64(&mut max, u64::MAX);
+        assert_eq!(Reader::new(&max).read_u64(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn ascending_lists_roundtrip_and_validate() {
+        for list in [vec![], vec![0], vec![5], vec![0, 1, 2, 3], vec![3, 700, 701, 1 << 40]] {
+            let mut buf = Vec::new();
+            write_ascending(&mut buf, &list);
+            let mut r = Reader::new(&buf);
+            assert_eq!(read_ascending(&mut r), Some(list));
+            assert!(r.is_empty());
+        }
+        // A zero delta (duplicate) is rejected.
+        let mut dup = Vec::new();
+        write_u64(&mut dup, 2);
+        write_u64(&mut dup, 7);
+        write_u64(&mut dup, 0);
+        assert_eq!(read_ascending(&mut Reader::new(&dup)), None);
+        // A count the remaining bytes cannot encode is rejected.
+        let mut short = Vec::new();
+        write_u64(&mut short, 90);
+        write_u64(&mut short, 1);
+        assert_eq!(read_ascending(&mut Reader::new(&short)), None);
+        // Overflowing delta chain is rejected.
+        let mut over = Vec::new();
+        write_u64(&mut over, 2);
+        write_u64(&mut over, u64::MAX);
+        write_u64(&mut over, 1);
+        assert_eq!(read_ascending(&mut Reader::new(&over)), None);
+    }
+
+    #[test]
+    fn read_exact_bounds() {
+        let mut r = Reader::new(b"abcdef");
+        assert_eq!(r.read_exact(3), Some(&b"abc"[..]));
+        assert_eq!(r.remaining(), 3);
+        assert_eq!(r.read_exact(4), None, "over-read rejected");
+        assert_eq!(r.read_exact(3), Some(&b"def"[..]));
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,296 @@
+//! Exhaustive crash coverage for the durable bus (ISSUE 3 satellites):
+//!
+//! * **Truncation matrix** — a fixture log (multiple group commits, mixed
+//!   v0/v1 codecs, checkpoint mid-way) is cut at **every** byte offset;
+//!   each cut must reopen to a clean frame prefix whose per-type index
+//!   matches an independent from-scratch classification, with the sidecar
+//!   accepted exactly when the cut spares the bytes it covers.
+//! * **Fault-site enumeration** — every I/O operation of `append_batch`
+//!   and of a checkpoint write is failed (cleanly and torn) via
+//!   [`FaultIo`]; op counts are *measured*, not assumed, so no site is
+//!   sampled away.
+
+use logact::bus::{
+    DurableBackend, Entry, FaultIo, FaultMode, IoOp, LogBackend, Payload, PayloadType,
+    PREAMBLE_LEN,
+};
+use logact::util::json::Json;
+use std::path::PathBuf;
+
+/// `[u32 len][u32 crc]` — mirrors `bus::durable::FRAME_HEADER`.
+const FRAME_HEADER: u64 = 8;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logact-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("crash-{}-{}.log", name, std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(format!("{}.ckpt", p.display()));
+    p
+}
+
+fn sidecar(p: &PathBuf) -> PathBuf {
+    PathBuf::from(format!("{}.ckpt", p.display()))
+}
+
+fn entry_bytes(pos: u64, legacy_codec: bool) -> Vec<u8> {
+    let e = Entry {
+        position: pos,
+        realtime_ts: 1_000 + pos,
+        payload: Payload::new(
+            PayloadType::ALL[(pos % 9) as usize],
+            "writer",
+            Json::obj(vec![("i", Json::Int(pos as i64))]),
+        ),
+    };
+    if legacy_codec {
+        e.to_json_bytes()
+    } else {
+        e.to_bytes()
+    }
+}
+
+#[test]
+fn every_truncation_point_recovers_a_clean_indexed_prefix() {
+    let p = tmp("matrix");
+    let cp = sidecar(&p);
+
+    // Fixture: 48 records in varied-size group commits, checkpoint, then
+    // 24 more past it (so cuts land on both sides of the sidecar's
+    // coverage). Every 5th record uses the legacy JSON codec.
+    let n_ckpt = 48u64;
+    let n_total = 72u64;
+    {
+        let mut b = DurableBackend::open(&p).unwrap();
+        b.sync_each_append = false;
+        let mut pos = 0u64;
+        let mut batch_size = 1u64;
+        while pos < n_total {
+            // Batches never straddle the checkpoint record, so the flush
+            // below covers exactly the first `n_ckpt` frames.
+            let cap = if pos < n_ckpt { n_ckpt - pos } else { n_total - pos };
+            let take = batch_size.min(cap);
+            let recs: Vec<Vec<u8>> =
+                (0..take).map(|k| entry_bytes(pos + k, (pos + k) % 5 == 0)).collect();
+            b.append_batch(&recs).unwrap();
+            pos += take;
+            batch_size = batch_size % 7 + 2; // 1,3,5,7,2,4,6,8,3,…
+            if pos == n_ckpt {
+                b.flush().unwrap(); // sidecar covers exactly the first 48
+                b.set_auto_checkpoint(false); // nothing newer ever written
+            }
+        }
+    }
+    let seg = std::fs::read(&p).unwrap();
+    let side = std::fs::read(&cp).unwrap();
+
+    // Independent parse of the segment: frame end offsets + per-frame
+    // payload type, straight off the bytes (no backend involved).
+    let mut frame_ends: Vec<u64> = Vec::new();
+    let mut frame_types: Vec<PayloadType> = Vec::new();
+    let mut frame_payloads: Vec<Vec<u8>> = Vec::new();
+    {
+        let mut off = PREAMBLE_LEN as usize;
+        while off + FRAME_HEADER as usize <= seg.len() {
+            let len =
+                u32::from_le_bytes(seg[off..off + 4].try_into().unwrap()) as usize;
+            let body = &seg[off + 8..off + 8 + len];
+            let e = Entry::from_bytes(body).expect("fixture frames all decode");
+            frame_types.push(e.payload.ptype);
+            frame_payloads.push(body.to_vec());
+            off += 8 + len;
+            frame_ends.push(off as u64);
+        }
+        assert_eq!(frame_ends.len() as u64, n_total);
+    }
+    let ckpt_len = frame_ends[(n_ckpt - 1) as usize]; // flush happened exactly here
+    let seg_len = seg.len();
+    assert!(seg_len <= 64 * 1024, "fixture stays bounded (~64 KiB) so the matrix is fast");
+    assert!(seg_len > 3_000, "fixture is non-trivial ({seg_len} bytes)");
+
+    let mut cases = 0u64;
+    for t in 0..=seg_len {
+        std::fs::write(&p, &seg[..t]).unwrap();
+        std::fs::write(&cp, &side).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+
+        // Clean frame prefix: exactly the frames wholly inside the cut.
+        let expected = frame_ends.iter().filter(|&&e| e <= t as u64).count() as u64;
+        assert_eq!(b.tail(), expected, "cut at byte {t}");
+
+        // Rebuilt index == from-scratch classification of that prefix.
+        for ty in PayloadType::ALL {
+            let want: Vec<u64> = (0..expected)
+                .filter(|&i| frame_types[i as usize] == ty)
+                .collect();
+            assert_eq!(
+                b.positions_for_type(ty, 0, u64::MAX),
+                Some(want),
+                "cut at byte {t}, type {ty}"
+            );
+        }
+
+        // The last surviving record reads back byte-identical.
+        if expected > 0 {
+            let r = b.read(expected - 1, expected).unwrap();
+            assert_eq!(r[0].1, frame_payloads[(expected - 1) as usize], "cut at byte {t}");
+        }
+
+        // Sidecar accept/reject boundary is exact: accepted iff the cut
+        // spares every byte the checkpoint covers.
+        let s = b.checkpoint_stats().unwrap();
+        if t as u64 >= ckpt_len {
+            assert!(s.sidecar_loaded, "cut at byte {t}: sidecar should be trusted");
+            assert_eq!(s.frames_from_checkpoint, n_ckpt);
+            assert_eq!(
+                s.reopen_scanned_bytes,
+                t as u64 - ckpt_len,
+                "cut at byte {t}: scan must start at the checkpoint"
+            );
+        } else {
+            assert!(!s.sidecar_loaded, "cut at byte {t}: sidecar covers destroyed bytes");
+        }
+        cases += 1;
+    }
+    assert_eq!(cases, seg_len as u64 + 1, "every truncation point covered, none sampled");
+
+    // Full-length sanity: nothing lost, everything decodes.
+    std::fs::write(&p, &seg).unwrap();
+    std::fs::write(&cp, &side).unwrap();
+    let b = DurableBackend::open(&p).unwrap();
+    assert_eq!(b.tail(), n_total);
+    for (pos, bytes) in b.read(0, n_total).unwrap() {
+        let e = Entry::from_bytes(&bytes).unwrap();
+        assert_eq!(e.position, pos);
+    }
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&cp);
+}
+
+fn prefill(b: &DurableBackend, n: u64) {
+    for i in 0..n {
+        b.append(&entry_bytes(i, false)).unwrap();
+    }
+}
+
+fn batch_records() -> Vec<Vec<u8>> {
+    (100..104).map(|i| entry_bytes(i, false)).collect()
+}
+
+#[test]
+fn every_append_batch_fault_site_recovers_deterministically() {
+    // Measure: how many I/O operations does one group commit perform?
+    let ops_per_batch;
+    {
+        let p = tmp("batch-ops");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+        prefill(&b, 3);
+        let before = io.ops();
+        b.append_batch(&batch_records()).unwrap();
+        ops_per_batch = io.ops() - before;
+        assert_eq!(ops_per_batch, 2, "group commit = one blob write + one fsync");
+        drop(b);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    // Enumerate: every site × {clean failure, torn write}.
+    for k in 1..=ops_per_batch {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let p = tmp(&format!("batch-site-{k}-{:?}", mode));
+            let io = FaultIo::new();
+            let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            prefill(&b, 3);
+            let before = io.ops();
+            io.fail_op(before + k, mode);
+            let err = b.append_batch(&batch_records()).unwrap_err();
+            assert!(err.to_string().contains("injected"), "site {k} {mode:?}: {err}");
+
+            // The rollback ran immediately after the failed op…
+            let log = io.oplog();
+            assert_eq!(
+                log[(before + k) as usize].op,
+                IoOp::Truncate,
+                "site {k} {mode:?}: rollback must follow the failure"
+            );
+            // …and succeeded: not poisoned, index == pre-batch state.
+            assert_eq!(b.tail(), 3, "site {k} {mode:?}");
+            assert_eq!(b.read(0, 9).unwrap().len(), 3);
+            assert_eq!(b.append(&entry_bytes(3, false)).unwrap(), 3, "appends continue");
+            drop(b);
+
+            // Disk agrees after a clean reopen: no trace of the batch.
+            let b = DurableBackend::open(&p).unwrap();
+            assert_eq!(b.tail(), 4, "site {k} {mode:?}: reopen");
+            for (pos, bytes) in b.read(0, 9).unwrap() {
+                assert_eq!(Entry::from_bytes(&bytes).unwrap().position, pos);
+            }
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
+    }
+}
+
+#[test]
+fn every_checkpoint_write_fault_site_leaves_a_recoverable_log() {
+    // Measure: how many I/O operations does one flush (checkpoint write)
+    // perform?
+    let ops_per_flush;
+    {
+        let p = tmp("ckpt-ops");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+        prefill(&b, 6);
+        let before = io.ops();
+        b.flush().unwrap();
+        ops_per_flush = io.ops() - before;
+        assert_eq!(ops_per_flush, 4, "segment fsync + sidecar create/write/fsync");
+        drop(b);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar(&p));
+    }
+
+    for k in 1..=ops_per_flush {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let p = tmp(&format!("ckpt-site-{k}-{:?}", mode));
+            let io = FaultIo::new();
+            let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            prefill(&b, 4);
+            b.flush().unwrap(); // a good checkpoint covering 4 records
+            prefill_from(&b, 4, 8);
+            let before = io.ops();
+            io.fail_op(before + k, mode);
+            assert!(b.flush().is_err(), "site {k} {mode:?}");
+            // Crash: the process dies here, so the drop-time checkpoint
+            // retry must not paper over the failure.
+            b.set_auto_checkpoint(false);
+            drop(b);
+
+            // Whatever the sidecar is now — the old one, empty, or torn —
+            // reopen recovers all 8 records.
+            let b = DurableBackend::open(&p).unwrap();
+            assert_eq!(b.tail(), 8, "site {k} {mode:?}: no record may be lost");
+            for (pos, bytes) in b.read(0, 9).unwrap() {
+                assert_eq!(Entry::from_bytes(&bytes).unwrap().position, pos);
+            }
+            for ty in PayloadType::ALL {
+                let want: Vec<u64> = (0..8).filter(|&i| PayloadType::ALL[(i % 9) as usize] == ty).collect();
+                assert_eq!(b.positions_for_type(ty, 0, 99), Some(want), "site {k} {mode:?}");
+            }
+            drop(b); // that open rewrote a good sidecar wherever needed
+            let b = DurableBackend::open(&p).unwrap();
+            let s = b.checkpoint_stats().unwrap();
+            assert!(s.sidecar_loaded, "site {k} {mode:?}: self-healed sidecar");
+            assert_eq!(s.reopen_scanned_bytes, 0);
+            assert_eq!(b.tail(), 8);
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
+    }
+}
+
+fn prefill_from(b: &DurableBackend, from: u64, to: u64) {
+    for i in from..to {
+        b.append(&entry_bytes(i, false)).unwrap();
+    }
+}
