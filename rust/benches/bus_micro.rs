@@ -12,6 +12,9 @@
 //!   1-in-9 filter (the read-path overhaul's acceptance number);
 //! * **decode-once** — N components replaying one log share each
 //!   materialized `Arc<Entry>` instead of re-parsing it N times;
+//! * **lint scrub** — the offline `logact lint` pass (CRC walk + decode +
+//!   protocol walk) over a 100k-record log, bounding what a CI integrity
+//!   gate costs;
 //! * **codec** — binary v1 frames vs the legacy JSON frames,
 //!   encode/decode throughput and bytes per entry.
 //!
@@ -422,6 +425,66 @@ fn bench_reopen(t: &mut Table, n: u64) -> (f64, f64, f64) {
     (ckpt_open.as_secs_f64() * 1e3, full_open.as_secs_f64() * 1e3, speedup)
 }
 
+/// Offline lint scrub over a checkpointed durable log: the full-file CRC
+/// walk + entry decode + protocol walk behind `logact lint`. The fixture
+/// is Mail-only so the protocol pass has nothing to report — the scrub
+/// must come back silent, which doubles as an end-to-end clean-fixture
+/// check. Returns (lint_ms, mb_per_s).
+fn bench_lint_scan(t: &mut Table, n: u64) -> (f64, f64) {
+    let p = std::env::temp_dir().join(format!("logact-bus-lintscan-{}.log", std::process::id()));
+    let cp = std::path::PathBuf::from(format!("{}.ckpt", p.display()));
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&cp);
+    {
+        let mut b = DurableBackend::open(&p).unwrap();
+        b.sync_each_append = false; // building the fixture, not measuring appends
+        let body = Json::obj(vec![("data", Json::str("x".repeat(48)))]);
+        let mut pos = 0u64;
+        while pos < n {
+            let chunk = (n - pos).min(1024);
+            let frames: Vec<Vec<u8>> = (0..chunk)
+                .map(|k| {
+                    Entry {
+                        position: pos + k,
+                        realtime_ts: 0,
+                        payload: Payload::new(PayloadType::Mail, "bench-writer", body.clone()),
+                    }
+                    .to_bytes()
+                })
+                .collect();
+            b.append_batch(&frames).unwrap();
+            pos += chunk;
+        }
+        b.flush().unwrap(); // sidecar covers the whole log
+    }
+    let seg_bytes = std::fs::metadata(&p).unwrap().len();
+
+    let mut best = Duration::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let report = logact::lint::lint_log_file(&p).unwrap();
+        best = best.min(t0.elapsed());
+        assert!(
+            report.findings.is_empty(),
+            "clean fixture must lint clean, got {:?}",
+            report.codes()
+        );
+    }
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&cp);
+
+    let ms = best.as_secs_f64() * 1e3;
+    let mbs = seg_bytes as f64 / 1e6 / best.as_secs_f64().max(1e-9);
+    t.row(&[
+        "lint scrub (crc + decode + protocol)".to_string(),
+        format!("{n}"),
+        format!("{:.1}MB", seg_bytes as f64 / 1e6),
+        format!("{ms:.1}ms"),
+        format!("{mbs:.0}MB/s"),
+    ]);
+    (ms, mbs)
+}
+
 /// Binary v1 frames vs legacy JSON frames: encode + decode throughput and
 /// frame size. Returns (bin_enc, json_enc, bin_dec, json_dec) in
 /// k-records/s.
@@ -578,6 +641,19 @@ fn main() {
     metrics.put("reopen_checkpoint_ms", ck_ms);
     metrics.put("reopen_fullscan_ms", full_ms);
     metrics.put("reopen_speedup", ro_speedup);
+
+    let mut ls = Table::new(
+        "lint scrub — offline integrity + protocol walk over a durable log",
+        &["mode", "records", "segment", "lint time", "throughput"],
+    );
+    let (lint_ms, lint_mbs) = bench_lint_scan(&mut ls, 100_000);
+    ls.emit("bus_lint_scan");
+    println!(
+        "lint scrub: 100k records in {lint_ms:.1}ms ({lint_mbs:.0}MB/s) — strictly read-only \
+         (open_read + positioned reads), so it is safe to point at a live log's segment"
+    );
+    metrics.put("lint_scan_ms_100k", lint_ms);
+    metrics.put("lint_scan_mb_per_s", lint_mbs);
 
     let mut cd = Table::new(
         "entry codec — binary v1 vs legacy JSON frames",

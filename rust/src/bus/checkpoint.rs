@@ -38,6 +38,16 @@ use super::backend::TypeIndex;
 use crate::util::crc32;
 use crate::util::varint::{self, Reader};
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The sidecar's conventional location: `<log>.ckpt`, alongside the
+/// segment. Shared by the durable backend (which writes it) and the log
+/// linter (which audits it without opening the backend).
+pub fn sidecar_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".ckpt");
+    PathBuf::from(os)
+}
 
 /// First 8 bytes of every post-PR segment file. No valid legacy segment
 /// collides: a legacy file starts with a `u32` frame length, and these

@@ -36,14 +36,14 @@
 
 use super::backend::{BackendStats, LogBackend, TypeIndex};
 use super::checkpoint::{
-    check_preamble, encode_preamble, fresh_uuid, Checkpoint, CheckpointStats, PreambleCheck,
-    PREAMBLE_LEN,
+    check_preamble, encode_preamble, fresh_uuid, sidecar_path, Checkpoint, CheckpointStats,
+    PreambleCheck, PREAMBLE_LEN,
 };
 use super::entry::PayloadType;
 use super::io::{FsIo, SegmentIo};
 use crate::util::crc32;
 use std::collections::BTreeMap;
-use std::fs::{File, OpenOptions};
+use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -106,13 +106,6 @@ fn poisoned_err() -> std::io::Error {
     )
 }
 
-/// `<log>.ckpt`, alongside the segment.
-fn sidecar_path(path: &Path) -> PathBuf {
-    let mut os = path.as_os_str().to_os_string();
-    os.push(".ckpt");
-    PathBuf::from(os)
-}
-
 fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32::hash(bytes).to_le_bytes());
@@ -137,11 +130,11 @@ impl DurableBackend {
     ) -> std::io::Result<DurableBackend> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+            io.create_dir_all(dir)?;
         }
         let ckpt_path = sidecar_path(&path);
-        let file = OpenOptions::new().read(true).append(true).create(true).open(&path)?;
-        let mut len = file.metadata()?.len();
+        let file = io.open_log(&path)?;
+        let mut len = io.file_len(&file)?;
 
         // Preamble: stamp fresh segments; classify existing heads. A
         // damaged (bit-rotted) preamble keeps its frames readable at the
@@ -187,7 +180,7 @@ impl DurableBackend {
         let mut aux: BTreeMap<String, Vec<u8>> = BTreeMap::new();
         let mut scan_from = data_start;
 
-        if let Ok(bytes) = std::fs::read(&ckpt_path) {
+        if let Ok(bytes) = io.read_file(&ckpt_path) {
             match DurableBackend::try_adopt(&*io, &file, &bytes, uuid, data_start, len) {
                 Some((ck_frames, ck_types, ck_aux, ck_len)) => {
                     ckpt_stats.sidecar_loaded = true;
@@ -378,21 +371,23 @@ impl DurableBackend {
         Ok(())
     }
 
-    /// Full bit-rot scrub: re-hash every indexed frame against its stored
-    /// CRC. Returns the first mismatching position, or `None` if the
-    /// whole segment verifies. This is the explicit O(log) check that
-    /// checkpointed reopen deliberately skips.
+    /// Full bit-rot scrub: re-walk and re-hash every frame the index
+    /// covers against its stored CRC. Returns the first position whose
+    /// on-disk frame no longer matches the index (offset, length or CRC),
+    /// or `None` if the whole segment verifies. This is the explicit
+    /// O(log) check that checkpointed reopen deliberately skips.
+    ///
+    /// There is exactly one integrity-scan implementation in the crate:
+    /// this method is a thin wrapper over the log linter's frame scrub
+    /// ([`crate::lint::scrub::scan_frames`]) — `logact lint` sees
+    /// precisely what `verify()` sees.
     pub fn verify(&self) -> std::io::Result<Option<u64>> {
         let g = self.inner.lock().unwrap();
-        let mut header = [0u8; FRAME_HEADER];
+        let scan = crate::lint::scrub::scan_frames(&*self.io, &g.file, g.data_start, g.write_pos)?;
         for (i, &(off, len)) in g.frames.iter().enumerate() {
-            self.io.read_exact_at(&g.file, &mut header, off)?;
-            let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
-            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
-            let mut buf = vec![0u8; len as usize];
-            self.io.read_exact_at(&g.file, &mut buf, off + FRAME_HEADER as u64)?;
-            if rec_len != len || crc32::hash(&buf) != crc {
-                return Ok(Some(i as u64));
+            match scan.frames.get(i) {
+                Some(f) if f.offset == off && f.len == len && f.crc_ok => {}
+                _ => return Ok(Some(i as u64)),
             }
         }
         Ok(None)
@@ -543,6 +538,7 @@ impl LogBackend for DurableBackend {
 mod tests {
     use super::super::io::{FaultIo, FaultMode};
     use super::*;
+    use std::fs::OpenOptions;
     use std::io::{Seek, SeekFrom, Write};
     use std::sync::Arc;
 

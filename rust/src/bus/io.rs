@@ -1,9 +1,9 @@
 //! The durable backend's file-operation seam.
 //!
 //! [`DurableBackend`](super::DurableBackend) performs every segment and
-//! sidecar operation through a [`SegmentIo`] — a five-verb trait
-//! (`create` / `write_all` / `sync` / `read_exact_at` / `truncate`) with
-//! two implementations:
+//! sidecar operation through a [`SegmentIo`] — a ten-verb trait (opens,
+//! appends, positioned/whole-file reads, fsync, truncate, stat, mkdir)
+//! with two implementations:
 //!
 //! * [`FsIo`] — the real thing, a thin pass-through to `std::fs`;
 //! * [`FaultIo`] — a test double that counts every operation, records an
@@ -28,23 +28,55 @@ use std::sync::{Arc, Mutex};
 pub enum IoOp {
     /// Open-for-write-truncating (sidecar rewrites).
     Create,
+    /// Open an existing-or-new segment for append, or an existing file
+    /// read-only.
+    Open,
     /// Append bytes to a file opened in append mode.
     Write,
     /// fsync (`sync_data`).
     Sync,
-    /// Positioned read that never moves the file cursor.
+    /// Positioned read that never moves the file cursor (whole-file
+    /// sidecar reads count here too).
     Read,
     /// `set_len` (torn-tail drop, failed-commit rollback).
     Truncate,
+    /// `metadata().len()` length probe.
+    Stat,
+    /// Recursive directory creation for a segment's parent.
+    Mkdir,
 }
 
 /// File operations the durable backend needs, as a mockable seam. All
 /// methods take `&File`: appends rely on `O_APPEND`, reads are positioned,
 /// so no method needs (or may assume) exclusive handle access.
+///
+/// This seam is also the architecture boundary the seam-conformance lint
+/// (`logact lint --src`, [`crate::lint::source`]) enforces: outside this
+/// file and a short documented allowlist, no module touches `std::fs`
+/// directly — segment, sidecar and directory operations all route through
+/// a `SegmentIo` so every one of them is fault-injectable.
 pub trait SegmentIo: Send + Sync {
     /// Open `path` for writing, creating it and truncating any previous
     /// content (checkpoint sidecar rewrites).
     fn create(&self, path: &Path) -> io::Result<File>;
+
+    /// Open `path` as an append-mode segment, creating it if absent
+    /// (the durable backend's open path).
+    fn open_log(&self, path: &Path) -> io::Result<File>;
+
+    /// Open an existing file strictly read-only — the linter's view of a
+    /// segment: it can never stamp, truncate or otherwise mutate the log
+    /// it is auditing.
+    fn open_read(&self, path: &Path) -> io::Result<File>;
+
+    /// Read a whole small file (the checkpoint sidecar).
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>>;
+
+    /// Current byte length of an open file.
+    fn file_len(&self, file: &File) -> io::Result<u64>;
+
+    /// Create `dir` and any missing parents.
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
 
     fn write_all(&self, file: &File, buf: &[u8]) -> io::Result<()>;
 
@@ -62,6 +94,26 @@ pub struct FsIo;
 impl SegmentIo for FsIo {
     fn create(&self, path: &Path) -> io::Result<File> {
         OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)
+    }
+
+    fn open_log(&self, path: &Path) -> io::Result<File> {
+        OpenOptions::new().read(true).append(true).create(true).open(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        File::open(path)
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn file_len(&self, file: &File) -> io::Result<u64> {
+        Ok(file.metadata()?.len())
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(dir)
     }
 
     fn write_all(&self, mut file: &File, buf: &[u8]) -> io::Result<()> {
@@ -192,6 +244,41 @@ impl SegmentIo for FaultIo {
         }
     }
 
+    fn open_log(&self, path: &Path) -> io::Result<File> {
+        match self.enter(IoOp::Open, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Open)),
+            _ => self.inner.open_log(path),
+        }
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        match self.enter(IoOp::Open, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Open)),
+            _ => self.inner.open_read(path),
+        }
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        match self.enter(IoOp::Read, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Read)),
+            _ => self.inner.read_file(path),
+        }
+    }
+
+    fn file_len(&self, file: &File) -> io::Result<u64> {
+        match self.enter(IoOp::Stat, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Stat)),
+            _ => self.inner.file_len(file),
+        }
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        match self.enter(IoOp::Mkdir, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Mkdir)),
+            _ => self.inner.create_dir_all(dir),
+        }
+    }
+
     fn write_all(&self, file: &File, buf: &[u8]) -> io::Result<()> {
         match self.enter(IoOp::Write, buf.len() as u64) {
             (i, Some(FaultMode::Fail)) => Err(FaultIo::injected(i, IoOp::Write)),
@@ -285,6 +372,37 @@ mod tests {
         assert!(io.write_all(&f, b"ABCDEFGH").is_err());
         assert_eq!(std::fs::read(&p).unwrap(), b"goodABCD", "prefix landed, suffix lost");
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn open_stat_and_whole_file_verbs_are_counted_and_faultable() {
+        let p = tmp("verbs");
+        let io = FaultIo::new();
+        let dir = p.parent().unwrap().join("verbs-subdir");
+        io.create_dir_all(&dir).unwrap(); // op 1: Mkdir
+        let f = io.open_log(&p).unwrap(); // op 2: Open
+        io.write_all(&f, b"abc").unwrap(); // op 3
+        assert_eq!(io.file_len(&f).unwrap(), 3); // op 4: Stat
+        let r = io.open_read(&p).unwrap(); // op 5: Open
+        let mut buf = [0u8; 3];
+        io.read_exact_at(&r, &mut buf, 0).unwrap(); // op 6
+        assert_eq!(&buf, b"abc");
+        assert_eq!(io.read_file(&p).unwrap(), b"abc"); // op 7: Read
+        assert_eq!(
+            io.oplog().iter().map(|o| o.op).collect::<Vec<_>>(),
+            vec![IoOp::Mkdir, IoOp::Open, IoOp::Write, IoOp::Stat, IoOp::Open, IoOp::Read, IoOp::Read]
+        );
+        // Read-only handles really are read-only, and each verb faults.
+        use std::io::Write;
+        assert!({ (&r).write_all(b"x") }.is_err(), "open_read handle must not be writable");
+        io.fail_after(1, FaultMode::Fail);
+        assert!(io.read_file(&p).is_err());
+        io.fail_after(1, FaultMode::Fail);
+        assert!(io.open_read(&p).is_err());
+        io.fail_after(1, FaultMode::Fail);
+        assert!(io.file_len(&f).is_err());
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -70,8 +70,10 @@ fn encode(name: &str, bytes: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Split a shared-log record into (namespace, payload).
-fn decode(record: &[u8]) -> io::Result<(&str, &[u8])> {
+/// Split a shared-log record into (namespace, payload). `pub(crate)` so
+/// the offline linter ([`crate::lint::scrub`]) can audit shared logs
+/// without a registry instance.
+pub(crate) fn decode(record: &[u8]) -> io::Result<(&str, &[u8])> {
     let (len, rest) = record
         .split_first()
         .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "empty shared-log record"))?;
@@ -266,6 +268,54 @@ impl BusRegistry {
         let mut scan = self.shared.scan.lock().unwrap();
         let _ = ingest_to_tail(&self.shared, &mut scan);
         scan.namespaces.keys().cloned().collect()
+    }
+
+    /// Run the offline protocol linter over one tenant's records — a live
+    /// counterpart of `logact lint --registry` that audits a single
+    /// namespace in place, without touching the others. Findings carry
+    /// the namespace in `scope`. `NotFound` if the shared log has never
+    /// seen the namespace (linting would otherwise silently create it).
+    pub fn lint_namespace(&self, name: &str) -> io::Result<Vec<crate::lint::Finding>> {
+        if !self.namespaces().iter().any(|n| n == name) {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("namespace '{name}' not present on the shared log"),
+            ));
+        }
+        let backend = self.backend(name)?;
+        let records = backend.read(0, backend.tail())?;
+        let mut findings = Vec::new();
+        let mut entries = Vec::new();
+        for (pos, bytes) in &records {
+            match super::entry::Entry::from_bytes(bytes) {
+                Some(e) => {
+                    if e.position != *pos {
+                        findings.push(
+                            crate::lint::Finding::error(
+                                "position-mismatch",
+                                format!(
+                                    "entry claims position {} but the namespace holds it at {}",
+                                    e.position, pos
+                                ),
+                            )
+                            .at(*pos)
+                            .scoped(name),
+                        );
+                    }
+                    entries.push((*pos, e));
+                }
+                None => findings.push(
+                    crate::lint::Finding::warn(
+                        "undecodable-record",
+                        "namespaced payload is not an entry frame",
+                    )
+                    .at(*pos)
+                    .scoped(name),
+                ),
+            }
+        }
+        findings.extend(crate::lint::lint_entries(&entries).into_iter().map(|f| f.scoped(name)));
+        Ok(findings)
     }
 
     /// Tail of the underlying shared log (sum over all tenants).

@@ -31,6 +31,7 @@ pub mod dojo;
 pub mod env;
 pub mod inference;
 pub mod kernel;
+pub mod lint;
 pub mod metrics;
 pub mod recovery;
 pub mod runtime;

@@ -1,0 +1,216 @@
+//! `logact lint` — offline, replay-free analysis of LogAct artifacts.
+//!
+//! Two passes, surfaced as the `lint` subcommand on the CLI:
+//!
+//! * **Log lint** ([`scrub`] + [`protocol`]) — statically audit a durable
+//!   segment and its `<log>.ckpt` sidecar *without executing, replaying
+//!   or mutating anything* (the linter opens the segment read-only and
+//!   never truncates a torn tail the way reopen does). Frame
+//!   well-formedness and CRCs, preamble/UUID and sidecar-vs-log
+//!   consistency, monotonic positions, a `TypeIndex` cross-check, and
+//!   the LogAct protocol invariants over the typed entries: every
+//!   `Vote`/`Commit`/`Abort`/`Result` resolves its `intent_pos` to an
+//!   earlier `Intent`, no `Commit`+`Abort` conflict, no `Result` before
+//!   its `Commit`, at-most-once `Result`s, orphan intents flagged, and
+//!   `Policy` quorum changes applied in log order when checking votes.
+//! * **Seam-conformance source lint** ([`source`]) — a token-level
+//!   scanner (no AST, no crates) over `rust/src/` that fails on raw
+//!   `std::fs` / `File::` / `OpenOptions` use outside `bus/io.rs` and an
+//!   explicit allowlist, so every durability-relevant file operation
+//!   stays behind the fault-injectable [`crate::bus::SegmentIo`] seam.
+//!
+//! Findings are typed ([`Severity::Error`] / [`Severity::Warn`]) and
+//! positioned; reports render as a human table (`util::tables`) or as
+//! JSON for CI (`--json`). [`crate::bus::DurableBackend::verify`] is a
+//! thin wrapper over [`scrub::scan_frames`], so the crate has exactly one
+//! integrity-scan path. This findings engine is the stepping stone for
+//! the ROADMAP's tamper-evident Merkle receipts: receipts will hang off
+//! the same scrub walk.
+
+pub mod protocol;
+pub mod scrub;
+pub mod source;
+
+pub use protocol::lint_entries;
+pub use scrub::{lint_log_file, lint_log_file_with_io, lint_registry_file, scan_frames};
+pub use source::lint_sources;
+
+use crate::util::json::Json;
+use crate::util::tables::Table;
+
+/// How bad a finding is. `Error` means the artifact violates an invariant
+/// the system relies on (CI fails); `Warn` marks suspicious-but-survivable
+/// states (a torn tail, an undecided intent at the log's edge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One typed lint finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub severity: Severity,
+    /// Stable machine-readable code ("dangling-intent-pos", …) — CI and
+    /// the seeded-violation matrix key on these.
+    pub code: &'static str,
+    /// Log position (or source line for seam findings) it anchors to.
+    pub position: Option<u64>,
+    /// Byte offset in the segment file, for frame-level findings.
+    pub offset: Option<u64>,
+    /// Namespace (registry lint) or file path (source lint).
+    pub scope: Option<String>,
+    pub detail: String,
+}
+
+impl Finding {
+    pub fn error(code: &'static str, detail: impl Into<String>) -> Finding {
+        Finding {
+            severity: Severity::Error,
+            code,
+            position: None,
+            offset: None,
+            scope: None,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn warn(code: &'static str, detail: impl Into<String>) -> Finding {
+        Finding { severity: Severity::Warn, ..Finding::error(code, detail) }
+    }
+
+    pub fn at(mut self, position: u64) -> Finding {
+        self.position = Some(position);
+        self
+    }
+
+    pub fn offset(mut self, offset: u64) -> Finding {
+        self.offset = Some(offset);
+        self
+    }
+
+    pub fn scoped(mut self, scope: impl Into<String>) -> Finding {
+        self.scope = Some(scope.into());
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let opt_u64 = |v: Option<u64>| v.map(|x| Json::Int(x as i64)).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("severity", Json::str(self.severity.name())),
+            ("code", Json::str(self.code)),
+            ("position", opt_u64(self.position)),
+            ("offset", opt_u64(self.offset)),
+            ("scope", self.scope.clone().map(Json::str).unwrap_or(Json::Null)),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// A lint run over one target, in one mode.
+pub struct Report {
+    /// What was linted (a path).
+    pub target: String,
+    /// "log" (plain durable segment), "registry" (multi-tenant shared
+    /// log) or "source" (seam conformance).
+    pub mode: &'static str,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn new(target: impl Into<String>, mode: &'static str) -> Report {
+        Report { target: target.into(), mode, findings: Vec::new() }
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    /// Codes of all findings, in report order (test/matrix convenience).
+    pub fn codes(&self) -> Vec<&'static str> {
+        self.findings.iter().map(|f| f.code).collect()
+    }
+
+    /// The human rendering: one table row per finding.
+    pub fn to_table(&self) -> Table {
+        let title = format!("lint {} ({})", self.target, self.mode);
+        let mut t = Table::new(&title, &["severity", "code", "position", "offset", "scope", "detail"]);
+        let cell = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "-".to_string());
+        for f in &self.findings {
+            t.row(&[
+                f.severity.name().to_string(),
+                f.code.to_string(),
+                cell(f.position),
+                cell(f.offset),
+                f.scope.clone().unwrap_or_else(|| "-".to_string()),
+                f.detail.clone(),
+            ]);
+        }
+        t
+    }
+
+    /// The `--json` rendering (schema documented in EXPERIMENTS.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "lint",
+            Json::obj(vec![
+                ("target", Json::str(self.target.clone())),
+                ("mode", Json::str(self.mode)),
+                ("errors", Json::Int(self.errors() as i64)),
+                ("warnings", Json::Int(self.warnings() as i64)),
+                ("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect())),
+            ]),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_and_renders() {
+        let mut r = Report::new("/tmp/x.log", "log");
+        r.findings.push(Finding::error("crc-mismatch", "frame 3 payload hash differs").at(3).offset(160));
+        r.findings.push(Finding::warn("orphan-intent", "intent never decided").at(7));
+        r.findings.push(Finding::warn("seam-violation", "raw fs").scoped("src/foo.rs"));
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 2);
+        assert_eq!(r.codes(), vec!["crc-mismatch", "orphan-intent", "seam-violation"]);
+        let md = r.to_table().to_markdown();
+        assert!(md.contains("crc-mismatch"));
+        assert!(md.contains("160"));
+        let j = r.to_json();
+        let lint = j.get("lint").unwrap();
+        assert_eq!(lint.get_u64("errors"), Some(1));
+        assert_eq!(lint.get_u64("warnings"), Some(2));
+        let arr = lint.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get_str("severity"), Some("error"));
+        assert_eq!(arr[0].get_u64("position"), Some(3));
+        assert_eq!(arr[1].get("offset"), Some(&Json::Null));
+        assert_eq!(arr[2].get_str("scope"), Some("src/foo.rs"));
+        // Round-trips through the JSON codec (what CI consumes).
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("lint").unwrap().get_u64("errors"), Some(1));
+    }
+
+    #[test]
+    fn severity_orders_warn_below_error() {
+        assert!(Severity::Warn < Severity::Error);
+        assert_eq!(Severity::Error.name(), "error");
+    }
+}

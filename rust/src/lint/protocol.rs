@@ -1,0 +1,503 @@
+//! Pass 1, semantic layer: the LogAct protocol invariants, checked over a
+//! decoded entry stream in log order.
+//!
+//! The walk is a pure fold — no bus, no replay, no side effects — over
+//! `(position, Entry)` pairs and mirrors what the live Decider/Executor
+//! pair guarantees (paper §3.2):
+//!
+//! * every `Vote`/`Commit`/`Abort`/`Result` carries an `intent_pos` that
+//!   resolves to an **earlier** `Intent` (`dangling-intent-pos`);
+//! * an intent is never both committed and aborted
+//!   (`commit-abort-conflict`) — duplicate *identical* decisions are
+//!   legal, two deciders may race to the same verdict;
+//! * execution is at-most-once: no `Result` without a prior `Commit`
+//!   (`result-before-commit`), no second `Result` (`duplicate-result`);
+//! * `Policy` entries of kind `decider` re-point the quorum rule *from
+//!   that position on* — commits are checked against the policy in force
+//!   at commit time (`quorum-unsatisfied`, a warn: the linter does not
+//!   model driver fencing, so it cannot prove a vote was ignored on
+//!   purpose);
+//! * at log end, undecided intents (`orphan-intent`) and committed-but-
+//!   unexecuted intents (`missing-result`) are flagged as warns — both
+//!   are legal states for a log that simply stopped early.
+//!
+//! The executor's reboot marker (`Result` with body `reboot: true`, no
+//! `intent_pos`) is part of the protocol and produces no finding. The
+//! initial decider policy is constructor configuration and is *not*
+//! logged, so the policy starts out unknown and quorum checks only begin
+//! at the first `Policy` entry.
+
+use super::Finding;
+use crate::bus::entry::{DeciderPolicy, Entry, PayloadType, Vote, VoteKind};
+use std::collections::BTreeMap;
+
+#[derive(Default)]
+struct IntentState {
+    committed: Option<u64>,
+    aborted: Option<u64>,
+    results: Vec<u64>,
+    /// Votes in log order, as `(vote position, parsed vote)`.
+    votes: Vec<(u64, Vote)>,
+    conflict_reported: bool,
+}
+
+/// Check the protocol invariants over entries in log order. Positions need
+/// not be contiguous (the physical pass may have dropped undecodable or
+/// rotted records), but they must be increasing.
+pub fn lint_entries(entries: &[(u64, Entry)]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut intents: BTreeMap<u64, IntentState> = BTreeMap::new();
+    let mut seen: BTreeMap<u64, PayloadType> = BTreeMap::new();
+    let mut policy: Option<DeciderPolicy> = None;
+
+    for (pos, e) in entries {
+        let pos = *pos;
+        let t = e.payload.ptype;
+        match t {
+            PayloadType::Intent => {
+                intents.insert(pos, IntentState::default());
+            }
+            PayloadType::Vote => {
+                if let Some(ip) = resolve(&intents, &seen, pos, e, &mut findings) {
+                    match Vote::from_body(&e.payload.body) {
+                        Some(v) => intents.get_mut(&ip).unwrap().votes.push((pos, v)),
+                        None => findings.push(
+                            Finding::error(
+                                "malformed-body",
+                                "Vote body lacks approve/voter_type — the decider drops it, \
+                                 so it is silently absent from the quorum",
+                            )
+                            .at(pos),
+                        ),
+                    }
+                }
+            }
+            PayloadType::Commit => {
+                if let Some(ip) = resolve(&intents, &seen, pos, e, &mut findings) {
+                    let st = intents.get_mut(&ip).unwrap();
+                    if st.aborted.is_some() && !st.conflict_reported {
+                        st.conflict_reported = true;
+                        findings.push(
+                            Finding::error(
+                                "commit-abort-conflict",
+                                format!(
+                                    "intent {ip} aborted at {} then committed at {pos}: the \
+                                     deciders disagreed on the verdict",
+                                    st.aborted.unwrap()
+                                ),
+                            )
+                            .at(pos),
+                        );
+                    }
+                    if st.committed.is_none() {
+                        st.committed = Some(pos);
+                        if let Some(p) = &policy {
+                            check_quorum(p, ip, pos, &st.votes, &mut findings);
+                        }
+                    }
+                    // A second identical Commit is legal: two deciders racing.
+                }
+            }
+            PayloadType::Abort => {
+                if let Some(ip) = resolve(&intents, &seen, pos, e, &mut findings) {
+                    let st = intents.get_mut(&ip).unwrap();
+                    if st.committed.is_some() && !st.conflict_reported {
+                        st.conflict_reported = true;
+                        findings.push(
+                            Finding::error(
+                                "commit-abort-conflict",
+                                format!(
+                                    "intent {ip} committed at {} then aborted at {pos}: the \
+                                     deciders disagreed on the verdict",
+                                    st.committed.unwrap()
+                                ),
+                            )
+                            .at(pos),
+                        );
+                    }
+                    if st.aborted.is_none() {
+                        st.aborted = Some(pos);
+                    }
+                }
+            }
+            PayloadType::Result => {
+                if e.payload.body.get_bool("reboot") == Some(true) {
+                    // Executor reboot marker: carries no intent_pos by design.
+                } else if let Some(ip) = resolve(&intents, &seen, pos, e, &mut findings) {
+                    let st = intents.get_mut(&ip).unwrap();
+                    if st.committed.is_none() {
+                        let verdict = match st.aborted {
+                            Some(a) => format!("which was aborted at {a}"),
+                            None => "which has no decision at all".to_string(),
+                        };
+                        findings.push(
+                            Finding::error(
+                                "result-before-commit",
+                                format!(
+                                    "Result at {pos} for intent {ip} {verdict} — execution \
+                                     must only follow a Commit"
+                                ),
+                            )
+                            .at(pos),
+                        );
+                    }
+                    if let Some(&first) = st.results.first() {
+                        findings.push(
+                            Finding::error(
+                                "duplicate-result",
+                                format!(
+                                    "intent {ip} already has a Result at {first}; a second at \
+                                     {pos} breaks at-most-once execution"
+                                ),
+                            )
+                            .at(pos),
+                        );
+                    }
+                    st.results.push(pos);
+                }
+            }
+            PayloadType::Policy => {
+                if e.payload.body.get_str("kind") == Some("decider") {
+                    match e.payload.body.get("policy").and_then(DeciderPolicy::from_json) {
+                        Some(p) => policy = Some(p),
+                        None => findings.push(
+                            Finding::warn(
+                                "malformed-policy",
+                                "Policy entry of kind 'decider' without a parseable policy \
+                                 body — the live decider ignores it, so the quorum rule did \
+                                 not change where the author probably meant it to",
+                            )
+                            .at(pos),
+                        ),
+                    }
+                }
+                // Other kinds (driver_election, ...) are not the decider's.
+            }
+            PayloadType::InfIn | PayloadType::InfOut | PayloadType::Mail => {}
+        }
+        seen.insert(pos, t);
+    }
+
+    for (ip, st) in &intents {
+        if st.committed.is_none() && st.aborted.is_none() {
+            findings.push(
+                Finding::warn(
+                    "orphan-intent",
+                    format!(
+                        "intent {ip} was never decided ({} vote(s) recorded) — the log \
+                         stopped early, or the decider lost it",
+                        st.votes.len()
+                    ),
+                )
+                .at(*ip),
+            );
+        } else if st.committed.is_some() && st.results.is_empty() {
+            findings.push(
+                Finding::warn(
+                    "missing-result",
+                    format!(
+                        "intent {ip} committed at {} but has no Result — crash before \
+                         execution, or the executor is still running",
+                        st.committed.unwrap()
+                    ),
+                )
+                .at(*ip),
+            );
+        }
+    }
+    findings
+}
+
+/// Resolve an entry's `intent_pos` to an earlier Intent. On failure emits
+/// `dangling-intent-pos` and returns `None`.
+fn resolve(
+    intents: &BTreeMap<u64, IntentState>,
+    seen: &BTreeMap<u64, PayloadType>,
+    pos: u64,
+    e: &Entry,
+    findings: &mut Vec<Finding>,
+) -> Option<u64> {
+    let name = e.payload.ptype.name();
+    let Some(ip) = e.intent_pos() else {
+        findings.push(
+            Finding::error(
+                "dangling-intent-pos",
+                format!("{name} at {pos} has no intent_pos field"),
+            )
+            .at(pos),
+        );
+        return None;
+    };
+    if intents.contains_key(&ip) {
+        return Some(ip);
+    }
+    let what = match seen.get(&ip) {
+        Some(t) => format!("a {} entry, not an Intent", t.name()),
+        None if ip >= pos => "not an earlier position".to_string(),
+        None => "not a decodable entry".to_string(),
+    };
+    findings.push(
+        Finding::error(
+            "dangling-intent-pos",
+            format!("{name} at {pos} points intent_pos at {ip}, which is {what}"),
+        )
+        .at(pos),
+    );
+    None
+}
+
+/// First vote per voter *type* (decider policies quantify over types, and
+/// the live decider keeps only the first vote each type casts).
+fn first_votes_by_type(votes: &[(u64, Vote)]) -> BTreeMap<&str, VoteKind> {
+    let mut tally: BTreeMap<&str, VoteKind> = BTreeMap::new();
+    for (_, v) in votes {
+        tally.entry(v.voter_type.as_str()).or_insert(v.kind);
+    }
+    tally
+}
+
+/// Was this Commit justified by the votes on record under `policy`? Only
+/// votes cast *before* the commit count (`votes` holds exactly those —
+/// the caller checks at first-commit time).
+fn check_quorum(
+    policy: &DeciderPolicy,
+    intent: u64,
+    commit_pos: u64,
+    votes: &[(u64, Vote)],
+    findings: &mut Vec<Finding>,
+) {
+    let unsatisfied = match policy {
+        DeciderPolicy::OnByDefault => None,
+        DeciderPolicy::FirstVoter => match votes.first() {
+            None => Some("committed with no votes under first_voter".to_string()),
+            Some((vp, v)) if v.kind == VoteKind::Reject => {
+                Some(format!("first vote (at {vp}, by {}) rejected", v.voter_type))
+            }
+            Some(_) => None,
+        },
+        DeciderPolicy::BooleanOr(types) => {
+            let tally = first_votes_by_type(votes);
+            if types.iter().any(|t| tally.get(t.as_str()) == Some(&VoteKind::Approve)) {
+                None
+            } else {
+                Some(format!("boolean_or over {types:?}: no listed type approved"))
+            }
+        }
+        DeciderPolicy::BooleanAnd(types) => {
+            let tally = first_votes_by_type(votes);
+            match types.iter().find(|t| tally.get(t.as_str()) != Some(&VoteKind::Approve)) {
+                Some(t) => Some(format!("boolean_and over {types:?}: '{t}' did not approve")),
+                None => None,
+            }
+        }
+    };
+    if let Some(why) = unsatisfied {
+        findings.push(
+            Finding::warn(
+                "quorum-unsatisfied",
+                format!(
+                    "Commit at {commit_pos} for intent {intent} is not justified by the \
+                     votes on record ({why}) — possible fenced/ignored votes the linter \
+                     cannot model, or a decider bug"
+                ),
+            )
+            .at(commit_pos),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::entry::Payload;
+    use crate::util::json::Json;
+
+    fn mk(pos: u64, ptype: PayloadType, body: Json) -> (u64, Entry) {
+        (pos, Entry { position: pos, realtime_ts: 1000 + pos, payload: Payload::new(ptype, "t", body) })
+    }
+
+    fn ipos(ip: u64) -> Json {
+        Json::obj(vec![("intent_pos", Json::Int(ip as i64))])
+    }
+
+    fn vote(ip: u64, approve: bool, vtype: &str) -> Json {
+        Vote {
+            intent_pos: ip,
+            kind: if approve { VoteKind::Approve } else { VoteKind::Reject },
+            voter_type: vtype.into(),
+            reason: "t".into(),
+        }
+        .to_body()
+    }
+
+    fn policy(kind: &str, voters: &[&str]) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("decider")),
+            (
+                "policy",
+                Json::obj(vec![
+                    ("kind", Json::str(kind)),
+                    ("voters", Json::Arr(voters.iter().map(|v| Json::str(*v)).collect())),
+                ]),
+            ),
+        ])
+    }
+
+    fn codes(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.code).collect()
+    }
+
+    #[test]
+    fn clean_lifecycle_is_silent() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Mail, Json::obj(vec![("text", Json::str("hi"))])),
+            mk(1, Intent, Json::obj(vec![("code", Json::str("ls"))])),
+            mk(2, Vote, vote(1, true, "rule")),
+            mk(3, Commit, ipos(1)),
+            mk(4, Result, ipos(1)),
+            mk(5, InfOut, Json::Null),
+        ];
+        assert!(lint_entries(&log).is_empty(), "{:?}", lint_entries(&log));
+    }
+
+    #[test]
+    fn duplicate_identical_commits_are_legal() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Intent, Json::Null),
+            mk(1, Commit, ipos(0)),
+            mk(2, Commit, ipos(0)), // second decider racing: fine
+            mk(3, Result, ipos(0)),
+        ];
+        assert!(lint_entries(&log).is_empty());
+        let log = vec![mk(0, Intent, Json::Null), mk(1, Abort, ipos(0)), mk(2, Abort, ipos(0))];
+        assert!(lint_entries(&log).is_empty());
+    }
+
+    #[test]
+    fn reboot_result_marker_is_legal() {
+        use PayloadType::*;
+        let log = vec![mk(0, Result, Json::obj(vec![("reboot", Json::Bool(true))]))];
+        assert!(lint_entries(&log).is_empty());
+    }
+
+    #[test]
+    fn dangling_intent_pos_variants() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Mail, Json::Null),
+            mk(1, Intent, Json::Null),
+            mk(2, Vote, vote(99, true, "rule")),  // unseen position
+            mk(3, Commit, ipos(0)),               // points at a Mail
+            mk(4, Abort, Json::Null),             // field missing entirely
+            mk(5, Result, ipos(1)),               // fine: intent 1... but no commit
+        ];
+        let f = lint_entries(&log);
+        let c = codes(&f);
+        assert_eq!(c.iter().filter(|&&c| c == "dangling-intent-pos").count(), 3);
+        assert!(c.contains(&"result-before-commit"));
+        assert!(f.iter().any(|f| f.position == Some(3) && f.detail.contains("mail")));
+    }
+
+    #[test]
+    fn conflict_duplicate_and_premature_results() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Intent, Json::Null),
+            mk(1, Commit, ipos(0)),
+            mk(2, Abort, ipos(0)), // conflict
+            mk(3, Result, ipos(0)),
+            mk(4, Result, ipos(0)), // duplicate
+        ];
+        let c = codes(&lint_entries(&log));
+        assert_eq!(c.iter().filter(|&&c| c == "commit-abort-conflict").count(), 1, "{c:?}");
+        assert_eq!(c.iter().filter(|&&c| c == "duplicate-result").count(), 1);
+    }
+
+    #[test]
+    fn edge_of_log_warns() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Intent, Json::Null), // never decided
+            mk(1, Intent, Json::Null),
+            mk(2, Commit, ipos(1)), // committed, no result
+        ];
+        let f = lint_entries(&log);
+        assert_eq!(codes(&f), vec!["orphan-intent", "missing-result"]);
+        assert!(f.iter().all(|f| f.severity == super::super::Severity::Warn));
+    }
+
+    #[test]
+    fn quorum_checked_against_policy_in_force_at_commit_time() {
+        use PayloadType::*;
+        // No Policy entry yet: initial policy is constructor config, not
+        // logged, so this commit-without-votes produces no finding.
+        let before = vec![mk(0, Intent, Json::Null), mk(1, Commit, ipos(0)), mk(2, Result, ipos(0))];
+        assert!(lint_entries(&before).is_empty());
+
+        // After a boolean_and policy, a commit missing one voter type warns.
+        let log = vec![
+            mk(0, Policy, policy("boolean_and", &["rule", "llm"])),
+            mk(1, Intent, Json::Null),
+            mk(2, Vote, vote(1, true, "rule")),
+            mk(3, Commit, ipos(1)),
+            mk(4, Result, ipos(1)),
+        ];
+        let f = lint_entries(&log);
+        assert_eq!(codes(&f), vec!["quorum-unsatisfied"]);
+        assert!(f[0].detail.contains("llm"));
+
+        // Same shape with both types voting: silent.
+        let log = vec![
+            mk(0, Policy, policy("boolean_and", &["rule", "llm"])),
+            mk(1, Intent, Json::Null),
+            mk(2, Vote, vote(1, true, "rule")),
+            mk(3, Vote, vote(1, true, "llm")),
+            mk(4, Commit, ipos(1)),
+            mk(5, Result, ipos(1)),
+        ];
+        assert!(lint_entries(&log).is_empty());
+
+        // first_voter: the chronologically first vote rejected → warn.
+        let log = vec![
+            mk(0, Policy, policy("first_voter", &[])),
+            mk(1, Intent, Json::Null),
+            mk(2, Vote, vote(1, false, "rule")),
+            mk(3, Vote, vote(1, true, "llm")),
+            mk(4, Commit, ipos(1)),
+            mk(5, Result, ipos(1)),
+        ];
+        assert_eq!(codes(&lint_entries(&log)), vec!["quorum-unsatisfied"]);
+    }
+
+    #[test]
+    fn policy_entries_apply_in_log_order_and_elections_are_ignored() {
+        use PayloadType::*;
+        // The strict policy lands *after* the commit: no finding.
+        let log = vec![
+            mk(0, Intent, Json::Null),
+            mk(1, Commit, ipos(0)),
+            mk(2, Result, ipos(0)),
+            mk(3, Policy, policy("boolean_and", &["rule"])),
+            mk(4, Policy, crate::sm::fence::election_body("driver-2")),
+        ];
+        assert!(lint_entries(&log).is_empty());
+
+        // A decider Policy with an unparseable body warns.
+        let log = vec![mk(0, Policy, Json::obj(vec![("kind", Json::str("decider"))]))];
+        assert_eq!(codes(&lint_entries(&log)), vec!["malformed-policy"]);
+    }
+
+    #[test]
+    fn malformed_vote_body_is_flagged() {
+        use PayloadType::*;
+        let log = vec![
+            mk(0, Intent, Json::Null),
+            mk(1, Vote, ipos(0)), // has intent_pos but no approve/voter_type
+            mk(2, Commit, ipos(0)),
+            mk(3, Result, ipos(0)),
+        ];
+        assert_eq!(codes(&lint_entries(&log)), vec!["malformed-body"]);
+    }
+}

@@ -1,0 +1,378 @@
+//! Pass 1, physical layer: read-only scrub of a durable segment and its
+//! `<log>.ckpt` sidecar.
+//!
+//! Unlike [`DurableBackend::open`](crate::bus::DurableBackend::open),
+//! which *recovers* (truncates torn tails, rewrites sidecars), the scrub
+//! only observes: the segment is opened via [`SegmentIo::open_read`] and
+//! nothing is ever written. Where reopen stops at the first bad frame,
+//! the scrub keeps walking as long as the length chain stays plausible,
+//! so one mid-log bit flip yields one `crc-mismatch` finding instead of
+//! hiding everything after it.
+//!
+//! [`scan_frames`] is the single integrity-scan implementation in the
+//! crate — [`DurableBackend::verify`](crate::bus::DurableBackend::verify)
+//! is a thin wrapper over it.
+
+use super::{lint_entries, Finding, Report};
+use crate::bus::checkpoint::{check_preamble, sidecar_path, Checkpoint, PreambleCheck, PREAMBLE_LEN};
+use crate::bus::durable::FRAME_HEADER;
+use crate::bus::entry::Entry;
+use crate::bus::io::{FsIo, SegmentIo};
+use crate::bus::registry::decode as split_namespaced;
+use crate::bus::TypeIndex;
+use crate::util::crc32;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+/// One frame as found on disk by the scrub walk.
+pub struct ScannedFrame {
+    /// Byte offset of the frame header in the segment.
+    pub offset: u64,
+    /// Payload length from the frame header.
+    pub len: u32,
+    /// Stored CRC matches the payload bytes on disk.
+    pub crc_ok: bool,
+    pub payload: Vec<u8>,
+}
+
+/// Result of one [`scan_frames`] walk. Payloads are held in memory — the
+/// scrub is an audit tool over bounded segments, not a streaming reader.
+pub struct FrameScan {
+    pub frames: Vec<ScannedFrame>,
+    /// `(offset, byte count)` of a trailing region too short to hold the
+    /// frame its header promises (or any header at all) — a torn tail.
+    pub torn: Option<(u64, u64)>,
+    /// Byte offset one past the last whole frame (where the torn region
+    /// starts, or `file_len`).
+    pub end: u64,
+}
+
+/// Walk `[data_start, file_len)` as a chain of `[u32 len][u32 crc][bytes]`
+/// frames, verifying every payload against its stored CRC. The walk
+/// trusts length fields as long as they chain inside the file, so it
+/// continues *past* CRC-mismatching frames — a deliberate difference from
+/// the reopen scan, which truncates at the first bad frame.
+pub fn scan_frames(
+    io: &dyn SegmentIo,
+    file: &File,
+    data_start: u64,
+    file_len: u64,
+) -> io::Result<FrameScan> {
+    let mut frames = Vec::new();
+    let mut header = [0u8; FRAME_HEADER];
+    let mut pos = data_start;
+    let mut torn = None;
+    while pos + FRAME_HEADER as u64 <= file_len {
+        io.read_exact_at(file, &mut header, pos)?;
+        let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if pos + FRAME_HEADER as u64 + u64::from(len) > file_len {
+            torn = Some((pos, file_len - pos));
+            break;
+        }
+        let mut payload = vec![0u8; len as usize];
+        io.read_exact_at(file, &mut payload, pos + FRAME_HEADER as u64)?;
+        let crc_ok = crc32::hash(&payload) == crc;
+        frames.push(ScannedFrame { offset: pos, len, crc_ok, payload });
+        pos += FRAME_HEADER as u64 + u64::from(len);
+    }
+    if torn.is_none() && pos < file_len {
+        torn = Some((pos, file_len - pos)); // trailing bytes shorter than a header
+    }
+    Ok(FrameScan { frames, torn, end: pos })
+}
+
+/// Lint a plain durable segment (frames are entry frames): physical scrub,
+/// sidecar consistency, then the protocol invariants.
+pub fn lint_log_file(path: &Path) -> io::Result<Report> {
+    lint_log_file_with_io(&FsIo, path)
+}
+
+pub fn lint_log_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Report> {
+    let mut report = Report::new(path.display().to_string(), "log");
+    let scan = audit_segment(io, path, &mut report)?;
+    let mut entries = Vec::new();
+    for (i, f) in scan.frames.iter().enumerate() {
+        if !f.crc_ok {
+            continue; // rotted payload, already flagged: don't double-report
+        }
+        let pos = i as u64;
+        match Entry::from_bytes(&f.payload) {
+            Some(e) => {
+                if e.position != pos {
+                    report.findings.push(
+                        Finding::error(
+                            "position-mismatch",
+                            format!("entry claims position {} but sits at {}", e.position, pos),
+                        )
+                        .at(pos)
+                        .offset(f.offset),
+                    );
+                }
+                entries.push((pos, e));
+            }
+            None => report.findings.push(
+                Finding::warn(
+                    "undecodable-record",
+                    "record is not an entry frame (raw bytes, or a namespace-framed \
+                     multi-tenant record — lint those with --registry)",
+                )
+                .at(pos)
+                .offset(f.offset),
+            ),
+        }
+    }
+    report.findings.extend(lint_entries(&entries));
+    Ok(report)
+}
+
+/// Lint a multi-tenant shared log written through
+/// [`BusRegistry`](crate::bus::BusRegistry): physical scrub and sidecar
+/// consistency on the shared segment, then the protocol invariants per
+/// namespace (findings carry the tenant in `scope`).
+pub fn lint_registry_file(path: &Path) -> io::Result<Report> {
+    lint_registry_file_with_io(&FsIo, path)
+}
+
+pub fn lint_registry_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Report> {
+    let mut report = Report::new(path.display().to_string(), "registry");
+    let scan = audit_segment(io, path, &mut report)?;
+    let mut tenants: BTreeMap<String, Vec<(u64, Entry)>> = BTreeMap::new();
+    let mut locals: BTreeMap<String, u64> = BTreeMap::new();
+    for (i, f) in scan.frames.iter().enumerate() {
+        if !f.crc_ok {
+            continue;
+        }
+        let global = i as u64;
+        let (name, payload) = match split_namespaced(&f.payload) {
+            Ok(split) => split,
+            Err(e) => {
+                report.findings.push(
+                    Finding::warn(
+                        "undecodable-record",
+                        format!("record is not namespace-framed ({e})"),
+                    )
+                    .at(global)
+                    .offset(f.offset),
+                );
+                continue;
+            }
+        };
+        let local = {
+            let c = locals.entry(name.to_string()).or_insert(0);
+            let l = *c;
+            *c += 1;
+            l
+        };
+        match Entry::from_bytes(payload) {
+            Some(e) => {
+                if e.position != local {
+                    report.findings.push(
+                        Finding::error(
+                            "position-mismatch",
+                            format!(
+                                "entry claims namespace position {} but is record {} of '{}'",
+                                e.position, local, name
+                            ),
+                        )
+                        .at(local)
+                        .offset(f.offset)
+                        .scoped(name),
+                    );
+                }
+                tenants.entry(name.to_string()).or_default().push((local, e));
+            }
+            None => report.findings.push(
+                Finding::warn("undecodable-record", "namespaced payload is not an entry frame")
+                    .at(local)
+                    .offset(f.offset)
+                    .scoped(name),
+            ),
+        }
+    }
+    for (name, entries) in &tenants {
+        report
+            .findings
+            .extend(lint_entries(entries).into_iter().map(|f| f.scoped(name.clone())));
+    }
+    Ok(report)
+}
+
+/// Shared physical audit: preamble, frame walk, sidecar-vs-segment
+/// consistency. Appends frame/sidecar findings to `report` and returns
+/// the scan for the caller's entry-level pass.
+fn audit_segment(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Result<FrameScan> {
+    let file = io.open_read(path)?;
+    let file_len = io.file_len(&file)?;
+
+    // Preamble: classify, never stamp (the linter must not mutate).
+    let mut uuid = Some(0u128); // legacy segments carry uuid 0
+    let mut data_start = 0u64;
+    if file_len >= PREAMBLE_LEN {
+        let mut head = [0u8; PREAMBLE_LEN as usize];
+        io.read_exact_at(&file, &mut head, 0)?;
+        match check_preamble(&head) {
+            PreambleCheck::Valid(u) => {
+                uuid = Some(u);
+                data_start = PREAMBLE_LEN;
+            }
+            PreambleCheck::Damaged => {
+                report.findings.push(
+                    Finding::error(
+                        "damaged-preamble",
+                        "segment magic matches but the preamble CRC fails: the log UUID is \
+                         unknowable, so no sidecar can be verified against this segment",
+                    )
+                    .offset(0),
+                );
+                uuid = None;
+                data_start = PREAMBLE_LEN;
+            }
+            PreambleCheck::Absent => {} // legacy: frames from byte 0
+        }
+    }
+
+    let scan = scan_frames(io, &file, data_start, file_len)?;
+    for (i, f) in scan.frames.iter().enumerate() {
+        if !f.crc_ok {
+            report.findings.push(
+                Finding::error(
+                    "crc-mismatch",
+                    format!("frame payload ({} bytes) does not hash to its stored CRC", f.len),
+                )
+                .at(i as u64)
+                .offset(f.offset),
+            );
+        }
+    }
+    if let Some((off, bytes)) = scan.torn {
+        report.findings.push(
+            Finding::warn(
+                "torn-tail",
+                format!(
+                    "{bytes} trailing bytes do not form a complete frame (crash mid-append; \
+                     reopen would truncate them)"
+                ),
+            )
+            .offset(off),
+        );
+    }
+
+    // Sidecar audit. With a damaged preamble the UUID is unknowable and
+    // nothing about the sidecar can be verified — the damaged-preamble
+    // error above already dominates, so stop here.
+    let Some(uuid) = uuid else { return Ok(scan) };
+    match io.read_file(&sidecar_path(path)) {
+        Err(_) => {
+            if !scan.frames.is_empty() {
+                report.findings.push(Finding::warn(
+                    "missing-sidecar",
+                    "no <log>.ckpt alongside the segment: every reopen pays a full scan",
+                ));
+            }
+        }
+        Ok(bytes) => audit_sidecar(&bytes, uuid, data_start, file_len, &scan, report),
+    }
+    Ok(scan)
+}
+
+fn audit_sidecar(
+    bytes: &[u8],
+    uuid: u128,
+    data_start: u64,
+    file_len: u64,
+    scan: &FrameScan,
+    report: &mut Report,
+) {
+    let Some(c) = Checkpoint::decode(bytes) else {
+        report.findings.push(Finding::warn(
+            "corrupt-sidecar",
+            "sidecar fails its magic/CRC/structure checks (torn checkpoint write or bit rot); \
+             reopen would fall back to the full scan",
+        ));
+        return;
+    };
+    if c.uuid != uuid || c.data_start != data_start {
+        report.findings.push(Finding::warn(
+            "foreign-sidecar",
+            format!(
+                "sidecar identifies segment uuid {:032x} (data_start {}) but this segment is \
+                 uuid {:032x} (data_start {}) — a sidecar copied from another log",
+                c.uuid, c.data_start, uuid, data_start
+            ),
+        ));
+        return;
+    }
+    if c.log_len > file_len {
+        report.findings.push(Finding::warn(
+            "stale-sidecar",
+            format!(
+                "sidecar describes {} bytes but the segment holds {} — the segment lost bytes \
+                 after the last checkpoint (crash/truncation); reopen would reject it and \
+                 full-scan",
+                c.log_len, file_len
+            ),
+        ));
+        return;
+    }
+    let Some(ck_frames) = c.frames() else {
+        report.findings.push(Finding::error(
+            "sidecar-frame-mismatch",
+            "sidecar frame lengths do not lay out to its own log_len",
+        ));
+        return;
+    };
+    let mut prefix_rot = false;
+    for (i, &(off, len)) in ck_frames.iter().enumerate() {
+        match scan.frames.get(i) {
+            Some(f) if f.offset == off && f.len == len => prefix_rot |= !f.crc_ok,
+            other => {
+                let found = other
+                    .map(|f| format!("offset {} len {}", f.offset, f.len))
+                    .unwrap_or_else(|| "nothing".to_string());
+                report.findings.push(
+                    Finding::error(
+                        "sidecar-frame-mismatch",
+                        format!(
+                            "checkpointed frame {i} (offset {off}, len {len}) does not match \
+                             the segment ({found})"
+                        ),
+                    )
+                    .at(i as u64),
+                );
+                return;
+            }
+        }
+    }
+    // TypeIndex cross-check over the checkpointed prefix. Skipped if any
+    // prefix payload is rotted: the crc-mismatch error already covers it,
+    // and an index over rotted bytes would just be noise.
+    if !prefix_rot {
+        let mut rebuilt = TypeIndex::new();
+        for (i, f) in scan.frames.iter().take(ck_frames.len()).enumerate() {
+            rebuilt.note(i as u64, &f.payload);
+        }
+        if rebuilt.to_bytes() != c.types.to_bytes() {
+            report.findings.push(Finding::error(
+                "type-index-mismatch",
+                "sidecar TypeIndex disagrees with an index rebuilt from the checkpointed \
+                 frames — filtered reads after a checkpointed reopen would resolve wrong \
+                 positions",
+            ));
+        }
+    }
+    if c.log_len < scan.end {
+        report.findings.push(Finding::warn(
+            "stale-sidecar",
+            format!(
+                "sidecar covers {} of {} framed bytes: {} frame(s) appended after the last \
+                 checkpoint (log not closed cleanly; reopen scans the uncovered tail)",
+                c.log_len.saturating_sub(data_start),
+                scan.end - data_start,
+                scan.frames.len() - ck_frames.len()
+            ),
+        ));
+    }
+}

@@ -7,6 +7,7 @@
 //!   swarm [--seed S]        swarm experiment (fig9)
 //!   serve [--requests N]    e2e serving driver over the AOT transformer
 //!   kernel-demo             AgentKernel control-plane tour
+//!   lint <log> | --registry <log> | --src <dir>   offline analyzer
 //!
 //! (clap is unavailable offline; argument parsing is hand-rolled.)
 
@@ -34,12 +35,19 @@ fn main() {
         Some("swarm") => swarm(&args),
         Some("serve") => serve(&args),
         Some("kernel-demo") => kernel_demo(),
+        Some("lint") => lint(&args),
         _ => {
-            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo> [flags]");
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
-            eprintln!("  swarm   --seed S [--shared]   (--shared: one multi-tenant log for all workers)");
+            eprintln!("  swarm   --seed S [--shared] [--log <path>]");
+            eprintln!("          (--shared: one multi-tenant log for all workers;");
+            eprintln!("           --log: put that log on disk, ready for `lint --registry`)");
             eprintln!("  serve   --requests N");
+            eprintln!("  lint    <log> | --registry <log> | --src <dir>  [--json]");
+            eprintln!("          offline analyzer: segment/sidecar scrub + LogAct protocol");
+            eprintln!("          invariants, or seam-conformance lint over a source tree;");
+            eprintln!("          exits 1 if any Error-severity finding");
             std::process::exit(2);
         }
     }
@@ -109,15 +117,22 @@ fn recover(args: &[String]) {
 fn swarm(args: &[String]) {
     let seed = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(2026);
     let shared_log = args.iter().any(|a| a == "--shared");
+    let log_path = flag(args, "--log").map(std::path::PathBuf::from);
+    // Only the supervisor run writes the durable artifact: giving both
+    // runs the same path would interleave two swarms in one log.
     let run = |supervisor| {
         logact::swarm::run_swarm(&logact::swarm::SwarmConfig {
             supervisor,
             shared_log,
+            log_path: if supervisor { log_path.clone() } else { None },
             seed,
             ..logact::swarm::SwarmConfig::default()
         })
     };
     let (base, sup) = (run(false), run(true));
+    if let Some(p) = &log_path {
+        println!("supervisor swarm log written to {} (audit: logact lint --registry)", p.display());
+    }
     if let Some(records) = sup.shared_log_records {
         println!(
             "shared log: all {} worker buses multiplexed onto one backend ({records} records)",
@@ -161,6 +176,50 @@ fn serve(args: &[String]) {
         n as f64 / t0.elapsed().as_secs_f64()
     );
     h.shutdown();
+}
+
+/// `lint <log> | --registry <log> | --src <dir>  [--json]` — run the
+/// offline analyzer (`logact::lint`). Exit codes: 0 clean (warns are
+/// fine), 1 at least one Error finding, 2 the target could not be read.
+fn lint(args: &[String]) {
+    let json = args.iter().any(|a| a == "--json");
+    let report = if let Some(dir) = flag(args, "--src") {
+        logact::lint::lint_sources(std::path::Path::new(&dir))
+    } else if let Some(log) = flag(args, "--registry") {
+        logact::lint::lint_registry_file(std::path::Path::new(&log))
+    } else {
+        // First positional that is not the subcommand or a flag.
+        let target = args
+            .iter()
+            .skip(1)
+            .find(|a| *a != "--json" && !a.starts_with("--"));
+        let Some(log) = target else {
+            eprintln!("lint: nothing to lint (pass a log path, --registry <log>, or --src <dir>)");
+            std::process::exit(2);
+        };
+        logact::lint::lint_log_file(std::path::Path::new(log))
+    };
+    let report = match report {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: cannot analyze target: {e}");
+            std::process::exit(2);
+        }
+    };
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", report.to_table().to_markdown());
+        println!(
+            "{}: {} error(s), {} warning(s)",
+            report.target,
+            report.errors(),
+            report.warnings()
+        );
+    }
+    if report.errors() > 0 {
+        std::process::exit(1);
+    }
 }
 
 fn kernel_demo() {

@@ -24,12 +24,13 @@
 //!   and stop double-annotating files: more work, fewer tokens (paper:
 //!   +17% files, −41% tokens).
 
-use crate::bus::{AgentBus, BusRegistry, MemBackend, PayloadType, Role};
+use crate::bus::{AgentBus, BusRegistry, DurableBackend, MemBackend, PayloadType, Role};
 use crate::metrics::TokenMeter;
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::BTreeSet;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -79,6 +80,12 @@ pub struct SwarmConfig {
     /// [`BusRegistry`] over a single in-memory log) instead of private
     /// per-worker logs. Multi-tenant realism; identical outcomes.
     pub shared_log: bool,
+    /// Put the shared backend on disk at this path (a
+    /// [`DurableBackend`](crate::bus::DurableBackend) segment) instead of
+    /// in memory, so the swarm leaves an auditable artifact behind —
+    /// `logact lint --registry <path>` runs the offline analyzer over it.
+    /// Implies `shared_log`.
+    pub log_path: Option<PathBuf>,
     pub seed: u64,
     pub costs: SwarmCosts,
 }
@@ -91,6 +98,7 @@ impl Default for SwarmConfig {
             budget: Duration::from_secs(600),
             supervisor: false,
             shared_log: false,
+            log_path: None,
             seed: 42,
             costs: SwarmCosts::default(),
         }
@@ -247,10 +255,13 @@ impl Worker {
 /// Run the swarm experiment in one configuration.
 pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
     let repo = Mutex::new(Repo { annotated: BTreeSet::new(), annotations_done: 0 });
-    let registry = if cfg.shared_log {
-        Some(BusRegistry::new(Arc::new(MemBackend::new())))
-    } else {
-        None
+    let registry = match &cfg.log_path {
+        Some(path) => {
+            let backend = DurableBackend::open(path).expect("open swarm shared log");
+            Some(BusRegistry::new(Arc::new(backend)))
+        }
+        None if cfg.shared_log => Some(BusRegistry::new(Arc::new(MemBackend::new()))),
+        None => None,
     };
     let mut workers: Vec<Worker> = (0..cfg.workers)
         .map(|i| Worker::new(i, cfg.seed, cfg.costs.infra_problems, registry.as_ref()))
@@ -342,7 +353,7 @@ pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
     let worker_tokens: u64 = workers.iter().map(|w| w.meter.total()).sum();
     let supervisor_tokens = supervisor_meter.total();
     let mut label = if cfg.supervisor { "supervisor".to_string() } else { "base".to_string() };
-    if cfg.shared_log {
+    if cfg.shared_log || cfg.log_path.is_some() {
         label.push_str("+shared-log");
     }
     SwarmOutcome {

@@ -15,7 +15,7 @@ use logact::bus::{
     PREAMBLE_LEN,
 };
 use logact::util::json::Json;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// `[u32 len][u32 crc]` — mirrors `bus::durable::FRAME_HEADER`.
 const FRAME_HEADER: u64 = 8;
@@ -29,7 +29,7 @@ fn tmp(name: &str) -> PathBuf {
     p
 }
 
-fn sidecar(p: &PathBuf) -> PathBuf {
+fn sidecar(p: &Path) -> PathBuf {
     PathBuf::from(format!("{}.ckpt", p.display()))
 }
 

@@ -1,0 +1,392 @@
+//! Seeded-violation matrix for `logact lint`.
+//!
+//! Acceptance for the offline analyzer: build real durable segments with
+//! one protocol/physical violation injected each, and assert the linter
+//! flags **exactly** that violation (plus only the warns that logically
+//! follow) — then build clean mixed-codec fixtures and assert **zero**
+//! findings. Runs entirely offline against temp files.
+
+use logact::bus::checkpoint::sidecar_path;
+use logact::bus::{
+    BusRegistry, Checkpoint, DurableBackend, Entry, LogBackend, Payload, PayloadType, TypeIndex,
+    Vote, VoteKind,
+};
+use logact::lint::{lint_log_file, lint_registry_file, Finding, Report, Severity};
+use logact::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logact-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("lint-{}-{}.log", name, std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(sidecar_path(&p));
+    p
+}
+
+fn ent(pos: u64, t: PayloadType, body: Json) -> Vec<u8> {
+    Entry { position: pos, realtime_ts: 1_000 + pos, payload: Payload::new(t, "w", body) }
+        .to_bytes()
+}
+
+fn ent_legacy(pos: u64, t: PayloadType, body: Json) -> Vec<u8> {
+    Entry { position: pos, realtime_ts: 1_000 + pos, payload: Payload::new(t, "w", body) }
+        .to_json_bytes()
+}
+
+fn ipos(ip: u64) -> Json {
+    Json::obj(vec![("intent_pos", Json::Int(ip as i64))])
+}
+
+fn vote(ip: u64, approve: bool, vtype: &str) -> Json {
+    Vote {
+        intent_pos: ip,
+        kind: if approve { VoteKind::Approve } else { VoteKind::Reject },
+        voter_type: vtype.into(),
+        reason: "seeded".into(),
+    }
+    .to_body()
+}
+
+fn decider_policy(kind: &str, voters: &[&str]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("decider")),
+        (
+            "policy",
+            Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("voters", Json::Arr(voters.iter().map(|v| Json::str(*v)).collect())),
+            ]),
+        ),
+    ])
+}
+
+/// Write `records` as one cleanly-closed durable segment (the drop writes
+/// a sidecar covering everything) and return its path.
+fn build_log(name: &str, records: &[Vec<u8>]) -> PathBuf {
+    let p = tmp(name);
+    let b = DurableBackend::open(&p).unwrap();
+    for r in records {
+        b.append(r).unwrap();
+    }
+    drop(b);
+    p
+}
+
+fn error_codes(r: &Report) -> Vec<&'static str> {
+    r.findings.iter().filter(|f| f.severity == Severity::Error).map(|f| f.code).collect()
+}
+
+fn warn_codes(r: &Report) -> Vec<&'static str> {
+    r.findings.iter().filter(|f| f.severity == Severity::Warn).map(|f| f.code).collect()
+}
+
+#[test]
+fn clean_mixed_codec_log_yields_zero_findings() {
+    use PayloadType::*;
+    let spec: Vec<(PayloadType, Json)> = vec![
+        (Mail, Json::obj(vec![("text", Json::str("kickoff"))])),
+        (Policy, decider_policy("first_voter", &[])),
+        (Intent, Json::obj(vec![("code", Json::str("ls"))])),
+        (Vote, vote(2, true, "rule")),
+        (Commit, ipos(2)),
+        (Result, ipos(2)),
+        (InfIn, Json::obj(vec![("prompt", Json::str("p"))])),
+        (InfOut, Json::obj(vec![("text", Json::str("t"))])),
+        (Policy, decider_policy("boolean_and", &["rule", "llm"])),
+        (Intent, Json::obj(vec![("code", Json::str("rm"))])),
+        (Vote, vote(9, true, "rule")),
+        (Vote, vote(9, true, "llm")),
+        (Commit, ipos(9)),
+        (Commit, ipos(9)), // duplicate identical decision: legal
+        (Result, ipos(9)),
+        (Result, Json::obj(vec![("reboot", Json::Bool(true))])), // reboot marker: legal
+    ];
+    // Every third record rides the legacy JSON codec: the linter must
+    // treat both codecs as first-class.
+    let records: Vec<Vec<u8>> = spec
+        .into_iter()
+        .enumerate()
+        .map(|(i, (t, body))| {
+            if i % 3 == 2 {
+                ent_legacy(i as u64, t, body)
+            } else {
+                ent(i as u64, t, body)
+            }
+        })
+        .collect();
+    let p = build_log("clean", &records);
+    let r = lint_log_file(&p).unwrap();
+    assert!(r.findings.is_empty(), "clean log flagged:\n{}", r.to_table().to_markdown());
+}
+
+#[test]
+fn each_seeded_protocol_violation_is_flagged_exactly() {
+    use PayloadType::*;
+    // (fixture name, records, exact Error codes, position of first error)
+    let matrix: Vec<(&str, Vec<Vec<u8>>, Vec<&str>, u64)> = vec![
+        (
+            "dangling-vote",
+            vec![ent(0, Intent, Json::Null), ent(1, Vote, vote(999, true, "rule"))],
+            vec!["dangling-intent-pos"],
+            1,
+        ),
+        (
+            "dangling-commit-on-mail",
+            vec![
+                ent(0, Mail, Json::Null),
+                ent(1, Intent, Json::Null),
+                ent(2, Commit, ipos(0)), // points at the Mail, not the Intent
+            ],
+            vec!["dangling-intent-pos"],
+            2,
+        ),
+        (
+            "missing-intent-pos-field",
+            vec![ent(0, Intent, Json::Null), ent(1, Abort, Json::Null)],
+            vec!["dangling-intent-pos"],
+            1,
+        ),
+        (
+            "commit-abort-conflict",
+            vec![
+                ent(0, Intent, Json::Null),
+                ent(1, Commit, ipos(0)),
+                ent(2, Abort, ipos(0)),
+                ent(3, Result, ipos(0)),
+            ],
+            vec!["commit-abort-conflict"],
+            2,
+        ),
+        (
+            "duplicate-result",
+            vec![
+                ent(0, Intent, Json::Null),
+                ent(1, Commit, ipos(0)),
+                ent(2, Result, ipos(0)),
+                ent(3, Result, ipos(0)),
+            ],
+            vec!["duplicate-result"],
+            3,
+        ),
+        (
+            "result-before-commit",
+            vec![
+                ent(0, Intent, Json::Null),
+                ent(1, Result, ipos(0)),
+                ent(2, Commit, ipos(0)),
+            ],
+            vec!["result-before-commit"],
+            1,
+        ),
+    ];
+    for (name, records, want, at) in matrix {
+        let p = build_log(name, &records);
+        let r = lint_log_file(&p).unwrap();
+        assert_eq!(error_codes(&r), want, "{name}:\n{}", r.to_table().to_markdown());
+        let first = r.findings.iter().find(|f| f.severity == Severity::Error).unwrap();
+        assert_eq!(first.position, Some(at), "{name}: error anchored to the wrong entry");
+    }
+
+    // Warn-level edge states: exact code lists, zero errors.
+    let p = build_log("orphan", &[ent(0, Intent, Json::Null)]);
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["orphan-intent"]);
+
+    let p = build_log("no-result", &[ent(0, Intent, Json::Null), ent(1, Commit, ipos(0))]);
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["missing-result"]);
+}
+
+#[test]
+fn position_mismatch_is_flagged() {
+    use PayloadType::*;
+    // Record 1 claims to be position 5: the frame index says otherwise.
+    let p = build_log(
+        "posmismatch",
+        &[ent(0, Mail, Json::Null), ent(5, Mail, Json::Null)],
+    );
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["position-mismatch"]);
+    assert_eq!(r.findings[0].position, Some(1));
+}
+
+#[test]
+fn stale_sidecar_and_torn_tail_are_warned_not_errored() {
+    use PayloadType::*;
+    // Stale: two appends after the last checkpoint, no closing sidecar.
+    let p = tmp("stale");
+    let b = DurableBackend::open(&p).unwrap();
+    b.append(&ent(0, Mail, Json::Null)).unwrap();
+    b.flush().unwrap(); // sidecar covers exactly one frame
+    b.set_auto_checkpoint(false); // crash: drop writes no newer sidecar
+    b.append(&ent(1, Mail, Json::Null)).unwrap();
+    b.append(&ent(2, Mail, Json::Null)).unwrap();
+    drop(b);
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["stale-sidecar"]);
+    assert!(r.findings[0].detail.contains("2 frame(s)"), "{}", r.findings[0].detail);
+
+    // Torn tail: a frame header promising more bytes than the file holds.
+    let p = build_log("torn", &[ent(0, Mail, Json::Null), ent(1, Mail, Json::Null)]);
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes.extend_from_slice(&100u32.to_le_bytes()); // len: 100 bytes...
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // (bogus crc)
+    bytes.extend_from_slice(b"short"); // ...but only 5 present
+    std::fs::write(&p, &bytes).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["torn-tail"]);
+    // The linter is read-only: the torn bytes must still be there after.
+    assert_eq!(std::fs::read(&p).unwrap(), bytes, "linter mutated the segment");
+}
+
+#[test]
+fn crc_rot_is_an_error_and_verify_sees_the_same_frame() {
+    use PayloadType::*;
+    let p = tmp("rot");
+    let b = DurableBackend::open(&p).unwrap();
+    for i in 0..4 {
+        b.append(&ent(i, Mail, Json::obj(vec![("i", Json::Int(i as i64))]))).unwrap();
+    }
+    b.flush().unwrap();
+    assert_eq!(b.verify().unwrap(), None, "pristine log must verify");
+
+    // Flip one payload byte of frame 2, found by walking real headers.
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mut off = 32u64; // preamble
+    for _ in 0..2 {
+        let len = u32::from_le_bytes(bytes[off as usize..off as usize + 4].try_into().unwrap());
+        off += 8 + u64::from(len);
+    }
+    let target = off as usize + 8 + 3; // fourth payload byte of frame 2
+    bytes[target] ^= 0x20;
+    std::fs::write(&p, &bytes).unwrap();
+
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["crc-mismatch"], "{}", r.to_table().to_markdown());
+    let f = r.findings.iter().find(|f| f.code == "crc-mismatch").unwrap();
+    assert_eq!(f.position, Some(2));
+    assert_eq!(f.offset, Some(off));
+    // verify() wraps the same scrub: it must finger the same frame.
+    assert_eq!(b.verify().unwrap(), Some(2));
+    b.set_auto_checkpoint(false); // keep the drop from rewriting anything
+    drop(b);
+}
+
+#[test]
+fn sidecar_tampering_matrix() {
+    use PayloadType::*;
+    let records: Vec<Vec<u8>> = (0..4).map(|i| ent(i, Mail, Json::Null)).collect();
+
+    // Hand-forge a sidecar whose TypeIndex lies (claims the log holds
+    // Intents) while frames/uuid/log_len all check out.
+    let p = build_log("typeforge", &records);
+    let bytes = std::fs::read(sidecar_path(&p)).unwrap();
+    let good = Checkpoint::decode(&bytes).expect("well-formed sidecar");
+    let mut wrong_types = TypeIndex::new();
+    for i in 0..4u64 {
+        wrong_types.note(i, &ent(i, Intent, Json::Null));
+    }
+    let forged = Checkpoint {
+        uuid: good.uuid,
+        data_start: good.data_start,
+        log_len: good.log_len,
+        frame_lens: good.frame_lens.clone(),
+        types: wrong_types,
+        aux: good.aux,
+    };
+    std::fs::write(sidecar_path(&p), forged.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["type-index-mismatch"], "{}", r.to_table().to_markdown());
+
+    // A sidecar copied from another log: warned as foreign, not an error
+    // (reopen would reject it and full-scan).
+    let pa = build_log("foreign-a", &records);
+    let pb = build_log("foreign-b", &records);
+    std::fs::copy(sidecar_path(&pb), sidecar_path(&pa)).unwrap();
+    let r = lint_log_file(&pa).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["foreign-sidecar"]);
+
+    // Torn sidecar write → corrupt-sidecar warn.
+    let p = build_log("ckpt-torn", &records);
+    let sc = std::fs::read(sidecar_path(&p)).unwrap();
+    std::fs::write(sidecar_path(&p), &sc[..sc.len() / 2]).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["corrupt-sidecar"]);
+
+    // Missing sidecar → warn (reopen pays a full scan).
+    let p = build_log("ckpt-missing", &records);
+    std::fs::remove_file(sidecar_path(&p)).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["missing-sidecar"]);
+}
+
+#[test]
+fn registry_lint_scopes_findings_per_tenant() {
+    use PayloadType::*;
+    let p = tmp("registry");
+    {
+        let registry = BusRegistry::new(Arc::new(DurableBackend::open(&p).unwrap()));
+        let alice = registry.backend("alice").unwrap();
+        let bob = registry.backend("bob").unwrap();
+        // Interleave tenants on the shared log. Alice is clean; Bob
+        // commits and then aborts the same intent.
+        alice.append(&ent(0, Intent, Json::Null)).unwrap();
+        bob.append(&ent(0, Intent, Json::Null)).unwrap();
+        alice.append(&ent(1, Commit, ipos(0))).unwrap();
+        bob.append(&ent(1, Commit, ipos(0))).unwrap();
+        alice.append(&ent(2, Result, ipos(0))).unwrap();
+        bob.append(&ent(2, Abort, ipos(0))).unwrap();
+        bob.append(&ent(3, Result, ipos(0))).unwrap();
+
+        // Live per-tenant lint through the registry.
+        let bob_findings = registry.lint_namespace("bob").unwrap();
+        assert!(bob_findings.iter().all(|f| f.scope.as_deref() == Some("bob")));
+        assert!(bob_findings.iter().any(|f| f.code == "commit-abort-conflict"));
+        assert!(registry.lint_namespace("alice").unwrap().is_empty());
+        assert_eq!(
+            registry.lint_namespace("nobody").unwrap_err().kind(),
+            std::io::ErrorKind::NotFound
+        );
+    }
+
+    // Offline lint of the shared segment: same verdicts, namespaced.
+    let r = lint_registry_file(&p).unwrap();
+    let errors: Vec<&Finding> =
+        r.findings.iter().filter(|f| f.severity == Severity::Error).collect();
+    assert_eq!(errors.len(), 1, "{}", r.to_table().to_markdown());
+    assert_eq!(errors[0].code, "commit-abort-conflict");
+    assert_eq!(errors[0].scope.as_deref(), Some("bob"));
+    assert!(
+        r.findings.iter().all(|f| f.scope.as_deref() != Some("alice")),
+        "alice's clean namespace picked up findings:\n{}",
+        r.to_table().to_markdown()
+    );
+}
+
+#[test]
+fn swarm_log_artifact_is_lintable_and_clean() {
+    let p = tmp("swarm");
+    let outcome = logact::swarm::run_swarm(&logact::swarm::SwarmConfig {
+        supervisor: true,
+        shared_log: true,
+        log_path: Some(p.clone()),
+        seed: 7,
+        ..logact::swarm::SwarmConfig::default()
+    });
+    assert!(outcome.shared_log_records.unwrap() > 0);
+    let r = lint_registry_file(&p).unwrap();
+    assert!(
+        r.findings.is_empty(),
+        "swarm artifact flagged:\n{}",
+        r.to_table().to_markdown()
+    );
+}
