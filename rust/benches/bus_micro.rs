@@ -15,6 +15,10 @@
 //! * **lint scrub** — the offline `logact lint` pass (CRC walk + decode +
 //!   protocol walk) over a 100k-record log, bounding what a CI integrity
 //!   gate costs;
+//! * **append lease** — the epoch-fenced `<log>.lease` protocol: the
+//!   fsync-bound acquire/release cycle an open/close pair pays, the
+//!   takeover cost over an orphaned holder, and the pure-read
+//!   revalidation every durable commit performs twice;
 //! * **codec** — binary v1 frames vs the legacy JSON frames,
 //!   encode/decode throughput and bytes per entry.
 //!
@@ -485,6 +489,78 @@ fn bench_lint_scan(t: &mut Table, n: u64) -> (f64, f64) {
     (ms, mbs)
 }
 
+/// Append-lease protocol costs over real files: the acquire/release
+/// cycle a `DurableBackend` open/close pair pays (two lease fsyncs), the
+/// single-fsync takeover of an orphaned (crashed-holder) lease at ttl 0,
+/// and the revalidation — one lease-file read + decode — that every
+/// durable commit performs twice (before the blob write and after the
+/// segment fsync). Returns (acquire_release_ms, takeover_ms,
+/// revalidate_us).
+fn bench_lease(t: &mut Table, cycles: u32, revalidations: u32) -> (f64, f64, f64) {
+    use logact::bus::lease::{self, LeaseConfig};
+    use logact::bus::FsIo;
+
+    let seg = std::env::temp_dir().join(format!("logact-bus-lease-{}.log", std::process::id()));
+    let lp = lease::lease_path(&seg);
+    let _ = std::fs::remove_file(&lp);
+    let io = FsIo;
+    let uuid: u128 = 0x1ea5_eb05_0000_0001_0000_0000_0000_0001;
+    let cfg = LeaseConfig { holder: "bench".into(), ..LeaseConfig::default() };
+
+    // Clean handoff cycles: acquire (read, tmp create/write/fsync/rename,
+    // read-back) + release (revalidate read, tmp create/write/fsync/rename).
+    let t0 = Instant::now();
+    for _ in 0..cycles {
+        let (rec, took_over) = lease::acquire(&io, &lp, uuid, 0, &cfg).unwrap();
+        assert!(!took_over, "a released lease must hand off cleanly");
+        lease::release(&io, &lp, &rec).unwrap();
+    }
+    let clean = t0.elapsed();
+
+    // Takeover cycles: each iteration finds the previous iteration's
+    // un-released record and, at ttl 0, immediately steals it — the
+    // successor's cost once the TTL has already expired.
+    let steal =
+        LeaseConfig { holder: "bench-successor".into(), ttl_ms: 0, ..LeaseConfig::default() };
+    let (orphan, _) = lease::acquire(&io, &lp, uuid, 0, &cfg).unwrap();
+    let mut epoch = orphan.epoch;
+    let t0 = Instant::now();
+    for _ in 0..cycles {
+        let (rec, took_over) = lease::acquire(&io, &lp, uuid, 0, &steal).unwrap();
+        assert!(took_over && rec.epoch > epoch, "each steal bumps the epoch");
+        epoch = rec.epoch;
+    }
+    let takeover = t0.elapsed();
+
+    // Revalidation: the read-only ownership check on the commit hot path.
+    let (mine, _) = lease::acquire(&io, &lp, uuid, 0, &steal).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..revalidations {
+        lease::revalidate(&io, &lp, &mine).unwrap();
+    }
+    let reval = t0.elapsed();
+    lease::release(&io, &lp, &mine).unwrap();
+    let _ = std::fs::remove_file(&lp);
+
+    let acquire_ms = clean.as_secs_f64() * 1e3 / cycles as f64;
+    let takeover_ms = takeover.as_secs_f64() * 1e3 / cycles as f64;
+    let reval_us = reval.as_micros() as f64 / revalidations as f64;
+    for (mode, iters, ops, fsyncs, avg) in [
+        ("acquire + release (clean handoff)", cycles, 11u32, 2u32, format!("{acquire_ms:.2}ms")),
+        ("takeover (ttl 0, orphaned holder)", cycles, 6, 1, format!("{takeover_ms:.2}ms")),
+        ("revalidate (2x per durable commit)", revalidations, 1, 0, format!("{reval_us:.1}µs")),
+    ] {
+        t.row(&[
+            mode.to_string(),
+            format!("{iters}"),
+            format!("{ops}"),
+            format!("{fsyncs}"),
+            avg,
+        ]);
+    }
+    (acquire_ms, takeover_ms, reval_us)
+}
+
 /// Binary v1 frames vs legacy JSON frames: encode + decode throughput and
 /// frame size. Returns (bin_enc, json_enc, bin_dec, json_dec) in
 /// k-records/s.
@@ -638,9 +714,13 @@ fn main() {
          sidecar restores both indexes, so a clean reopen scans 0 segment bytes; a missing or \
          corrupt sidecar falls back to the full scan, asserted identical by the crash-matrix test)"
     );
-    metrics.put("reopen_checkpoint_ms", ck_ms);
-    metrics.put("reopen_fullscan_ms", full_ms);
-    metrics.put("reopen_speedup", ro_speedup);
+    // `_leased_` names: open acquires the epoch-fenced append lease
+    // since the multi-process ownership work, so these measure recovery
+    // *plus* one durable lease acquisition — renamed so the CI gate
+    // seeds a fresh baseline instead of comparing across semantics.
+    metrics.put("reopen_leased_checkpoint_ms", ck_ms);
+    metrics.put("reopen_leased_fullscan_ms", full_ms);
+    metrics.put("reopen_leased_speedup", ro_speedup);
 
     let mut ls = Table::new(
         "lint scrub — offline integrity + protocol walk over a durable log",
@@ -654,6 +734,23 @@ fn main() {
     );
     metrics.put("lint_scan_ms_100k", lint_ms);
     metrics.put("lint_scan_mb_per_s", lint_mbs);
+
+    let mut le = Table::new(
+        "append lease — epoch-fenced multi-process log ownership",
+        &["path", "iterations", "lease ops", "fsyncs", "avg latency"],
+    );
+    let (lease_acq_ms, lease_steal_ms, lease_reval_us) = bench_lease(&mut le, 200, 2_000);
+    le.emit("bus_lease");
+    println!(
+        "lease: clean acquire+release {lease_acq_ms:.2}ms, expired-ttl takeover \
+         {lease_steal_ms:.2}ms, revalidate {lease_reval_us:.1}µs — a durable commit pays two \
+         revalidates (pure lease-file reads), so fencing rides inside the fsync budget it guards"
+    );
+    metrics.put("lease_acquire_release_ms", lease_acq_ms);
+    metrics.put("lease_takeover_ms", lease_steal_ms);
+    // `_ms` so the gate reads it lower-is-better (it infers direction
+    // from the suffix); the value is sub-millisecond but positive.
+    metrics.put("lease_revalidate_ms", lease_reval_us / 1e3);
 
     let mut cd = Table::new(
         "entry codec — binary v1 vs legacy JSON frames",

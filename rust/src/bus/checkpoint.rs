@@ -24,10 +24,14 @@
 //! stale sidecar can cost time, never correctness — and a fresh sidecar
 //! is rewritten after the scan.
 //!
-//! The sidecar is rewritten in place (`create` + write + fsync) rather
-//! than via tmp-and-rename: a crash mid-rewrite leaves a torn sidecar
-//! whose CRC fails, which is exactly the "fall back to full scan" path.
-//! Worst case for any checkpoint failure is one slow reopen.
+//! The sidecar is published atomically: the rewrite lands in
+//! `<log>.ckpt.tmp` (`create` + write + fsync) and is then `rename`d over
+//! `<log>.ckpt`, so a crash mid-rewrite leaves the *previous* checkpoint
+//! intact instead of a torn file. The CRC remains the backstop for
+//! everything rename can't promise (bit rot, a partial tmp fsync'd by
+//! the OS anyway): a sidecar that fails verification just falls back to
+//! the full scan. Worst case for any checkpoint failure is one slow
+//! reopen.
 //!
 //! Aux sections let layers above the backend ride the same sidecar:
 //! [`BusRegistry`](super::BusRegistry) persists its namespace maps as an
@@ -310,8 +314,9 @@ mod tests {
 
     #[test]
     fn every_single_byte_flip_is_caught() {
-        // The sidecar's own CRC must catch any one-byte corruption — this
-        // is the guard the in-place (non-atomic) rewrite leans on.
+        // The sidecar's own CRC must catch any one-byte corruption — the
+        // backstop behind the write-then-rename publication for damage
+        // rename can't rule out (bit rot, torn tmp fsync).
         let bytes = sample().encode();
         for i in 0..bytes.len() {
             let mut bad = bytes.clone();

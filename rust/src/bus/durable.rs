@@ -33,14 +33,22 @@
 //!   a [`SegmentIo`], so crash points (torn batch write, failed rollback,
 //!   torn checkpoint write) are deterministically testable via
 //!   [`super::io::FaultIo`] instead of hand-picked truncations.
+//! * **Fenced ownership** — open acquires an epoch-stamped `<log>.lease`
+//!   ([`super::lease`]) and every commit/flush revalidates it, so two OS
+//!   processes can never fork one segment: a crashed holder's lease goes
+//!   heartbeat-stale and is taken over (epoch bump), while a stale
+//!   holder's handle gets a typed [`lease::Fenced`] error and refuses
+//!   appends — reads keep working.
 
 use super::backend::{BackendStats, LogBackend, TypeIndex};
 use super::checkpoint::{
     check_preamble, encode_preamble, fresh_uuid, sidecar_path, Checkpoint, CheckpointStats,
     PreambleCheck, PREAMBLE_LEN,
 };
-use super::entry::PayloadType;
+use super::entry::{Entry, Payload, PayloadType};
 use super::io::{FsIo, SegmentIo};
+use super::lease::{self, LeaseConfig, LeaseRecord};
+use crate::util::clock::Clock;
 use crate::util::crc32;
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -51,7 +59,10 @@ use std::sync::{Arc, Mutex};
 pub struct DurableBackend {
     path: PathBuf,
     ckpt_path: PathBuf,
+    lease_file: PathBuf,
     io: Arc<dyn SegmentIo>,
+    /// Heartbeat stamps and takeover backoff are charged here.
+    clock: Clock,
     inner: Mutex<Inner>,
     /// fsync at every commit point — once per `append`, once per
     /// `append_batch` (disable to measure raw write cost; `flush` still
@@ -95,6 +106,18 @@ struct Inner {
     /// Reads of the indexed prefix stay valid — the index only ever
     /// points at bytes that were committed intact.
     poisoned: bool,
+    /// The append lease this handle holds (see [`super::lease`]): every
+    /// commit and flush re-reads `<log>.lease` and refuses once the
+    /// record on disk is no longer ours.
+    lease: LeaseRecord,
+    /// This open stole the lease from a crashed/stale holder rather than
+    /// creating it or inheriting a cleanly released one.
+    took_over: bool,
+    /// Set (with the rejection details) when a revalidation found the
+    /// lease superseded. Distinct from `poisoned`: a fenced handle's
+    /// index still matches the disk, so reads stay valid — it has merely
+    /// lost the *right* to append.
+    fenced: Option<lease::Fenced>,
 }
 
 pub const FRAME_HEADER: usize = 8; // u32 len + u32 crc
@@ -112,21 +135,70 @@ fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(bytes);
 }
 
+/// The highest append-lease epoch any in-log `driver_election` marker
+/// attests (0 when there are none — registry logs, legacy logs, buses
+/// that never elected). Lease acquisition bumps past this as well as the
+/// on-disk record, so epochs stay monotone even if `<log>.lease` was
+/// deleted between sessions. Only Policy-typed frames are read — one
+/// indexed point-read each, not a log scan — and only on opens where the
+/// lease file doesn't already attest an epoch for this segment (a valid
+/// lease dominates every marker by construction).
+fn max_log_lease_epoch(
+    io: &dyn SegmentIo,
+    file: &File,
+    frames: &[(u64, u32)],
+    types: &TypeIndex,
+) -> u64 {
+    let positions = match types.positions(PayloadType::Policy, 0, frames.len() as u64) {
+        Some(p) => p,
+        None => return 0,
+    };
+    let mut max = 0u64;
+    for pos in positions {
+        let (off, len) = frames[pos as usize];
+        let mut buf = vec![0u8; len as usize];
+        if io.read_exact_at(file, &mut buf, off + FRAME_HEADER as u64).is_err() {
+            continue;
+        }
+        if let Some(e) = Entry::from_bytes(&buf) {
+            if let Some(epoch) = crate::sm::fence::lease_epoch_of(&e) {
+                max = max.max(epoch);
+            }
+        }
+    }
+    max
+}
+
 impl DurableBackend {
     /// Open (or create) the log at `path` with real filesystem I/O.
     pub fn open(path: impl AsRef<Path>) -> std::io::Result<DurableBackend> {
         DurableBackend::open_with_io(path, Arc::new(FsIo))
     }
 
-    /// Open with an explicit [`SegmentIo`] (fault injection in tests).
-    ///
-    /// Recovery order: read/stamp the preamble, adopt the sidecar if it
-    /// verifies, scan whatever the sidecar doesn't cover, truncate any
-    /// torn tail, and rewrite the sidecar if the one on disk didn't fully
-    /// describe the recovered log.
+    /// Open with an explicit [`SegmentIo`] (fault injection in tests) and
+    /// the default lease policy.
     pub fn open_with_io(
         path: impl AsRef<Path>,
         io: Arc<dyn SegmentIo>,
+    ) -> std::io::Result<DurableBackend> {
+        DurableBackend::open_with(path, io, LeaseConfig::default())
+    }
+
+    /// Open with an explicit [`SegmentIo`] and lease policy.
+    ///
+    /// Recovery order: read/stamp the preamble, adopt the sidecar if it
+    /// verifies, scan whatever the sidecar doesn't cover, **acquire the
+    /// append lease**, then truncate any torn tail and rewrite the
+    /// sidecar if the one on disk didn't fully describe the recovered
+    /// log. The lease comes before the mutations: a process that fails
+    /// to acquire it (a live holder owns the log) must not have
+    /// truncated a tail the owner was mid-way through writing. Open
+    /// fails with `WouldBlock` when the holder's heartbeat is fresh
+    /// after `cfg.attempts` backoff rounds.
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        io: Arc<dyn SegmentIo>,
+        cfg: LeaseConfig,
     ) -> std::io::Result<DurableBackend> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
@@ -216,6 +288,30 @@ impl DurableBackend {
             frames.push((pos, rec_len));
             pos += FRAME_HEADER as u64 + rec_len as u64;
         }
+
+        // Acquire the append lease before mutating the recovered tail:
+        // what looks like a torn suffix may be a live owner's in-flight
+        // batch, and truncating it out from under them would fork the
+        // log. The epoch floor is the highest lease epoch any in-log
+        // election marker attests, so takeover epochs stay monotone even
+        // if the lease file itself was deleted — but a genuine on-disk
+        // lease already dominates every marker (each marker records an
+        // epoch the lease itself once held, and acquisition only bumps
+        // it), so the per-marker point-reads are paid only when the
+        // lease attests nothing for this segment: missing, undecodable,
+        // or stamped with a foreign uuid. A clean reopen stays free of
+        // per-frame reads.
+        let lease_file = lease::lease_path(&path);
+        let lease_attests = io
+            .read_file(&lease_file)
+            .ok()
+            .as_deref()
+            .and_then(LeaseRecord::decode)
+            .is_some_and(|rec| rec.uuid == uuid);
+        let log_epoch =
+            if lease_attests { 0 } else { max_log_lease_epoch(&*io, &file, &frames, &types) };
+        let (mut lease_rec, took_over) = lease::acquire(&*io, &lease_file, uuid, log_epoch, &cfg)?;
+
         if pos < len {
             // Drop the torn/corrupt suffix so future appends are clean.
             io.truncate(&file, pos)?;
@@ -223,12 +319,16 @@ impl DurableBackend {
         }
         if pos == 0 && data_start == 0 {
             // A legacy or torn-headed segment scanned down to nothing:
-            // the file is empty now, so adopt the preamble format.
+            // the file is empty now, so adopt the preamble format (and
+            // restamp the lease with the new identity — it was acquired
+            // under the legacy uuid 0).
             uuid = fresh_uuid();
             io.write_all(&file, &encode_preamble(uuid))?;
             io.sync(&file)?;
             data_start = PREAMBLE_LEN;
             pos = PREAMBLE_LEN;
+            lease_rec.uuid = uuid;
+            lease::write_atomic(&*io, &lease_file, &lease_rec)?;
         }
 
         let rewrite = ckpt_stats.sidecar_rejected
@@ -236,7 +336,9 @@ impl DurableBackend {
         let backend = DurableBackend {
             path,
             ckpt_path,
+            lease_file,
             io,
+            clock: cfg.clock,
             inner: Mutex::new(Inner {
                 file,
                 uuid,
@@ -250,6 +352,9 @@ impl DurableBackend {
                 sidecar_writable,
                 dirty: false,
                 poisoned: false,
+                lease: lease_rec,
+                took_over,
+                fenced: None,
             }),
             sync_each_append: true,
             auto_checkpoint: AtomicBool::new(true),
@@ -327,6 +432,63 @@ impl DurableBackend {
         &self.ckpt_path
     }
 
+    /// The append lease's path (`<log>.lease`).
+    pub fn lease_file_path(&self) -> &Path {
+        &self.lease_file
+    }
+
+    /// The append-lease epoch this handle holds.
+    pub fn lease_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().lease.epoch
+    }
+
+    /// The holder id stamped into this handle's lease.
+    pub fn lease_holder(&self) -> String {
+        self.inner.lock().unwrap().lease.holder.clone()
+    }
+
+    /// Did this open *steal* the lease (previous holder crashed, went
+    /// heartbeat-stale, or left an unreadable record) rather than create
+    /// it or inherit a cleanly released one? A takeover's first append
+    /// should be [`DurableBackend::append_election_marker`].
+    pub fn lease_took_over(&self) -> bool {
+        self.inner.lock().unwrap().took_over
+    }
+
+    /// Has this handle been fenced (its lease superseded)? Fenced
+    /// handles refuse appends and flushes but still serve reads.
+    pub fn is_fenced(&self) -> bool {
+        self.inner.lock().unwrap().fenced.is_some()
+    }
+
+    /// Append the `driver_election` policy marker that ties the on-disk
+    /// lease epoch to the in-log fencing story — meant to be a takeover's
+    /// first append, so replayers learn the old driver is gone *and*
+    /// auditors can check the two epochs agree. Returns the marker's
+    /// position (which is the election epoch a
+    /// [`crate::sm::FenceTracker`] derives from it).
+    pub fn append_election_marker(&self, driver_id: &str) -> std::io::Result<u64> {
+        let (position, epoch) = {
+            let g = self.inner.lock().unwrap();
+            if let Some(f) = &g.fenced {
+                return Err(lease::fenced_error(f.clone()));
+            }
+            (g.frames.len() as u64, g.lease.epoch)
+        };
+        let marker = Entry {
+            position,
+            realtime_ts: self.clock.realtime_ms(),
+            payload: Payload::new(
+                PayloadType::Policy,
+                driver_id,
+                crate::sm::fence::election_body_with_epoch(driver_id, epoch),
+            ),
+        };
+        let at = self.append(&marker.to_bytes())?;
+        debug_assert_eq!(at, position, "election marker landed past its stamped position");
+        Ok(at)
+    }
+
     /// This segment's preamble UUID (0 for legacy preamble-less logs).
     pub fn segment_uuid(&self) -> u128 {
         self.inner.lock().unwrap().uuid
@@ -337,38 +499,67 @@ impl DurableBackend {
         self.auto_checkpoint.store(on, Ordering::Relaxed);
     }
 
-    /// Snapshot the current durable state into the sidecar: fsync the
-    /// segment (the sidecar must never describe frames the disk might not
-    /// hold), then rewrite `<log>.ckpt` in place and fsync it. A crash
-    /// anywhere in between leaves either the old sidecar or a torn one —
-    /// both fall back to the full scan on reopen.
+    /// Snapshot the current durable state into the sidecar: revalidate
+    /// the lease, fsync the segment (the sidecar must never describe
+    /// frames the disk might not hold), publish the new `<log>.ckpt`
+    /// atomically (write `<log>.ckpt.tmp`, fsync, rename), and finally
+    /// refresh the lease heartbeat — flushing is how a live holder
+    /// proves it is alive. A crash anywhere in between leaves the old
+    /// sidecar (rename is atomic), and a takeover observed at either
+    /// lease read fences this handle.
     pub fn write_checkpoint(&self) -> std::io::Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(poisoned_err());
         }
+        self.check_lease(&mut g)?;
         self.io.sync(&g.file)?;
-        if !g.sidecar_writable {
-            // Damaged preamble: the segment is durable (synced above) but
-            // a sidecar stamped with this session's throwaway UUID would
-            // be rejected by every future open — don't write one.
-            return Ok(());
+        if g.sidecar_writable {
+            let ck = Checkpoint {
+                uuid: g.uuid,
+                data_start: g.data_start,
+                log_len: g.write_pos,
+                frame_lens: g.frames.iter().map(|&(_, l)| l).collect(),
+                types: g.types.clone(),
+                aux: g.aux.clone(),
+            };
+            let bytes = ck.encode();
+            let mut os = self.ckpt_path.as_os_str().to_os_string();
+            os.push(".tmp");
+            let tmp = PathBuf::from(os);
+            let f = self.io.create(&tmp)?;
+            self.io.write_all(&f, &bytes)?;
+            self.io.sync(&f)?;
+            self.io.rename(&tmp, &self.ckpt_path)?;
+            g.ckpt_stats.checkpoints_written += 1;
+            g.dirty = false;
         }
-        let ck = Checkpoint {
-            uuid: g.uuid,
-            data_start: g.data_start,
-            log_len: g.write_pos,
-            frame_lens: g.frames.iter().map(|&(_, l)| l).collect(),
-            types: g.types.clone(),
-            aux: g.aux.clone(),
-        };
-        let bytes = ck.encode();
-        let f = self.io.create(&self.ckpt_path)?;
-        self.io.write_all(&f, &bytes)?;
-        self.io.sync(&f)?;
-        g.ckpt_stats.checkpoints_written += 1;
-        g.dirty = false;
+        // Damaged preamble (`!sidecar_writable`): a sidecar stamped with
+        // this session's throwaway UUID would be rejected by every future
+        // open, so none is written — but the heartbeat still refreshes;
+        // the lease is about ownership, not the sidecar.
+        self.check_lease(&mut g)?; // guard the write: the lease may have moved under us
+        let mut hb = g.lease.clone();
+        hb.heartbeat_ms = self.clock.realtime_ms();
+        lease::write_atomic(&*self.io, &self.lease_file, &hb)?;
+        g.lease = hb;
         Ok(())
+    }
+
+    /// Re-read the lease; on a takeover, record the fencing and refuse.
+    fn check_lease(&self, g: &mut Inner) -> std::io::Result<()> {
+        if let Some(f) = &g.fenced {
+            return Err(lease::fenced_error(f.clone()));
+        }
+        match lease::revalidate(&*self.io, &self.lease_file, &g.lease) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if let Some(f) = lease::as_fenced(&e) {
+                    g.fenced = Some(f.clone());
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Full bit-rot scrub: re-walk and re-hash every frame the index
@@ -399,11 +590,20 @@ impl DurableBackend {
     /// log never diverges from the index (a partial blob left at EOF
     /// would corrupt every later append — O_APPEND writes land after
     /// it, while the index still points at the old offsets).
+    ///
+    /// The lease brackets the mutation: it is revalidated **before** the
+    /// write (a fenced handle refuses cleanly, having written nothing)
+    /// and **after** the fsync (a takeover that raced the write is
+    /// detected before the frames are indexed). Between the two sits a
+    /// length probe — if the file didn't grow by exactly this blob,
+    /// another writer's bytes interleaved with ours and the handle
+    /// poisons rather than serve an index that disagrees with the disk.
     fn commit(&self, blob: &[u8], lens: &[u32], payload_bytes: u64) -> std::io::Result<u64> {
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(poisoned_err());
         }
+        self.check_lease(&mut g)?; // fenced: refuse before touching the file
         let wrote = self.io.write_all(&g.file, blob);
         let committed = match wrote {
             Ok(()) if self.sync_each_append => self.io.sync(&g.file),
@@ -416,6 +616,50 @@ impl DurableBackend {
             if self.io.truncate(&g.file, indexed).is_err() {
                 g.poisoned = true;
             }
+            return Err(e);
+        }
+        let expected_end = g.write_pos + blob.len() as u64;
+        match self.io.file_len(&g.file) {
+            Ok(actual) if actual == expected_end => {}
+            Ok(_) => {
+                // Foreign bytes under (or over) ours: truncating would
+                // destroy another writer's committed frames, so don't —
+                // poison this handle and let reopen recover the disk's
+                // actual, linear contents.
+                g.poisoned = true;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "concurrent append detected: segment grew past this handle's index",
+                ));
+            }
+            Err(e) => {
+                let indexed = g.write_pos;
+                if self.io.truncate(&g.file, indexed).is_err() {
+                    g.poisoned = true;
+                }
+                return Err(e);
+            }
+        }
+        if let Err(e) = self.check_lease(&mut g) {
+            if !lease::is_fenced(&e) {
+                // Lease unreadable (a real I/O error, not a takeover):
+                // keep the "commit errored ⇒ nothing committed" contract
+                // by rolling back — the length probe above confirmed the
+                // blob is still the topmost bytes, so this retracts only
+                // our own write.
+                let indexed = g.write_pos;
+                if self.io.truncate(&g.file, indexed).is_err() {
+                    g.poisoned = true;
+                }
+            }
+            // Fenced: leave the durable blob in place. A successor that
+            // opened before our write may already have scanned and
+            // indexed these frames — truncating them now could destroy
+            // bytes another live handle is serving. They sit *before*
+            // the successor's election marker, so every replay orders
+            // them consistently and the in-log epoch fencing discounts
+            // them; no fork. This handle merely never indexes them
+            // (fenced, not poisoned — reads of the prefix stay valid).
             return Err(e);
         }
         let first = g.frames.len() as u64;
@@ -443,9 +687,22 @@ impl Drop for DurableBackend {
     /// it doesn't cover.
     fn drop(&mut self) {
         let should = self.auto_checkpoint.load(Ordering::Relaxed)
-            && self.inner.lock().map(|g| g.dirty && !g.poisoned).unwrap_or(false);
+            && self
+                .inner
+                .lock()
+                .map(|g| g.dirty && !g.poisoned && g.fenced.is_none())
+                .unwrap_or(false);
         if should {
             let _ = self.write_checkpoint();
+        }
+        // Hand the lease back so the next open needn't wait out the TTL.
+        // A fenced handle's lease is not ours to touch anymore (release
+        // double-checks, but don't even try); a poisoned one still owns
+        // the append path and should release it.
+        if let Ok(g) = self.inner.lock() {
+            if g.fenced.is_none() {
+                let _ = lease::release(&*self.io, &self.lease_file, &g.lease);
+            }
         }
     }
 }
@@ -478,10 +735,11 @@ impl LogBackend for DurableBackend {
             // write_checkpoint fsyncs the segment before the sidecar.
             self.write_checkpoint()
         } else {
-            let g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock().unwrap();
             if g.poisoned {
                 return Err(poisoned_err());
             }
+            self.check_lease(&mut g)?;
             self.io.sync(&g.file)
         }
     }
@@ -1109,6 +1367,104 @@ mod tests {
     }
 
     #[test]
+    fn lease_lifecycle_clean_handoff() {
+        let p = tmp("lease-handoff");
+        let e1;
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            assert!(!b.lease_took_over(), "first open creates the lease");
+            e1 = b.lease_epoch();
+            assert!(e1 >= 1);
+            b.append(b"one").unwrap();
+        } // drop releases the lease
+        let rec = LeaseRecord::decode(&std::fs::read(lease::lease_path(&p)).unwrap()).unwrap();
+        assert!(rec.released, "drop hands the lease back");
+        assert_eq!(rec.epoch, e1);
+        let b = DurableBackend::open(&p).unwrap();
+        assert!(!b.lease_took_over(), "a released lease is a clean handoff, not a takeover");
+        assert_eq!(b.lease_epoch(), e1 + 1, "every acquisition bumps the epoch");
+        assert_eq!(b.tail(), 1);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn takeover_fences_the_stale_holder() {
+        let p = tmp("lease-fence");
+        let a = DurableBackend::open(&p).unwrap();
+        a.append(&entry_frame(0, PayloadType::Mail)).unwrap();
+        // Successor with ttl 0: a's heartbeat is immediately "stale".
+        let cfg = LeaseConfig { holder: "successor".into(), ttl_ms: 0, ..LeaseConfig::default() };
+        let b = DurableBackend::open_with(&p, Arc::new(FsIo), cfg).unwrap();
+        assert!(b.lease_took_over());
+        assert_eq!(b.lease_epoch(), a.lease_epoch() + 1);
+        assert_eq!(b.lease_holder(), "successor");
+        // The successor's first act: the election marker ties the
+        // on-disk epoch to the in-log fencing story.
+        assert_eq!(b.append_election_marker("successor").unwrap(), 1);
+        // The stale holder is fenced at its next commit — before writing.
+        let len_before = std::fs::metadata(&p).unwrap().len();
+        let err = a.append(b"stale").unwrap_err();
+        assert!(lease::is_fenced(&err), "{err}");
+        assert!(a.is_fenced());
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len(),
+            len_before,
+            "fenced append wrote nothing"
+        );
+        let err = a.flush().unwrap_err();
+        assert!(lease::is_fenced(&err), "{err}");
+        // ... but the fenced handle still serves its indexed prefix.
+        assert_eq!(a.read(0, 9).unwrap().len(), 1);
+        // The marker replayers see carries the successor's lease epoch.
+        let (pos, bytes) = b.read(1, 2).unwrap().remove(0);
+        assert_eq!(pos, 1);
+        let e = Entry::from_bytes(&bytes).unwrap();
+        assert_eq!(crate::sm::fence::lease_epoch_of(&e), Some(b.lease_epoch()));
+        drop(a); // fenced: must not clobber the successor's lease
+        let rec = LeaseRecord::decode(&std::fs::read(lease::lease_path(&p)).unwrap()).unwrap();
+        assert_eq!(rec.holder, "successor");
+        assert!(!rec.released, "the fenced ex-holder left the live lease alone");
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn deleted_lease_file_cannot_regress_epochs_past_in_log_markers() {
+        // `<log>.lease` is disposable; the in-log election markers are
+        // not. An open that finds no lease (or one that doesn't decode)
+        // must floor its new epoch on the markers, so replayers never
+        // see a takeover election attesting an epoch ≤ a predecessor's.
+        let p = tmp("lease-floor");
+        let marker_epoch;
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.append(&entry_frame(0, PayloadType::Mail)).unwrap();
+            b.append_election_marker("first-driver").unwrap();
+            marker_epoch = b.lease_epoch();
+        }
+        std::fs::remove_file(lease::lease_path(&p)).unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        assert!(
+            b.lease_epoch() > marker_epoch,
+            "epoch {} must clear the in-log marker's {marker_epoch}",
+            b.lease_epoch()
+        );
+        // And with a *corrupt* lease it's a takeover over unknowable
+        // state, still floored by the markers. The floor is what the log
+        // *attests*, so have this holder leave a marker of its own.
+        let next_epoch = b.lease_epoch();
+        b.append_election_marker("second-driver").unwrap();
+        drop(b);
+        std::fs::write(lease::lease_path(&p), b"garbage, not a lease record").unwrap();
+        let b = DurableBackend::open(&p).unwrap();
+        assert!(b.lease_took_over(), "claiming over an undecodable lease is a takeover");
+        assert!(b.lease_epoch() > next_epoch);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
     fn failed_rollback_poisons_appends_but_prefix_reads_survive() {
         // FaultIo drives the double failure luck could never schedule:
         // the batch blob write tears, then the rollback truncate fails.
@@ -1124,8 +1480,11 @@ mod tests {
         // contain a complete frame (reopen must recover exactly 4).
         let batch =
             vec![vec![0x7Bu8; 200], entry_frame(5, PayloadType::Vote), entry_frame(6, PayloadType::Vote)];
-        io.fail_after(1, FaultMode::Torn); // the blob write
-        io.fail_after(2, FaultMode::Fail); // the rollback truncate
+        // Commit op order: lease revalidate, blob write, fsync, length
+        // probe, lease revalidate — the torn write is op 2, and the
+        // rollback truncate follows it immediately.
+        io.fail_after(2, FaultMode::Torn); // the blob write
+        io.fail_after(3, FaultMode::Fail); // the rollback truncate
         let err = b.append_batch(&batch).unwrap_err();
         assert!(err.to_string().contains("injected"), "{err}");
         let err = b.append(b"more").unwrap_err();

@@ -1,9 +1,9 @@
 //! The durable backend's file-operation seam.
 //!
 //! [`DurableBackend`](super::DurableBackend) performs every segment and
-//! sidecar operation through a [`SegmentIo`] — a ten-verb trait (opens,
-//! appends, positioned/whole-file reads, fsync, truncate, stat, mkdir)
-//! with two implementations:
+//! sidecar operation through a [`SegmentIo`] — an eleven-verb trait
+//! (opens, appends, positioned/whole-file reads, fsync, truncate, stat,
+//! mkdir, atomic rename) with two implementations:
 //!
 //! * [`FsIo`] — the real thing, a thin pass-through to `std::fs`;
 //! * [`FaultIo`] — a test double that counts every operation, records an
@@ -44,6 +44,8 @@ pub enum IoOp {
     Stat,
     /// Recursive directory creation for a segment's parent.
     Mkdir,
+    /// Atomic replace (`rename(2)`) — sidecar and lease publication.
+    Rename,
 }
 
 /// File operations the durable backend needs, as a mockable seam. All
@@ -85,6 +87,12 @@ pub trait SegmentIo: Send + Sync {
     fn read_exact_at(&self, file: &File, buf: &mut [u8], offset: u64) -> io::Result<()>;
 
     fn truncate(&self, file: &File, len: u64) -> io::Result<()>;
+
+    /// Atomically replace `to` with `from` (`rename(2)` semantics on the
+    /// same filesystem). Write-then-rename is how sidecars and leases are
+    /// published: readers see either the old file or the new one, never a
+    /// torn mix.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
 }
 
 /// The production [`SegmentIo`]: straight to the filesystem.
@@ -144,6 +152,10 @@ impl SegmentIo for FsIo {
 
     fn truncate(&self, file: &File, len: u64) -> io::Result<()> {
         file.set_len(len)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
     }
 }
 
@@ -312,6 +324,15 @@ impl SegmentIo for FaultIo {
             _ => self.inner.truncate(file, len),
         }
     }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        // A rename either happens or it doesn't — Torn degrades to Fail,
+        // like every other non-write verb.
+        match self.enter(IoOp::Rename, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Rename)),
+            _ => self.inner.rename(from, to),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +424,32 @@ mod tests {
         assert!(io.file_len(&f).is_err());
         let _ = std::fs::remove_file(&p);
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn rename_is_counted_faultable_and_atomic_replace() {
+        let p = tmp("ren-dst");
+        let t = tmp("ren-src");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap(); // op 1
+        io.write_all(&f, b"old").unwrap(); // op 2
+        let g = io.create(&t).unwrap(); // op 3
+        io.write_all(&g, b"new").unwrap(); // op 4
+        io.rename(&t, &p).unwrap(); // op 5: Rename
+        assert_eq!(std::fs::read(&p).unwrap(), b"new", "rename replaces the destination");
+        assert!(!t.exists(), "source is gone after rename");
+        assert_eq!(io.oplog()[4].op, IoOp::Rename);
+        // Both fault modes refuse without touching either path.
+        let h = io.create(&t).unwrap();
+        io.write_all(&h, b"next").unwrap();
+        io.fail_after(1, FaultMode::Fail);
+        assert!(io.rename(&t, &p).is_err());
+        io.fail_after(1, FaultMode::Torn);
+        assert!(io.rename(&t, &p).is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"new", "failed rename leaves destination intact");
+        assert_eq!(std::fs::read(&t).unwrap(), b"next", "failed rename leaves source intact");
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&t);
     }
 
     #[test]

@@ -1,0 +1,545 @@
+//! Epoch-fenced append lease: crash-safe multi-process log ownership.
+//!
+//! The in-log fencing story ([`crate::sm::fence`]) is enforced only by
+//! readers that replay `driver_election` markers — nothing stops two OS
+//! processes from opening the same durable segment and forking it. The
+//! lease closes that hole on disk: a CRC-guarded `<log>.lease` sidecar
+//! records which holder owns the append path and at which **epoch**, and
+//! [`DurableBackend`](super::DurableBackend) re-reads it at every fsync
+//! point. A holder that finds the lease superseded gets a typed
+//! [`Fenced`] error and its handle refuses all further appends (reads
+//! keep working).
+//!
+//! **Epoch rules.** Epochs are strictly monotone: every acquisition
+//! writes `max(epoch on disk, max lease_epoch in the log) + 1`, so a
+//! takeover always observes a larger epoch than anything the previous
+//! holder stamped — on disk *and* in the log. The new holder's first
+//! append should be a `driver_election` marker carrying its lease epoch
+//! ([`crate::sm::fence::election_body_with_epoch`]), which is what lets
+//! the offline linter prove the on-disk epoch and the in-log
+//! `FenceTracker` epoch agree.
+//!
+//! **Takeover.** A held lease is only stolen when its heartbeat is older
+//! than the TTL (the holder refreshes it on every checkpoint flush). A
+//! fresh lease makes [`acquire`] retry with bounded, deterministic
+//! exponential backoff (`backoff_base_ms << attempt`, charged to the
+//! caller's [`Clock`] so simulated time stays deterministic) and finally
+//! fail with `WouldBlock`.
+//!
+//! **Publication.** Every lease write is write-then-rename through the
+//! [`SegmentIo`] seam (`<lease>.tmp` → `<log>.lease`), then read back:
+//! two racers can both rename, but only one record survives, and each
+//! side believes it holds the lease only after re-reading its own bytes.
+//! The CRC rejects torn or bit-rotted records — an unreadable lease is
+//! treated as up for grabs, never trusted.
+
+use super::io::SegmentIo;
+use crate::util::clock::Clock;
+use crate::util::crc32;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// First 8 bytes of every lease file.
+pub const LEASE_MAGIC: [u8; 8] = *b"LACTLSE1";
+
+/// A held lease whose heartbeat is older than this is up for grabs.
+pub const DEFAULT_TTL_MS: u64 = 5_000;
+
+/// How many times [`acquire`] tries before giving up on a fresh holder.
+pub const DEFAULT_ACQUIRE_ATTEMPTS: u32 = 6;
+
+/// Backoff before retry `n` (0-based) is `DEFAULT_BACKOFF_BASE_MS << n`:
+/// 25, 50, 100, 200, 400 ms — ~775 ms total at the default attempt count.
+pub const DEFAULT_BACKOFF_BASE_MS: u64 = 25;
+
+/// The lease's conventional location: `<log>.lease`, alongside the
+/// segment and its `.ckpt` sidecar.
+pub fn lease_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".lease");
+    PathBuf::from(os)
+}
+
+/// One decoded `<log>.lease` record.
+///
+/// Wire form: magic(8) + log uuid u128(16) + epoch u64(8) +
+/// heartbeat_ms u64(8) + state u8(1, `1`=held `0`=released) +
+/// holder_len u8(1) + holder bytes + crc32(4) over everything before it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaseRecord {
+    /// The segment preamble UUID this lease fences. A lease whose UUID
+    /// doesn't match the segment is a stray from some other log and is
+    /// never honored.
+    pub uuid: u128,
+    /// Fencing epoch; bumped by every acquisition, never reused.
+    pub epoch: u64,
+    /// `Clock::realtime_ms` stamp of the last heartbeat refresh.
+    pub heartbeat_ms: u64,
+    /// A released lease was handed back cleanly (backend drop) — the next
+    /// acquisition needn't wait out the TTL.
+    pub released: bool,
+    pub holder: String,
+}
+
+impl LeaseRecord {
+    pub fn encode(&self) -> Vec<u8> {
+        assert!(self.holder.len() <= 255, "lease holder id too long");
+        let mut out = Vec::with_capacity(46 + self.holder.len());
+        out.extend_from_slice(&LEASE_MAGIC);
+        out.extend_from_slice(&self.uuid.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.heartbeat_ms.to_le_bytes());
+        out.push(u8::from(!self.released));
+        out.push(self.holder.len() as u8);
+        out.extend_from_slice(self.holder.as_bytes());
+        let crc = crc32::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate; `None` on any defect (bad magic, CRC
+    /// mismatch, truncation, bad state byte, non-UTF-8 holder, trailing
+    /// garbage). A lease that fails to decode is treated as absent by
+    /// acquisition and as corrupt by the linter — never trusted.
+    pub fn decode(bytes: &[u8]) -> Option<LeaseRecord> {
+        const FIXED: usize = 8 + 16 + 8 + 8 + 1 + 1; // through holder_len
+        if bytes.len() < FIXED + 4 || bytes[0..8] != LEASE_MAGIC {
+            return None;
+        }
+        let body_end = bytes.len() - 4;
+        let crc = u32::from_le_bytes(bytes[body_end..].try_into().ok()?);
+        if crc32::hash(&bytes[..body_end]) != crc {
+            return None;
+        }
+        let uuid = u128::from_le_bytes(bytes[8..24].try_into().ok()?);
+        let epoch = u64::from_le_bytes(bytes[24..32].try_into().ok()?);
+        let heartbeat_ms = u64::from_le_bytes(bytes[32..40].try_into().ok()?);
+        let released = match bytes[40] {
+            0 => true,
+            1 => false,
+            _ => return None,
+        };
+        let holder_len = bytes[41] as usize;
+        if body_end != FIXED + holder_len {
+            return None; // truncated holder or trailing garbage
+        }
+        let holder = String::from_utf8(bytes[42..body_end].to_vec()).ok()?;
+        Some(LeaseRecord { uuid, epoch, heartbeat_ms, released, holder })
+    }
+}
+
+/// Acquisition policy: who is asking, how stale a heartbeat must be
+/// before takeover, and how retry/backoff is paced.
+#[derive(Clone)]
+pub struct LeaseConfig {
+    /// Holder id stamped into the lease (defaults to `pid-<pid>`).
+    pub holder: String,
+    /// Heartbeat age at which a held lease may be stolen. `0` means any
+    /// held lease is immediately stale — tests use this to force
+    /// deterministic takeovers.
+    pub ttl_ms: u64,
+    /// Total acquisition attempts against a fresh holder before
+    /// `WouldBlock`.
+    pub attempts: u32,
+    /// Base of the exponential backoff between attempts.
+    pub backoff_base_ms: u64,
+    /// Backoff is charged here: real clocks sleep, sim clocks advance
+    /// deterministically.
+    pub clock: Clock,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> LeaseConfig {
+        LeaseConfig {
+            holder: format!("pid-{}", std::process::id()),
+            ttl_ms: DEFAULT_TTL_MS,
+            attempts: DEFAULT_ACQUIRE_ATTEMPTS,
+            backoff_base_ms: DEFAULT_BACKOFF_BASE_MS,
+            clock: Clock::real(),
+        }
+    }
+}
+
+/// The typed fencing error: this handle's lease was superseded (or the
+/// lease file became unreadable). Carried as the source of an
+/// `io::Error` so it crosses the existing `io::Result` plumbing; test
+/// with [`is_fenced`] / inspect with [`as_fenced`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fenced {
+    /// The epoch this handle held.
+    pub held_epoch: u64,
+    /// The epoch found on disk (`None` if the lease no longer decodes).
+    pub found_epoch: Option<u64>,
+    /// The holder found on disk.
+    pub found_holder: Option<String>,
+}
+
+impl std::fmt::Display for Fenced {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (&self.found_epoch, &self.found_holder) {
+            (Some(e), Some(h)) => write!(
+                f,
+                "fenced: lease epoch {} superseded by epoch {e} (holder {h:?})",
+                self.held_epoch
+            ),
+            _ => write!(f, "fenced: lease epoch {} superseded (lease unreadable)", self.held_epoch),
+        }
+    }
+}
+
+impl std::error::Error for Fenced {}
+
+/// Wrap a [`Fenced`] as the `io::Error` the backend propagates.
+pub fn fenced_error(f: Fenced) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, f)
+}
+
+/// Is this error a fencing rejection (as opposed to a real I/O failure)?
+pub fn is_fenced(e: &io::Error) -> bool {
+    as_fenced(e).is_some()
+}
+
+/// The [`Fenced`] payload of an error, if that's what it is.
+pub fn as_fenced(e: &io::Error) -> Option<&Fenced> {
+    e.get_ref().and_then(|r| r.downcast_ref::<Fenced>())
+}
+
+/// Publish `rec` atomically: write `<lease>.tmp`, fsync, rename over
+/// `lease`. Four [`SegmentIo`] ops, each fault-injectable.
+pub fn write_atomic(io: &dyn SegmentIo, lease: &Path, rec: &LeaseRecord) -> io::Result<()> {
+    let mut os = lease.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    let f = io.create(&tmp)?;
+    io.write_all(&f, &rec.encode())?;
+    io.sync(&f)?;
+    io.rename(&tmp, lease)
+}
+
+/// What the lease file on disk amounts to, from one reader's viewpoint.
+enum LeaseState {
+    /// No lease, a corrupt lease, or a stray lease from another log —
+    /// free to claim. `epoch_floor` is the highest epoch the record
+    /// attests for *this* log (0 when it attests nothing).
+    Free { epoch_floor: u64, takeover: bool },
+    /// Held and heartbeat-fresh: back off.
+    Held(LeaseRecord),
+}
+
+fn classify(bytes: Option<&[u8]>, uuid: u128, ttl_ms: u64, now_ms: u64) -> LeaseState {
+    let rec = match bytes.and_then(LeaseRecord::decode) {
+        // Unreadable bytes: a torn/bit-rotted lease attests nothing, but
+        // claiming over it is still a takeover, not a clean handoff.
+        None => {
+            return LeaseState::Free { epoch_floor: 0, takeover: bytes.is_some() };
+        }
+        Some(rec) => rec,
+    };
+    if rec.uuid != uuid {
+        // A stray from some other log (e.g. the segment was rebuilt with
+        // a fresh UUID). Its epoch is not ours to continue.
+        return LeaseState::Free { epoch_floor: 0, takeover: false };
+    }
+    if rec.released {
+        return LeaseState::Free { epoch_floor: rec.epoch, takeover: false };
+    }
+    if now_ms.saturating_sub(rec.heartbeat_ms) >= ttl_ms {
+        return LeaseState::Free { epoch_floor: rec.epoch, takeover: true };
+    }
+    LeaseState::Held(rec)
+}
+
+/// Acquire the lease for segment UUID `uuid`, bumping the epoch past both
+/// the on-disk record and `log_epoch` (the highest lease epoch any
+/// in-log `driver_election` marker carries). Returns the record now held
+/// and whether this was a **takeover** (previous holder crashed or its
+/// lease rotted) rather than a clean first-or-handoff acquisition.
+///
+/// Retries with deterministic exponential backoff while a fresh holder
+/// is in place; gives up with `ErrorKind::WouldBlock` after
+/// `cfg.attempts` attempts. Real I/O failures propagate as-is.
+pub fn acquire(
+    io: &dyn SegmentIo,
+    lease: &Path,
+    uuid: u128,
+    log_epoch: u64,
+    cfg: &LeaseConfig,
+) -> io::Result<(LeaseRecord, bool)> {
+    let mut last_holder = String::new();
+    for attempt in 0..cfg.attempts.max(1) {
+        if attempt > 0 {
+            cfg.clock.charge(Duration::from_millis(cfg.backoff_base_ms << (attempt - 1)));
+        }
+        let bytes = match io.read_file(lease) {
+            Ok(b) => Some(b),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e),
+        };
+        let now = cfg.clock.realtime_ms();
+        let (epoch_floor, takeover) = match classify(bytes.as_deref(), uuid, cfg.ttl_ms, now) {
+            LeaseState::Held(rec) => {
+                last_holder = format!("{} (epoch {})", rec.holder, rec.epoch);
+                continue;
+            }
+            LeaseState::Free { epoch_floor, takeover } => (epoch_floor, takeover),
+        };
+        let mine = LeaseRecord {
+            uuid,
+            epoch: epoch_floor.max(log_epoch) + 1,
+            heartbeat_ms: now,
+            released: false,
+            holder: cfg.holder.clone(),
+        };
+        write_atomic(io, lease, &mine)?;
+        // Read back: rename is atomic but not exclusive — whoever's
+        // record survived the race owns the lease.
+        match io.read_file(lease).ok().as_deref().and_then(LeaseRecord::decode) {
+            Some(won) if won == mine => return Ok((mine, takeover)),
+            Some(rec) => {
+                last_holder = format!("{} (epoch {})", rec.holder, rec.epoch);
+            }
+            None => {}
+        }
+    }
+    Err(io::Error::new(
+        io::ErrorKind::WouldBlock,
+        format!("lease {} held by {last_holder} after {} attempts", lease.display(), cfg.attempts),
+    ))
+}
+
+/// Re-read the lease and confirm `mine` still owns it. Plain I/O errors
+/// propagate as-is; a missing, unreadable, released-from-under-us, or
+/// superseded lease is a [`Fenced`] error.
+pub fn revalidate(io: &dyn SegmentIo, lease: &Path, mine: &LeaseRecord) -> io::Result<()> {
+    let bytes = match io.read_file(lease) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Err(fenced_error(Fenced {
+                held_epoch: mine.epoch,
+                found_epoch: None,
+                found_holder: None,
+            }));
+        }
+        Err(e) => return Err(e),
+    };
+    match LeaseRecord::decode(&bytes) {
+        Some(rec)
+            if rec.uuid == mine.uuid
+                && rec.epoch == mine.epoch
+                && rec.holder == mine.holder
+                && !rec.released =>
+        {
+            Ok(())
+        }
+        Some(rec) => Err(fenced_error(Fenced {
+            held_epoch: mine.epoch,
+            found_epoch: Some(rec.epoch),
+            found_holder: Some(rec.holder),
+        })),
+        None => Err(fenced_error(Fenced {
+            held_epoch: mine.epoch,
+            found_epoch: None,
+            found_holder: None,
+        })),
+    }
+}
+
+/// Hand the lease back cleanly: if `mine` still owns it, republish it as
+/// released (same epoch) so the next acquisition needn't wait out the
+/// TTL. A lease we no longer own is left alone — a fenced ex-holder must
+/// never write the lease file.
+pub fn release(io: &dyn SegmentIo, lease: &Path, mine: &LeaseRecord) -> io::Result<()> {
+    if revalidate(io, lease, mine).is_err() {
+        return Ok(()); // superseded or unreadable: not ours to touch
+    }
+    let mut rec = mine.clone();
+    rec.released = true;
+    write_atomic(io, lease, &rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::io::{FaultIo, FaultMode, FsIo};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("lease-{}-{}.log", name, crate::util::ids::next_id()))
+    }
+
+    fn cfg(holder: &str, ttl_ms: u64) -> LeaseConfig {
+        LeaseConfig { holder: holder.to_string(), ttl_ms, clock: Clock::sim(), ..LeaseConfig::default() }
+    }
+
+    fn sample() -> LeaseRecord {
+        LeaseRecord {
+            uuid: 0xFEED_FACE_0123_4567_89AB_CDEF_0011_2233,
+            epoch: 7,
+            heartbeat_ms: 123_456_789,
+            released: false,
+            holder: "coordinator-a".to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_both_states() {
+        for released in [false, true] {
+            let mut rec = sample();
+            rec.released = released;
+            let d = LeaseRecord::decode(&rec.encode()).expect("decodes");
+            assert_eq!(d, rec);
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(LeaseRecord::decode(&bad).is_none(), "flip at byte {i} accepted");
+        }
+        for cut in 0..bytes.len() {
+            assert!(LeaseRecord::decode(&bytes[..cut]).is_none(), "truncation to {cut} accepted");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(LeaseRecord::decode(&long).is_none(), "trailing garbage accepted");
+    }
+
+    #[test]
+    fn fresh_acquire_bumps_past_log_epoch() {
+        let p = lease_path(&tmp("fresh"));
+        let io = FsIo;
+        let (rec, took_over) = acquire(&io, &p, 42, 9, &cfg("a", 0)).unwrap();
+        assert_eq!(rec.epoch, 10, "max(0 on disk, 9 in log) + 1");
+        assert_eq!(rec.holder, "a");
+        assert!(!rec.released);
+        assert!(!took_over, "claiming an absent lease is not a takeover");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn released_lease_hands_off_without_ttl_wait() {
+        let p = lease_path(&tmp("handoff"));
+        let io = FsIo;
+        // ttl is huge and the heartbeat is current — only `released`
+        // makes the immediate re-acquire possible.
+        let (a, _) = acquire(&io, &p, 1, 0, &cfg("a", u64::MAX)).unwrap();
+        release(&io, &p, &a).unwrap();
+        let (b, took_over) = acquire(&io, &p, 1, 0, &cfg("b", u64::MAX)).unwrap();
+        assert_eq!(b.epoch, a.epoch + 1, "epoch continues past the released record");
+        assert!(!took_over, "a clean handoff is not a takeover");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn stale_held_lease_is_taken_over() {
+        let p = lease_path(&tmp("stale"));
+        let io = FsIo;
+        let (a, _) = acquire(&io, &p, 1, 0, &cfg("a", 0)).unwrap();
+        // ttl_ms = 0: a's heartbeat is immediately stale.
+        let (b, took_over) = acquire(&io, &p, 1, 0, &cfg("b", 0)).unwrap();
+        assert!(took_over, "stealing a held-but-stale lease is a takeover");
+        assert_eq!(b.epoch, a.epoch + 1);
+        // And the old holder is now fenced.
+        let err = revalidate(&io, &p, &a).unwrap_err();
+        assert!(is_fenced(&err), "{err}");
+        let f = as_fenced(&err).unwrap();
+        assert_eq!(f.held_epoch, a.epoch);
+        assert_eq!(f.found_epoch, Some(b.epoch));
+        assert_eq!(f.found_holder.as_deref(), Some("b"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fresh_holder_blocks_with_deterministic_backoff() {
+        let p = lease_path(&tmp("block"));
+        let io = FsIo;
+        let shared = Clock::sim();
+        let a_cfg = LeaseConfig {
+            holder: "a".into(),
+            ttl_ms: u64::MAX,
+            clock: shared.clone(),
+            ..LeaseConfig::default()
+        };
+        acquire(&io, &p, 1, 0, &a_cfg).unwrap();
+        let b_cfg = LeaseConfig { holder: "b".into(), ..a_cfg };
+        let before = shared.now();
+        let err = acquire(&io, &p, 1, 0, &b_cfg).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+        assert!(err.to_string().contains("held by a"), "{err}");
+        // 6 attempts → 5 backoffs: 25+50+100+200+400 = 775 ms, exactly.
+        assert_eq!((shared.now() - before).as_millis(), 775, "backoff is deterministic");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_lease_is_claimable_and_counts_as_takeover() {
+        let p = lease_path(&tmp("corrupt"));
+        let io = FsIo;
+        std::fs::write(&p, b"not a lease").unwrap();
+        let (rec, took_over) = acquire(&io, &p, 1, 3, &cfg("a", 0)).unwrap();
+        assert!(took_over);
+        assert_eq!(rec.epoch, 4, "corrupt record attests no epoch; log epoch rules");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn foreign_uuid_lease_is_ignored() {
+        let p = lease_path(&tmp("foreign"));
+        let io = FsIo;
+        let mut stray = sample();
+        stray.uuid = 999;
+        stray.epoch = 50;
+        stray.heartbeat_ms = u64::MAX; // eternally fresh — for some other log
+        std::fs::write(&p, stray.encode()).unwrap();
+        let (rec, took_over) = acquire(&io, &p, 1, 0, &cfg("a", u64::MAX)).unwrap();
+        assert!(!took_over);
+        assert_eq!(rec.epoch, 1, "a stray's epoch is not ours to continue");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn release_is_a_noop_once_superseded() {
+        let p = lease_path(&tmp("noop"));
+        let io = FsIo;
+        let (a, _) = acquire(&io, &p, 1, 0, &cfg("a", 0)).unwrap();
+        let (b, _) = acquire(&io, &p, 1, 0, &cfg("b", 0)).unwrap();
+        release(&io, &p, &a).unwrap();
+        let on_disk = LeaseRecord::decode(&std::fs::read(&p).unwrap()).unwrap();
+        assert_eq!(on_disk, b, "a's release must not clobber b's lease");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn write_atomic_is_four_faultable_ops() {
+        let log = tmp("ops");
+        let p = lease_path(&log);
+        let io = FaultIo::new();
+        write_atomic(io.as_ref(), &p, &sample()).unwrap();
+        use crate::bus::io::IoOp;
+        assert_eq!(
+            io.oplog().iter().map(|o| o.op).collect::<Vec<_>>(),
+            vec![IoOp::Create, IoOp::Write, IoOp::Sync, IoOp::Rename]
+        );
+        // A fault at any of the four ops leaves the published lease
+        // either absent or fully intact — never torn.
+        for k in 1..=4u64 {
+            for mode in [FaultMode::Fail, FaultMode::Torn] {
+                let before = std::fs::read(&p).unwrap();
+                io.fail_after(k, mode);
+                let mut rec = sample();
+                rec.epoch += k; // distinct bytes per round
+                assert!(write_atomic(io.as_ref(), &p, &rec).is_err());
+                assert_eq!(std::fs::read(&p).unwrap(), before, "op {k} {mode:?} tore the lease");
+            }
+        }
+        let _ = std::fs::remove_file(&p);
+        let mut os = p.as_os_str().to_os_string();
+        os.push(".tmp");
+        let _ = std::fs::remove_file(PathBuf::from(os));
+    }
+}

@@ -33,7 +33,10 @@
 //! checkpoint, falling back to the full scan on any doubt. All durable
 //! file operations run through a pluggable [`io::SegmentIo`], whose
 //! [`io::FaultIo`] test double makes every crash point deterministically
-//! reachable.
+//! reachable. Cross-process ownership of the append path is fenced by an
+//! epoch-stamped `<log>.lease` ([`lease`]): open acquires it, every
+//! commit and flush revalidates it, and a superseded holder gets a typed
+//! [`lease::Fenced`] error instead of forking the segment.
 
 pub mod acl;
 pub mod backend;
@@ -42,6 +45,7 @@ pub mod checkpoint;
 pub mod durable;
 pub mod entry;
 pub mod io;
+pub mod lease;
 pub mod mem;
 pub mod registry;
 pub mod remote;
@@ -53,6 +57,7 @@ pub use checkpoint::{Checkpoint, CheckpointStats, PREAMBLE_LEN};
 pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
 pub use io::{FaultIo, FaultMode, FsIo, IoOp, SegmentIo};
+pub use lease::{Fenced, LeaseConfig, LeaseRecord};
 pub use mem::MemBackend;
 pub use registry::{BusRegistry, NamespacedBackend};
 pub use remote::{LatencyProfile, RemoteBackend};

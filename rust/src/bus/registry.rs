@@ -690,6 +690,92 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_crash_mid_batch_hands_the_registry_to_a_lease_successor() {
+        // Multi-tenant takeover (ISSUE 7 satellite): the coordinator
+        // process crashes mid-batch for tenant beta *without releasing
+        // its append lease*. A successor coordinator must take the lease
+        // over (heartbeat-stale path), replay alpha identically, and
+        // trim beta to the torn batch's surviving prefix — the same
+        // recovery the single-process crash test proves, now across an
+        // ownership change.
+        use crate::bus::entry::{Entry, Payload};
+        use crate::bus::io::FsIo;
+        use crate::bus::lease::LeaseConfig;
+        let entry = |pos: u64, t: PayloadType| Entry {
+            position: pos,
+            realtime_ts: 0,
+            payload: Payload::new(t, "w", Json::Null),
+        };
+        let p = tmp("registry-takeover");
+        let cut;
+        let coordinator_epoch;
+        {
+            let shared = Arc::new(DurableBackend::open(&p).unwrap());
+            let reg = BusRegistry::new(Arc::clone(&shared));
+            let a = reg.backend("alpha").unwrap();
+            let b = reg.backend("beta").unwrap();
+            a.append(&entry(0, PayloadType::Mail).to_json_bytes()).unwrap();
+            a.append(&entry(1, PayloadType::Intent).to_bytes()).unwrap();
+            b.append(&entry(0, PayloadType::Mail).to_bytes()).unwrap();
+            a.flush().unwrap(); // sidecar: 3 shared records + registry maps
+            let batch: Vec<Vec<u8>> =
+                (1..4).map(|i| entry(i, PayloadType::Vote).to_bytes()).collect();
+            b.append_batch(&batch).unwrap();
+            coordinator_epoch = shared.lease_epoch();
+            cut = {
+                let full = std::fs::metadata(&p).unwrap().len();
+                let rec =
+                    (8 + 1 + "beta".len() + entry(1, PayloadType::Vote).to_bytes().len()) as u64;
+                full - rec - 3
+            };
+            drop(reg);
+            // Crash: no drop runs — the lease stays held on disk.
+            std::mem::forget(shared);
+        }
+        {
+            let f = std::fs::OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            f.set_len(cut).unwrap();
+        }
+
+        // A default-policy open would wait out the heartbeat TTL; the
+        // successor declares the coordinator dead (ttl 0) and takes over.
+        let shared = Arc::new(
+            DurableBackend::open_with(
+                &p,
+                Arc::new(FsIo),
+                LeaseConfig {
+                    holder: "successor-coordinator".into(),
+                    ttl_ms: 0,
+                    ..LeaseConfig::default()
+                },
+            )
+            .unwrap(),
+        );
+        assert!(shared.lease_took_over(), "held-stale lease must register as a takeover");
+        assert!(shared.lease_epoch() > coordinator_epoch, "takeover bumps the epoch");
+        assert!(shared.checkpoint_stats().unwrap().sidecar_loaded);
+        assert_eq!(shared.tail(), 4, "3 checkpointed records + 1 surviving batch frame");
+        let reg = BusRegistry::new(Arc::clone(&shared));
+        let a = reg.backend("alpha").unwrap();
+        assert_eq!(a.tail(), 2, "alpha replays identically under the successor");
+        let ra = a.read(0, 10).unwrap();
+        assert_eq!(Entry::from_bytes(&ra[0].1).unwrap().payload.ptype, PayloadType::Mail);
+        assert_eq!(Entry::from_bytes(&ra[1].1).unwrap().payload.ptype, PayloadType::Intent);
+        let b = reg.backend("beta").unwrap();
+        assert_eq!(b.tail(), 2, "beta trims to the torn batch's surviving prefix");
+        assert_eq!(
+            Entry::from_bytes(&b.read(1, 2).unwrap()[0].1).unwrap().payload.ptype,
+            PayloadType::Vote
+        );
+        // The successor owns the append path outright.
+        assert_eq!(b.append(&entry(9, PayloadType::Mail).to_bytes()).unwrap(), 2);
+        assert_eq!(reg.shared_tail(), 5);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(format!("{}.ckpt", p.display()));
+        let _ = std::fs::remove_file(format!("{}.lease", p.display()));
+    }
+
+    #[test]
     fn agent_buses_compose_over_one_shared_log() {
         let reg = BusRegistry::new(Arc::new(MemBackend::new()));
         let bus_a = reg.bus("worker-0", Clock::sim()).unwrap();

@@ -7,12 +7,15 @@
 //!   or mutating anything* (the linter opens the segment read-only and
 //!   never truncates a torn tail the way reopen does). Frame
 //!   well-formedness and CRCs, preamble/UUID and sidecar-vs-log
-//!   consistency, monotonic positions, a `TypeIndex` cross-check, and
+//!   consistency, the `<log>.lease` append lease (corrupt/foreign/stale
+//!   classification plus the lease-vs-marker epoch cross-check),
+//!   monotonic positions, a `TypeIndex` cross-check, and
 //!   the LogAct protocol invariants over the typed entries: every
 //!   `Vote`/`Commit`/`Abort`/`Result` resolves its `intent_pos` to an
 //!   earlier `Intent`, no `Commit`+`Abort` conflict, no `Result` before
-//!   its `Commit`, at-most-once `Result`s, orphan intents flagged, and
-//!   `Policy` quorum changes applied in log order when checking votes.
+//!   its `Commit`, at-most-once `Result`s, orphan intents flagged,
+//!   `Policy` quorum changes applied in log order when checking votes,
+//!   and strictly increasing lease epochs across takeover elections.
 //! * **Seam-conformance source lint** ([`source`]) — a token-level
 //!   scanner (no AST, no crates) over `rust/src/` that fails on raw
 //!   `std::fs` / `File::` / `OpenOptions` use outside `bus/io.rs` and an

@@ -19,7 +19,13 @@
 //!   purpose);
 //! * at log end, undecided intents (`orphan-intent`) and committed-but-
 //!   unexecuted intents (`missing-result`) are flagged as warns — both
-//!   are legal states for a log that simply stopped early.
+//!   are legal states for a log that simply stopped early;
+//! * `driver_election` markers that attest an append-lease epoch
+//!   ([`crate::bus::lease`]) must attest **strictly increasing** epochs —
+//!   every takeover bumps the epoch before its marker lands, so a repeat
+//!   or regression means a forked or replayed log (`epoch-regression`).
+//!   Markers without the field (predating the lease, or purely
+//!   in-process elections) are skipped.
 //!
 //! The executor's reboot marker (`Result` with body `reboot: true`, no
 //! `intent_pos`) is part of the protocol and produces no finding. The
@@ -49,6 +55,7 @@ pub fn lint_entries(entries: &[(u64, Entry)]) -> Vec<Finding> {
     let mut intents: BTreeMap<u64, IntentState> = BTreeMap::new();
     let mut seen: BTreeMap<u64, PayloadType> = BTreeMap::new();
     let mut policy: Option<DeciderPolicy> = None;
+    let mut lease_epoch: Option<(u64, u64)> = None; // (marker position, attested epoch)
 
     for (pos, e) in entries {
         let pos = *pos;
@@ -170,8 +177,27 @@ pub fn lint_entries(entries: &[(u64, Entry)]) -> Vec<Finding> {
                             .at(pos),
                         ),
                     }
+                } else if let Some(epoch) = crate::sm::fence::lease_epoch_of(e) {
+                    if let Some((ppos, prev)) = lease_epoch {
+                        if epoch <= prev {
+                            findings.push(
+                                Finding::error(
+                                    "epoch-regression",
+                                    format!(
+                                        "election at {pos} attests lease epoch {epoch}, but \
+                                         the election at {ppos} already attested {prev}: \
+                                         epochs must strictly increase across takeovers — a \
+                                         repeat or regression means a forked or replayed log"
+                                    ),
+                                )
+                                .at(pos),
+                            );
+                        }
+                    }
+                    lease_epoch = Some((pos, epoch));
                 }
-                // Other kinds (driver_election, ...) are not the decider's.
+                // Elections without a lease_epoch (and other kinds) are
+                // not the decider's and attest nothing to check.
             }
             PayloadType::InfIn | PayloadType::InfOut | PayloadType::Mail => {}
         }
@@ -487,6 +513,35 @@ mod tests {
         // A decider Policy with an unparseable body warns.
         let log = vec![mk(0, Policy, Json::obj(vec![("kind", Json::str("decider"))]))];
         assert_eq!(codes(&lint_entries(&log)), vec!["malformed-policy"]);
+    }
+
+    #[test]
+    fn lease_epochs_must_strictly_increase_across_elections() {
+        use crate::sm::fence::{election_body, election_body_with_epoch};
+        use PayloadType::*;
+        // Increasing epochs, with legacy epoch-less markers interleaved: silent.
+        let log = vec![
+            mk(0, Policy, election_body("a")),
+            mk(1, Policy, election_body_with_epoch("b", 2)),
+            mk(2, Policy, election_body("c")),
+            mk(3, Policy, election_body_with_epoch("d", 5)),
+        ];
+        assert!(lint_entries(&log).is_empty(), "{:?}", lint_entries(&log));
+
+        // A regression is an error, and a *repeat* is too (strictly monotone).
+        let log = vec![
+            mk(0, Policy, election_body_with_epoch("a", 5)),
+            mk(1, Policy, election_body_with_epoch("b", 3)),
+        ];
+        let f = lint_entries(&log);
+        assert_eq!(codes(&f), vec!["epoch-regression"]);
+        assert_eq!(f[0].position, Some(1));
+        assert!(f[0].detail.contains("attested 5"), "{}", f[0].detail);
+        let log = vec![
+            mk(0, Policy, election_body_with_epoch("a", 4)),
+            mk(1, Policy, election_body_with_epoch("b", 4)),
+        ];
+        assert_eq!(codes(&lint_entries(&log)), vec!["epoch-regression"]);
     }
 
     #[test]

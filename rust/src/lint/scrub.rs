@@ -18,8 +18,10 @@ use crate::bus::checkpoint::{check_preamble, sidecar_path, Checkpoint, PreambleC
 use crate::bus::durable::FRAME_HEADER;
 use crate::bus::entry::Entry;
 use crate::bus::io::{FsIo, SegmentIo};
+use crate::bus::lease::{lease_path, LeaseRecord, DEFAULT_TTL_MS};
 use crate::bus::registry::decode as split_namespaced;
 use crate::bus::TypeIndex;
+use crate::util::clock::Clock;
 use crate::util::crc32;
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -92,7 +94,7 @@ pub fn lint_log_file(path: &Path) -> io::Result<Report> {
 
 pub fn lint_log_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Report> {
     let mut report = Report::new(path.display().to_string(), "log");
-    let scan = audit_segment(io, path, &mut report)?;
+    let (scan, lease_epoch) = audit_segment(io, path, &mut report)?;
     let mut entries = Vec::new();
     for (i, f) in scan.frames.iter().enumerate() {
         if !f.crc_ok {
@@ -125,6 +127,24 @@ pub fn lint_log_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Repo
         }
     }
     report.findings.extend(lint_entries(&entries));
+    // Epoch cross-check between the two fencing layers: the on-disk
+    // lease must never lag an epoch the log itself attests, because
+    // every acquisition bumps past the max in-log marker epoch before
+    // the takeover's marker is appended. (A lease *ahead* of the log is
+    // normal — acquisitions don't always append a marker.)
+    let max_marker = entries.iter().filter_map(|(_, e)| crate::sm::fence::lease_epoch_of(e)).max();
+    if let (Some(lease_epoch), Some(marker_epoch)) = (lease_epoch, max_marker) {
+        if lease_epoch < marker_epoch {
+            report.findings.push(Finding::error(
+                "lease-epoch-mismatch",
+                format!(
+                    "<log>.lease attests epoch {lease_epoch} but an in-log election marker \
+                     attests epoch {marker_epoch}: the on-disk lease regressed behind the log \
+                     (epochs must be monotone across the two fencing layers)"
+                ),
+            ));
+        }
+    }
     Ok(report)
 }
 
@@ -138,7 +158,10 @@ pub fn lint_registry_file(path: &Path) -> io::Result<Report> {
 
 pub fn lint_registry_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Report> {
     let mut report = Report::new(path.display().to_string(), "registry");
-    let scan = audit_segment(io, path, &mut report)?;
+    // Registry records are namespace-framed, not entry frames, so there
+    // are no in-log election markers to cross-check the lease against —
+    // the physical lease audit (corrupt/foreign/stale) still runs.
+    let (scan, _lease_epoch) = audit_segment(io, path, &mut report)?;
     let mut tenants: BTreeMap<String, Vec<(u64, Entry)>> = BTreeMap::new();
     let mut locals: BTreeMap<String, u64> = BTreeMap::new();
     for (i, f) in scan.frames.iter().enumerate() {
@@ -201,9 +224,14 @@ pub fn lint_registry_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result
 }
 
 /// Shared physical audit: preamble, frame walk, sidecar-vs-segment
-/// consistency. Appends frame/sidecar findings to `report` and returns
-/// the scan for the caller's entry-level pass.
-fn audit_segment(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Result<FrameScan> {
+/// consistency, lease sidecar. Appends frame/sidecar/lease findings to
+/// `report` and returns the scan (for the caller's entry-level pass)
+/// plus the epoch the `<log>.lease` attests for this segment, if any.
+fn audit_segment(
+    io: &dyn SegmentIo,
+    path: &Path,
+    report: &mut Report,
+) -> io::Result<(FrameScan, Option<u64>)> {
     let file = io.open_read(path)?;
     let file_len = io.file_len(&file)?;
 
@@ -261,9 +289,9 @@ fn audit_segment(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Re
     }
 
     // Sidecar audit. With a damaged preamble the UUID is unknowable and
-    // nothing about the sidecar can be verified — the damaged-preamble
-    // error above already dominates, so stop here.
-    let Some(uuid) = uuid else { return Ok(scan) };
+    // nothing about the sidecar (or the lease) can be verified — the
+    // damaged-preamble error above already dominates, so stop here.
+    let Some(uuid) = uuid else { return Ok((scan, None)) };
     match io.read_file(&sidecar_path(path)) {
         Err(_) => {
             if !scan.frames.is_empty() {
@@ -275,7 +303,50 @@ fn audit_segment(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Re
         }
         Ok(bytes) => audit_sidecar(&bytes, uuid, data_start, file_len, &scan, report),
     }
-    Ok(scan)
+    let lease_epoch = audit_lease(io, path, uuid, report);
+    Ok((scan, lease_epoch))
+}
+
+/// Audit `<log>.lease` against the segment's identity, mirroring the
+/// sidecar audit's classifications. An absent lease is silent (logs
+/// predating the lease, or cleaned-up directories); a released or
+/// heartbeat-fresh lease is healthy. Returns the epoch the lease attests
+/// for this segment, feeding the in-log marker cross-check.
+fn audit_lease(io: &dyn SegmentIo, path: &Path, uuid: u128, report: &mut Report) -> Option<u64> {
+    let bytes = io.read_file(&lease_path(path)).ok()?;
+    let Some(rec) = LeaseRecord::decode(&bytes) else {
+        report.findings.push(Finding::warn(
+            "corrupt-lease",
+            "lease fails its magic/CRC/structure checks (torn write or bit rot); acquisition \
+             would treat the log as up for grabs",
+        ));
+        return None;
+    };
+    if rec.uuid != uuid {
+        report.findings.push(Finding::warn(
+            "foreign-lease",
+            format!(
+                "lease identifies segment uuid {:032x} but this segment is uuid {:032x} — a \
+                 lease copied from (or left behind by) another log; acquisition ignores it",
+                rec.uuid, uuid
+            ),
+        ));
+        return None;
+    }
+    if !rec.released {
+        let age = Clock::real().realtime_ms().saturating_sub(rec.heartbeat_ms);
+        if age >= DEFAULT_TTL_MS {
+            report.findings.push(Finding::warn(
+                "stale-lease",
+                format!(
+                    "lease is held by {:?} (epoch {}) but its heartbeat is {age} ms old (ttl \
+                     {} ms): the holder crashed without releasing; the next open takes over",
+                    rec.holder, rec.epoch, DEFAULT_TTL_MS
+                ),
+            ));
+        }
+    }
+    Some(rec.epoch)
 }
 
 fn audit_sidecar(

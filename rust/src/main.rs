@@ -8,6 +8,7 @@
 //!   serve [--requests N]    e2e serving driver over the AOT transformer
 //!   kernel-demo             AgentKernel control-plane tour
 //!   lint <log> | --registry <log> | --src <dir>   offline analyzer
+//!   lease <log>             inspect the <log>.lease append lease
 //!
 //! (clap is unavailable offline; argument parsing is hand-rolled.)
 
@@ -36,8 +37,9 @@ fn main() {
         Some("serve") => serve(&args),
         Some("kernel-demo") => kernel_demo(),
         Some("lint") => lint(&args),
+        Some("lease") => lease_cmd(&args),
         _ => {
-            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint> [flags]");
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
             eprintln!("  swarm   --seed S [--shared] [--log <path>]");
@@ -48,6 +50,8 @@ fn main() {
             eprintln!("          offline analyzer: segment/sidecar scrub + LogAct protocol");
             eprintln!("          invariants, or seam-conformance lint over a source tree;");
             eprintln!("          exits 1 if any Error-severity finding");
+            eprintln!("  lease   <log>   holder/epoch/heartbeat of the append lease;");
+            eprintln!("          exits 1 if the lease is corrupt or foreign");
             std::process::exit(2);
         }
     }
@@ -219,6 +223,69 @@ fn lint(args: &[String]) {
     }
     if report.errors() > 0 {
         std::process::exit(1);
+    }
+}
+
+/// `lease <log>` — inspect the `<log>.lease` append lease without
+/// opening the log for write (no acquisition, no mutation). Exit codes:
+/// 0 healthy (absent, released, or held — stale is reported but exits
+/// 0, since takeover is the designed recovery), 1 corrupt or foreign,
+/// 2 the segment itself is unreadable.
+fn lease_cmd(args: &[String]) {
+    use logact::bus::checkpoint::{check_preamble, PreambleCheck};
+    use logact::bus::lease::{lease_path, LeaseRecord, DEFAULT_TTL_MS};
+    use logact::bus::{FsIo, SegmentIo, PREAMBLE_LEN};
+    let Some(log) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("lease: pass a log path");
+        std::process::exit(2);
+    };
+    let path = std::path::Path::new(log);
+    let io = FsIo;
+    let uuid = match io.open_read(path) {
+        Err(e) => {
+            eprintln!("lease: cannot open segment {log}: {e}");
+            std::process::exit(2);
+        }
+        Ok(f) => {
+            let mut head = [0u8; PREAMBLE_LEN as usize];
+            match io.read_exact_at(&f, &mut head, 0) {
+                Ok(()) => match check_preamble(&head) {
+                    PreambleCheck::Valid(u) => Some(u),
+                    PreambleCheck::Damaged => None,
+                    PreambleCheck::Absent => Some(0), // legacy preamble-less segment
+                },
+                Err(_) => Some(0), // shorter than a preamble: legacy stub
+            }
+        }
+    };
+    let lp = lease_path(path);
+    let bytes = match io.read_file(&lp) {
+        Err(_) => {
+            println!("{}: no lease (log predates the lease, or was never opened for write)", lp.display());
+            return;
+        }
+        Ok(b) => b,
+    };
+    let Some(rec) = LeaseRecord::decode(&bytes) else {
+        println!("{}: CORRUPT (fails magic/CRC/structure checks)", lp.display());
+        std::process::exit(1);
+    };
+    let age = Clock::real().realtime_ms().saturating_sub(rec.heartbeat_ms);
+    let stale = !rec.released && age >= DEFAULT_TTL_MS;
+    println!("{}:", lp.display());
+    println!("  holder      {}", rec.holder);
+    println!("  epoch       {}", rec.epoch);
+    println!("  state       {}", if rec.released { "released" } else { "held" });
+    println!("  heartbeat   {age} ms ago{}", if stale { " (STALE: past the takeover TTL)" } else { "" });
+    match uuid {
+        Some(u) if u == rec.uuid => println!("  uuid        {:032x} (matches segment)", rec.uuid),
+        None => {
+            println!("  uuid        {:032x} (segment preamble damaged: unverifiable)", rec.uuid)
+        }
+        Some(_) => {
+            println!("  uuid        {:032x} (FOREIGN: does not match this segment)", rec.uuid);
+            std::process::exit(1);
+        }
     }
 }
 

@@ -16,6 +16,29 @@ pub fn election_body(driver_id: &str) -> Json {
     Json::obj(vec![("kind", Json::str("driver_election")), ("driver_id", Json::str(driver_id))])
 }
 
+/// Build an election body that also carries the on-disk append-lease
+/// epoch ([`crate::bus::lease`]). Appending this as the new lease
+/// holder's first entry is what ties the two fencing layers together:
+/// the linter (and any auditor) can check that the `<log>.lease` epoch
+/// and the latest in-log election agree, and that marker epochs are
+/// strictly monotone across takeovers.
+pub fn election_body_with_epoch(driver_id: &str, lease_epoch: u64) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("driver_election")),
+        ("driver_id", Json::str(driver_id)),
+        ("lease_epoch", Json::Int(lease_epoch as i64)),
+    ])
+}
+
+/// The lease epoch an election marker carries, if any (markers predating
+/// the lease, and elections on purely in-process buses, don't).
+pub fn lease_epoch_of(e: &Entry) -> Option<u64> {
+    if !is_election(e) {
+        return None;
+    }
+    e.payload.body.get_u64("lease_epoch")
+}
+
 /// Is this entry a driver election?
 pub fn is_election(e: &Entry) -> bool {
     e.payload.ptype == PayloadType::Policy
@@ -27,6 +50,9 @@ pub fn is_election(e: &Entry) -> bool {
 pub struct FenceTracker {
     /// (driver_id, election entry position)
     pub current: Option<(String, u64)>,
+    /// The on-disk append-lease epoch the latest election attested
+    /// (`None` until an epoch-carrying marker is observed).
+    pub lease_epoch: Option<u64>,
 }
 
 impl FenceTracker {
@@ -39,6 +65,9 @@ impl FenceTracker {
         if is_election(e) {
             if let Some(id) = e.payload.body.get_str("driver_id") {
                 self.current = Some((id.to_string(), e.position));
+            }
+            if let Some(epoch) = lease_epoch_of(e) {
+                self.lease_epoch = Some(epoch);
             }
         }
     }
@@ -108,6 +137,25 @@ mod tests {
         f.observe(&election(9, "B"));
         assert!(!f.intent_valid(&intent(10, "A", 3)), "stale A intent fenced");
         assert!(f.intent_valid(&intent(11, "B", 9)), "B's intents valid");
+    }
+
+    #[test]
+    fn lease_epoch_rides_the_election_marker() {
+        let mut f = FenceTracker::new();
+        f.observe(&election(3, "A"));
+        assert_eq!(f.lease_epoch, None, "plain elections attest no lease epoch");
+        let takeover = Entry {
+            position: 9,
+            realtime_ts: 0,
+            payload: Payload::new(PayloadType::Policy, "B", election_body_with_epoch("B", 4)),
+        };
+        assert_eq!(lease_epoch_of(&takeover), Some(4));
+        f.observe(&takeover);
+        assert_eq!(f.current, Some(("B".to_string(), 9)));
+        assert_eq!(f.lease_epoch, Some(4), "tracker carries the attested lease epoch");
+        // A later plain election keeps the last attested lease epoch.
+        f.observe(&election(12, "C"));
+        assert_eq!(f.lease_epoch, Some(4));
     }
 
     #[test]

@@ -257,7 +257,19 @@ pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
     let repo = Mutex::new(Repo { annotated: BTreeSet::new(), annotations_done: 0 });
     let registry = match &cfg.log_path {
         Some(path) => {
-            let backend = DurableBackend::open(path).expect("open swarm shared log");
+            // The swarm coordinator owns the shared log's append lease
+            // under its own name, so a second concurrent swarm run on
+            // the same artifact fails fast (fresh heartbeat) instead of
+            // interleaving two coordinators' appends.
+            let backend = DurableBackend::open_with(
+                path,
+                Arc::new(crate::bus::FsIo),
+                crate::bus::LeaseConfig {
+                    holder: "swarm-coordinator".into(),
+                    ..crate::bus::LeaseConfig::default()
+                },
+            )
+            .expect("open swarm shared log");
             Some(BusRegistry::new(Arc::new(backend)))
         }
         None if cfg.shared_log => Some(BusRegistry::new(Arc::new(MemBackend::new()))),

@@ -9,13 +9,21 @@
 //!   and of a checkpoint write is failed (cleanly and torn) via
 //!   [`FaultIo`]; op counts are *measured*, not assumed, so no site is
 //!   sampled away.
+//! * **Two-writer matrix** (ISSUE 7) — a second writer takes over the
+//!   append lease at every fencing point of the first writer's commit,
+//!   and every I/O operation of the successor's takeover-open is failed
+//!   both ways; in every interleaving the log must stay one linear
+//!   history (no fork), with the on-disk lease epoch and the in-log
+//!   election-marker epoch in agreement.
 
+use logact::bus::lease::{self, LeaseConfig};
 use logact::bus::{
-    DurableBackend, Entry, FaultIo, FaultMode, IoOp, LogBackend, Payload, PayloadType,
+    DurableBackend, Entry, FaultIo, FaultMode, FsIo, IoOp, LogBackend, Payload, PayloadType,
     PREAMBLE_LEN,
 };
 use logact::util::json::Json;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// `[u32 len][u32 crc]` — mirrors `bus::durable::FRAME_HEADER`.
 const FRAME_HEADER: u64 = 8;
@@ -26,6 +34,7 @@ fn tmp(name: &str) -> PathBuf {
     let p = dir.join(format!("crash-{}-{}.log", name, std::process::id()));
     let _ = std::fs::remove_file(&p);
     let _ = std::fs::remove_file(format!("{}.ckpt", p.display()));
+    let _ = std::fs::remove_file(format!("{}.lease", p.display()));
     p
 }
 
@@ -189,7 +198,11 @@ fn every_append_batch_fault_site_recovers_deterministically() {
         let before = io.ops();
         b.append_batch(&batch_records()).unwrap();
         ops_per_batch = io.ops() - before;
-        assert_eq!(ops_per_batch, 2, "group commit = one blob write + one fsync");
+        assert_eq!(
+            ops_per_batch, 5,
+            "group commit = lease revalidate + blob write + fsync + length probe + \
+             lease revalidate"
+        );
         drop(b);
         let _ = std::fs::remove_file(&p);
     }
@@ -206,13 +219,20 @@ fn every_append_batch_fault_site_recovers_deterministically() {
             let err = b.append_batch(&batch_records()).unwrap_err();
             assert!(err.to_string().contains("injected"), "site {k} {mode:?}: {err}");
 
-            // The rollback ran immediately after the failed op…
             let log = io.oplog();
-            assert_eq!(
-                log[(before + k) as usize].op,
-                IoOp::Truncate,
-                "site {k} {mode:?}: rollback must follow the failure"
-            );
+            if k == 1 {
+                // Site 1 is the pre-write lease revalidation: nothing has
+                // touched the segment yet, so there is nothing to roll
+                // back and no further I/O after the refusal.
+                assert_eq!(log.len() as u64, before + k, "site {k} {mode:?}: refusal is I/O-free");
+            } else {
+                // The rollback ran immediately after the failed op…
+                assert_eq!(
+                    log[(before + k) as usize].op,
+                    IoOp::Truncate,
+                    "site {k} {mode:?}: rollback must follow the failure"
+                );
+            }
             // …and succeeded: not poisoned, index == pre-batch state.
             assert_eq!(b.tail(), 3, "site {k} {mode:?}");
             assert_eq!(b.read(0, 9).unwrap().len(), 3);
@@ -244,7 +264,11 @@ fn every_checkpoint_write_fault_site_leaves_a_recoverable_log() {
         let before = io.ops();
         b.flush().unwrap();
         ops_per_flush = io.ops() - before;
-        assert_eq!(ops_per_flush, 4, "segment fsync + sidecar create/write/fsync");
+        assert_eq!(
+            ops_per_flush, 11,
+            "lease revalidate + segment fsync + sidecar create/write/fsync/rename + \
+             lease revalidate + heartbeat create/write/fsync/rename"
+        );
         drop(b);
         let _ = std::fs::remove_file(&p);
         let _ = std::fs::remove_file(sidecar(&p));
@@ -292,5 +316,159 @@ fn every_checkpoint_write_fault_site_leaves_a_recoverable_log() {
 fn prefill_from(b: &DurableBackend, from: u64, to: u64) {
     for i in from..to {
         b.append(&entry_bytes(i, false)).unwrap();
+    }
+}
+
+/// After writer A stalled/crashed at some fencing point, B takes over,
+/// fences A, and the disk must hold **one linear history**: the base
+/// prefix, B's election marker, then B's appends — with the marker's
+/// attested epoch equal to B's on-disk lease epoch (the two fencing
+/// layers provably agree).
+fn assert_takeover_never_forks(p: &Path, a: &DurableBackend, base: u64, ctx: &str) {
+    let epoch_a = a.lease_epoch();
+    let b = DurableBackend::open_with(
+        p,
+        Arc::new(FsIo),
+        LeaseConfig { holder: "successor".into(), ttl_ms: 0, ..LeaseConfig::default() },
+    )
+    .unwrap_or_else(|e| panic!("{ctx}: successor open: {e}"));
+    assert!(b.lease_took_over(), "{ctx}: a held-stale lease is a takeover");
+    assert!(b.lease_epoch() > epoch_a, "{ctx}: takeover must bump the epoch");
+    assert_eq!(b.append_election_marker("successor").unwrap(), base, "{ctx}");
+    b.append(&entry_bytes(base + 1, false)).unwrap();
+
+    // The stale holder is fenced on every mutation path — and writes
+    // nothing, not even rejected bytes...
+    let len_before = std::fs::metadata(p).unwrap().len();
+    let err = a.append(&entry_bytes(99, false)).unwrap_err();
+    assert!(lease::is_fenced(&err), "{ctx}: want Fenced, got: {err}");
+    assert!(a.is_fenced(), "{ctx}");
+    assert!(a.flush().is_err(), "{ctx}: flush must refuse too");
+    assert_eq!(std::fs::metadata(p).unwrap().len(), len_before, "{ctx}: fenced write landed");
+    // ...but still serves the prefix it indexed before losing the lease.
+    assert_eq!(a.read(0, base).unwrap().len() as u64, base, "{ctx}: fenced reads survive");
+
+    let epoch_b = b.lease_epoch();
+    drop(b);
+
+    // Reopen from scratch: one linear history, epochs agreeing across
+    // the on-disk lease and the in-log marker.
+    let c = DurableBackend::open(p).unwrap();
+    assert_eq!(c.tail(), base + 2, "{ctx}: base + marker + successor append, nothing else");
+    let recs = c.read(0, u64::MAX).unwrap();
+    let marker = Entry::from_bytes(&recs[base as usize].1).unwrap();
+    assert!(logact::sm::fence::is_election(&marker), "{ctx}");
+    assert_eq!(
+        logact::sm::fence::lease_epoch_of(&marker),
+        Some(epoch_b),
+        "{ctx}: marker must attest exactly the successor's lease epoch"
+    );
+    assert!(c.lease_epoch() > epoch_b, "{ctx}: epochs stay monotone across reopens");
+}
+
+#[test]
+fn two_writer_takeover_at_every_commit_fencing_point_never_forks() {
+    // 5 = the measured group-commit op count, asserted in
+    // `every_append_batch_fault_site_recovers_deterministically`.
+    for k in 1..=5u64 {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("commit site {k} {mode:?}");
+            let p = tmp(&format!("2w-commit-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            let a = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            prefill(&a, 3);
+            // A stalls at fencing point k of its commit (the injected
+            // fault stands in for the crash/stall), then B takes over
+            // while A still believes it owns the log.
+            io.fail_after(k, mode);
+            assert!(a.append_batch(&batch_records()).is_err(), "{ctx}");
+            assert_takeover_never_forks(&p, &a, 3, &ctx);
+            drop(a);
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
+    }
+}
+
+#[test]
+fn two_writer_takeover_at_every_flush_fencing_point_never_forks() {
+    // 11 = the measured checkpoint-write op count, asserted in
+    // `every_checkpoint_write_fault_site_leaves_a_recoverable_log`.
+    for k in 1..=11u64 {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("flush site {k} {mode:?}");
+            let p = tmp(&format!("2w-flush-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            let a = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            prefill(&a, 3);
+            io.fail_after(k, mode);
+            assert!(a.flush().is_err(), "{ctx}");
+            assert_takeover_never_forks(&p, &a, 3, &ctx);
+            drop(a);
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
+    }
+}
+
+#[test]
+fn two_writer_lease_fault_sites_never_fork() {
+    // Fixture: a base log whose lease is held-but-stale — the holder
+    // "crashed" (mem::forget keeps the drop from releasing or writing a
+    // sidecar), so the successor's open exercises the full takeover
+    // path: scan, lease acquisition, torn-tail handling, sidecar rewrite.
+    fn crashed_fixture(name: &str) -> PathBuf {
+        let p = tmp(name);
+        let a = DurableBackend::open(&p).unwrap();
+        prefill(&a, 4);
+        std::mem::forget(a);
+        p
+    }
+    fn takeover_cfg() -> LeaseConfig {
+        LeaseConfig { holder: "successor".into(), ttl_ms: 0, ..LeaseConfig::default() }
+    }
+
+    // Measure: how many I/O operations does a takeover-open perform?
+    let ops_per_takeover;
+    {
+        let p = crashed_fixture("2w-lease-ops");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with(&p, io.clone(), takeover_cfg()).unwrap();
+        assert!(b.lease_took_over());
+        assert_eq!(b.tail(), 4);
+        ops_per_takeover = io.ops();
+        assert!(ops_per_takeover >= 10, "open must at least scan + acquire ({ops_per_takeover})");
+        drop(b);
+    }
+
+    // Enumerate: every takeover-open site × {clean failure, torn write}.
+    // Some sites are survivable (the sidecar read falls back to a full
+    // scan; the open-time checkpoint rewrite is best-effort), others
+    // abort the open — both are legal. Losing or forking the base
+    // records is not.
+    for k in 1..=ops_per_takeover {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("takeover op {k} {mode:?}");
+            let p = crashed_fixture(&format!("2w-lease-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            io.fail_op(k, mode);
+            let r = DurableBackend::open_with(&p, io.clone(), takeover_cfg());
+            if let Ok(b) = &r {
+                assert_eq!(b.tail(), 4, "{ctx}: survivable fault, full prefix");
+            }
+            drop(r);
+
+            // A final clean takeover recovers every base record intact,
+            // whatever state the faulted attempt left the lease in.
+            let c = DurableBackend::open_with(&p, Arc::new(FsIo), takeover_cfg()).unwrap();
+            assert_eq!(c.tail(), 4, "{ctx}: base records survive");
+            for (pos, bytes) in c.read(0, 9).unwrap() {
+                assert_eq!(Entry::from_bytes(&bytes).unwrap().position, pos, "{ctx}");
+            }
+            assert!(c.lease_epoch() >= 2, "{ctx}: epochs only ever grow");
+            drop(c);
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
     }
 }

@@ -22,6 +22,7 @@ fn tmp(name: &str) -> PathBuf {
     let p = dir.join(format!("lint-{}-{}.log", name, std::process::id()));
     let _ = std::fs::remove_file(&p);
     let _ = std::fs::remove_file(sidecar_path(&p));
+    let _ = std::fs::remove_file(logact::bus::lease::lease_path(&p));
     p
 }
 
@@ -327,6 +328,89 @@ fn sidecar_tampering_matrix() {
     let r = lint_log_file(&p).unwrap();
     assert!(error_codes(&r).is_empty());
     assert_eq!(warn_codes(&r), vec!["missing-sidecar"]);
+}
+
+#[test]
+fn lease_tampering_matrix() {
+    use logact::bus::lease::{lease_path, LeaseRecord};
+    use PayloadType::*;
+    let records: Vec<Vec<u8>> = (0..3).map(|i| ent(i, Mail, Json::Null)).collect();
+
+    // Torn lease write → corrupt-lease warn (acquisition would treat the
+    // log as up for grabs, which is survivable but worth flagging).
+    let p = build_log("lease-torn", &records);
+    let lb = std::fs::read(lease_path(&p)).unwrap();
+    std::fs::write(lease_path(&p), &lb[..lb.len() / 2]).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["corrupt-lease"]);
+
+    // A lease copied from another log → foreign-lease warn, mirroring
+    // the foreign-sidecar classification.
+    let pa = build_log("lease-foreign-a", &records);
+    let pb = build_log("lease-foreign-b", &records);
+    std::fs::copy(lease_path(&pb), lease_path(&pa)).unwrap();
+    let r = lint_log_file(&pa).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["foreign-lease"]);
+
+    // A held lease whose heartbeat is ancient → stale-lease warn: the
+    // holder crashed without releasing and the next open takes over.
+    let p = build_log("lease-stale", &records);
+    let mut rec = LeaseRecord::decode(&std::fs::read(lease_path(&p)).unwrap()).unwrap();
+    assert!(rec.released, "a clean drop must release the lease");
+    rec.released = false;
+    rec.heartbeat_ms = 0;
+    std::fs::write(lease_path(&p), rec.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty());
+    assert_eq!(warn_codes(&r), vec!["stale-lease"]);
+
+    // Released (clean drop) and absent leases are healthy: silent.
+    let p = build_log("lease-clean", &records);
+    assert!(lint_log_file(&p).unwrap().findings.is_empty());
+    std::fs::remove_file(lease_path(&p)).unwrap();
+    assert!(lint_log_file(&p).unwrap().findings.is_empty());
+}
+
+#[test]
+fn lease_epoch_cross_checks_against_in_log_markers() {
+    use logact::bus::lease::{lease_path, LeaseRecord};
+    use logact::sm::fence::election_body_with_epoch;
+    use PayloadType::*;
+
+    // Markers attesting 5 then 3: the strictly-monotone protocol
+    // invariant fires. The lease file is removed so exactly one error
+    // surfaces (a lagging lease would otherwise also be flagged).
+    let p = build_log(
+        "epoch-regress",
+        &[
+            ent(0, Policy, election_body_with_epoch("a", 5)),
+            ent(1, Policy, election_body_with_epoch("b", 3)),
+        ],
+    );
+    std::fs::remove_file(lease_path(&p)).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["epoch-regression"], "{}", r.to_table().to_markdown());
+    assert_eq!(r.findings[0].position, Some(1));
+
+    // An on-disk lease lagging an epoch the log itself attests is an
+    // error: every takeover bumps the lease *before* its marker lands.
+    let p = build_log("epoch-lag", &[ent(0, Policy, election_body_with_epoch("a", 7))]);
+    let mut rec = LeaseRecord::decode(&std::fs::read(lease_path(&p)).unwrap()).unwrap();
+    rec.epoch = 2;
+    std::fs::write(lease_path(&p), rec.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["lease-epoch-mismatch"], "{}", r.to_table().to_markdown());
+
+    // A lease *ahead* of the log is normal — acquisitions don't always
+    // append a marker — and must stay silent.
+    let p = build_log("epoch-ahead", &[ent(0, Policy, election_body_with_epoch("a", 1))]);
+    let mut rec = LeaseRecord::decode(&std::fs::read(lease_path(&p)).unwrap()).unwrap();
+    rec.epoch = 9;
+    std::fs::write(lease_path(&p), rec.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(r.findings.is_empty(), "{}", r.to_table().to_markdown());
 }
 
 #[test]
