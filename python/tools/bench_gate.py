@@ -51,6 +51,7 @@ def main() -> int:
         return 2
 
     failures = []
+    compared = 0
     for name in sorted(base):
         b = base[name]
         if name not in cur:
@@ -62,6 +63,7 @@ def main() -> int:
             continue
         c = cur[name]
         if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            print(f"skip  {name}: non-numeric value (baseline={b!r} current={c!r})")
             continue
         if b <= 0 or c <= 0:
             # Ratio undefined (a zero timing on a fast machine, say): note
@@ -69,6 +71,7 @@ def main() -> int:
             print(f"skip  {name}: baseline={b} current={c} (non-positive)")
             continue
         # regression > 1 means "worse", whatever the metric's direction.
+        compared += 1
         regression = (c / b) if lower_is_better(name) else (b / c)
         verdict = "FAIL" if regression > args.factor else "ok"
         print(f"{verdict:4}  {name}: baseline={b:.6g} current={c:.6g} regression={regression:.2f}x")
@@ -85,7 +88,18 @@ def main() -> int:
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("\nbench gate: all headline metrics within bounds")
+    if compared == 0:
+        # Key drift (renames/additions) is tolerated above, but if NOT A
+        # SINGLE metric overlapped, the gate checked nothing — say so
+        # loudly instead of printing a green verdict that means nothing.
+        # Still exit 0: this run legitimately seeds the new key set.
+        print(
+            "\nbench gate: WARNING — baseline and current share no comparable "
+            "numeric metrics; nothing was gated this run (key drift? the next "
+            "green run re-seeds the baseline)"
+        )
+        return 0
+    print(f"\nbench gate: all {compared} overlapping headline metrics within bounds")
     return 0
 
 

@@ -84,6 +84,26 @@ impl TypeIndex {
         self.by_tag.values().filter_map(|v| v.last().copied()).max()
     }
 
+    /// Fold `other` — an index keyed by *segment-local* positions — into
+    /// this global index, shifting every position by `base` (the global
+    /// position of the segment's first record). Untyped counts add. The
+    /// segmented reopen calls this once per segment in chain order, so
+    /// the shifted positions arrive ascending and the per-type lists stay
+    /// binary-searchable without a sort.
+    pub fn merge_shifted(&mut self, other: &TypeIndex, base: u64) {
+        for (&tag, positions) in &other.by_tag {
+            let list = self.by_tag.entry(tag).or_default();
+            debug_assert!(
+                positions.first().map_or(true, |&p| {
+                    list.last().map_or(true, |&last| last < p + base)
+                }),
+                "merge_shifted fed out of chain order"
+            );
+            list.extend(positions.iter().map(|&p| p + base));
+        }
+        self.untyped += other.untyped;
+    }
+
     /// Wire form: varint tag count; per tag (ascending) the tag byte, a
     /// varint position count, the first position and then varint deltas;
     /// finally the untyped counter. Framing (length prefix, checksum) is
@@ -340,6 +360,33 @@ mod tests {
         crate::util::varint::write_u64(&mut bad, 0);
         crate::util::varint::write_u64(&mut bad, 0);
         assert!(TypeIndex::from_bytes(&bad).is_none(), "non-ascending positions accepted");
+    }
+
+    #[test]
+    fn merge_shifted_rebases_segment_local_indexes() {
+        // Two "segments": seg A holds positions 0..3 locally, seg B 0..2.
+        let mut a = TypeIndex::new();
+        a.note(0, &frame(0, PayloadType::Mail));
+        a.note(1, &frame(1, PayloadType::Intent));
+        a.note(2, &frame(2, PayloadType::Mail));
+        a.note(3, b"raw non-entry bytes");
+        let mut b = TypeIndex::new();
+        b.note(0, &frame(0, PayloadType::Mail));
+        b.note(1, &frame(1, PayloadType::Vote));
+        let mut global = TypeIndex::new();
+        global.merge_shifted(&a, 0);
+        global.merge_shifted(&b, 4);
+        assert_eq!(global.untyped_records(), 1, "untyped counts add");
+        assert_eq!(global.total_indexed(), 5);
+        assert_eq!(global.max_position(), Some(5));
+        // With the untyped record present queries refuse; counts confirm
+        // the rebased layout.
+        assert_eq!(global.counts().get(&PayloadType::Mail.tag()), Some(&3));
+        let mut typed = TypeIndex::new();
+        typed.merge_shifted(&b, 4);
+        typed.merge_shifted(&b, 6);
+        assert_eq!(typed.positions(PayloadType::Mail, 0, 99), Some(vec![4, 6]));
+        assert_eq!(typed.positions(PayloadType::Vote, 0, 99), Some(vec![5, 7]));
     }
 
     #[test]

@@ -101,6 +101,79 @@ pub fn check_preamble(head: &[u8; 32]) -> PreambleCheck {
     PreambleCheck::Valid(u128::from_le_bytes(head[12..28].try_into().unwrap()))
 }
 
+/// First 8 bytes of every *rotated* segment file (index ≥ 1 of a
+/// segmented log). Distinct from [`SEGMENT_MAGIC`] so a chained segment
+/// opened as a standalone log is recognized rather than misparsed.
+pub const SEGMENT_MAGIC_V2: [u8; 8] = *b"LACTSEG2";
+
+/// v2 chain-link preamble: magic(8) + version u32(4) + uuid u128(16) +
+/// prev_uuid u128(16) + base_pos u64(8) + prev_len u64(8) + crc32(4)
+/// over the preceding 60 bytes. Only rotated segments carry it; segment
+/// 0 keeps the 32-byte v1 preamble so legacy single-segment logs stay
+/// byte-compatible.
+pub const PREAMBLE_V2_LEN: u64 = 64;
+
+pub const SEGMENT_VERSION_V2: u32 = 2;
+
+/// The chain-link a rotated segment's v2 preamble carries: enough to
+/// verify, without the manifest, that this segment really continues its
+/// named predecessor at the recorded global position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainLink {
+    /// This segment's own identity.
+    pub uuid: u128,
+    /// The sealed predecessor's preamble UUID.
+    pub prev_uuid: u128,
+    /// Global position of this segment's first record (= the chain's
+    /// record count at rotation time).
+    pub base_pos: u64,
+    /// The predecessor's sealed byte length at rotation time.
+    pub prev_len: u64,
+}
+
+/// What the head of a rotated segment file turned out to be.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainCheck {
+    /// Well-formed chain-link; frame data starts at [`PREAMBLE_V2_LEN`].
+    Valid(ChainLink),
+    /// v2 magic but a corrupt body: the link is unknowable.
+    Damaged,
+    /// Not a v2 preamble at all.
+    Absent,
+}
+
+pub fn encode_preamble_v2(link: &ChainLink) -> [u8; 64] {
+    let mut out = [0u8; 64];
+    out[0..8].copy_from_slice(&SEGMENT_MAGIC_V2);
+    out[8..12].copy_from_slice(&SEGMENT_VERSION_V2.to_le_bytes());
+    out[12..28].copy_from_slice(&link.uuid.to_le_bytes());
+    out[28..44].copy_from_slice(&link.prev_uuid.to_le_bytes());
+    out[44..52].copy_from_slice(&link.base_pos.to_le_bytes());
+    out[52..60].copy_from_slice(&link.prev_len.to_le_bytes());
+    let crc = crc32::hash(&out[0..60]);
+    out[60..64].copy_from_slice(&crc.to_le_bytes());
+    out
+}
+
+pub fn check_preamble_v2(head: &[u8; 64]) -> ChainCheck {
+    if head[0..8] != SEGMENT_MAGIC_V2 {
+        return ChainCheck::Absent;
+    }
+    let crc = u32::from_le_bytes(head[60..64].try_into().unwrap());
+    if crc32::hash(&head[0..60]) != crc {
+        return ChainCheck::Damaged;
+    }
+    if u32::from_le_bytes(head[8..12].try_into().unwrap()) != SEGMENT_VERSION_V2 {
+        return ChainCheck::Damaged;
+    }
+    ChainCheck::Valid(ChainLink {
+        uuid: u128::from_le_bytes(head[12..28].try_into().unwrap()),
+        prev_uuid: u128::from_le_bytes(head[28..44].try_into().unwrap()),
+        base_pos: u64::from_le_bytes(head[44..52].try_into().unwrap()),
+        prev_len: u64::from_le_bytes(head[52..60].try_into().unwrap()),
+    })
+}
+
 /// A process-unique random-enough log UUID: wall-clock nanos, pid and a
 /// process counter whitened through SplitMix64 on each half. Collision
 /// would require two logs created the same nanosecond in the same pid
@@ -365,6 +438,36 @@ mod tests {
         let legacy = [9u8, 0, 0, 0, 0xAA, 0xBB, 0xCC, 0xDD, 1, 2, 3, 4, 5, 6, 7, 8, 0, 0, 0, 0, 0,
             0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
         assert_eq!(check_preamble(&legacy), PreambleCheck::Absent);
+    }
+
+    #[test]
+    fn v2_preamble_roundtrip_and_damage() {
+        let link = ChainLink {
+            uuid: fresh_uuid(),
+            prev_uuid: fresh_uuid(),
+            base_pos: 48,
+            prev_len: 2_080,
+        };
+        let head = encode_preamble_v2(&link);
+        assert_eq!(check_preamble_v2(&head), ChainCheck::Valid(link));
+        // Any covered-region flip → Damaged, never a bogus link.
+        for i in 8..60 {
+            let mut bad = head;
+            bad[i] ^= 0x01;
+            assert_eq!(check_preamble_v2(&bad), ChainCheck::Damaged, "flip at {i}");
+        }
+        let mut bad = head;
+        bad[0] ^= 0x01;
+        assert_eq!(check_preamble_v2(&bad), ChainCheck::Absent);
+        // The two preamble generations never collide: a v1 head is not a
+        // v2 head and vice versa.
+        let v1 = encode_preamble(link.uuid);
+        let mut as_v2 = [0u8; 64];
+        as_v2[0..32].copy_from_slice(&v1);
+        assert_eq!(check_preamble_v2(&as_v2), ChainCheck::Absent);
+        let mut as_v1 = [0u8; 32];
+        as_v1.copy_from_slice(&head[0..32]);
+        assert_eq!(check_preamble(&as_v1), PreambleCheck::Absent);
     }
 
     #[test]

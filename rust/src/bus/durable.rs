@@ -1,7 +1,8 @@
 //! Durable file backend (the paper's SQLite variant).
 //!
-//! One append-only segment file: a 32-byte preamble stamping the log's
-//! UUID (see [`super::checkpoint`]), then records framed as
+//! The log is a **chain of append-only segment files**. An unrotated log
+//! is a single segment: a 32-byte preamble stamping the log's UUID (see
+//! [`super::checkpoint`]), then records framed as
 //! `[u32 len][u32 crc32][bytes]`, so the log survives process reboot (not
 //! disk loss — same guarantee the paper assigns its SQLite backend). An
 //! in-memory `(offset, len)` index makes reads O(1) per record.
@@ -15,8 +16,14 @@
 //! * **Positioned reads** — reads use `read_exact_at` (pread), never the
 //!   shared file cursor, so a reader can never perturb where the next
 //!   append lands and readers don't pay seek-restore round-trips.
+//! * **Heartbeat on commit** — a holder that appends steadily but never
+//!   flushes still proves liveness: the commit path refreshes the lease
+//!   heartbeat whenever the stamp has aged past a third of the TTL
+//!   ([`lease::needs_heartbeat`]), so a busy writer is never mistaken
+//!   for a crashed one. The refresh is best-effort and time-gated — a
+//!   fresh heartbeat adds zero I/O to the 5-op commit sequence.
 //!
-//! Cold-path properties (this layer's overhaul):
+//! Cold-path properties:
 //!
 //! * **Checkpointed reopen** — [`DurableBackend::open`] first tries the
 //!   CRC-guarded `.ckpt` sidecar: if it verifies against the segment
@@ -28,26 +35,42 @@
 //!   sidecar. Note the trade this encodes: frames inside a verified
 //!   checkpoint were CRC-checked when written, and are *not* re-hashed on
 //!   reopen — [`DurableBackend::verify`] is the explicit full scrub for
-//!   callers that want bit-rot detection over the whole segment.
-//! * **Pluggable I/O** — every segment and sidecar operation goes through
-//!   a [`SegmentIo`], so crash points (torn batch write, failed rollback,
-//!   torn checkpoint write) are deterministically testable via
-//!   [`super::io::FaultIo`] instead of hand-picked truncations.
+//!   callers that want bit-rot detection over the whole chain.
+//! * **Segment rotation** — when the active segment crosses a
+//!   [`DurableBackend::set_rotation`] threshold (bytes and/or records),
+//!   commit seals it: final sidecar published, a new `<log>.000N`
+//!   segment created with a v2 chain-link preamble (predecessor UUID,
+//!   global base, predecessor length), and the CRC-guarded
+//!   `<log>.manifest` atomically renamed to describe the new chain. The
+//!   manifest rename is the rotation's single commit point: a crash on
+//!   either side reopens to the pre- or post-rotation log, never a fork.
+//!   Sealed segments are opened read-only and never mutated again;
+//!   global positions stay dense via per-segment bases, so readers see
+//!   one flat log. A log with no manifest is an implicit one-segment
+//!   chain — legacy logs open unchanged.
+//! * **Pluggable I/O** — every segment, sidecar and manifest operation
+//!   goes through a [`SegmentIo`], so crash points (torn batch write,
+//!   failed rollback, torn checkpoint write, every rotation step) are
+//!   deterministically testable via [`super::io::FaultIo`] instead of
+//!   hand-picked truncations.
 //! * **Fenced ownership** — open acquires an epoch-stamped `<log>.lease`
-//!   ([`super::lease`]) and every commit/flush revalidates it, so two OS
-//!   processes can never fork one segment: a crashed holder's lease goes
+//!   ([`super::lease`]) covering the whole chain (manifest + active
+//!   segment), and every commit/flush revalidates it, so two OS
+//!   processes can never fork one log: a crashed holder's lease goes
 //!   heartbeat-stale and is taken over (epoch bump), while a stale
 //!   holder's handle gets a typed [`lease::Fenced`] error and refuses
 //!   appends — reads keep working.
 
 use super::backend::{BackendStats, LogBackend, TypeIndex};
 use super::checkpoint::{
-    check_preamble, encode_preamble, fresh_uuid, sidecar_path, Checkpoint, CheckpointStats,
-    PreambleCheck, PREAMBLE_LEN,
+    check_preamble, check_preamble_v2, encode_preamble, encode_preamble_v2, fresh_uuid,
+    sidecar_path, ChainCheck, ChainLink, Checkpoint, CheckpointStats, PreambleCheck, PREAMBLE_LEN,
+    PREAMBLE_V2_LEN,
 };
 use super::entry::{Entry, Payload, PayloadType};
 use super::io::{FsIo, SegmentIo};
 use super::lease::{self, LeaseConfig, LeaseRecord};
+use super::manifest::{self, Manifest, SegmentMeta};
 use crate::util::clock::Clock;
 use crate::util::crc32;
 use std::collections::BTreeMap;
@@ -63,6 +86,9 @@ pub struct DurableBackend {
     io: Arc<dyn SegmentIo>,
     /// Heartbeat stamps and takeover backoff are charged here.
     clock: Clock,
+    /// The lease TTL this handle was opened with — the commit-path
+    /// heartbeat gate is a third of it.
+    ttl_ms: u64,
     inner: Mutex<Inner>,
     /// fsync at every commit point — once per `append`, once per
     /// `append_batch` (disable to measure raw write cost; `flush` still
@@ -74,29 +100,51 @@ pub struct DurableBackend {
     auto_checkpoint: AtomicBool,
 }
 
-struct Inner {
+/// One file in the segment chain. The last element of `Inner::segs` is
+/// the active (append) segment; everything before it is sealed and
+/// read-only.
+struct Segment {
     file: File,
-    /// This segment's identity, stamped in the preamble; 0 for legacy
-    /// preamble-less segments. The sidecar must present the same UUID.
+    path: PathBuf,
+    /// The segment's identity: v1 preamble UUID for segment 0 (0 for
+    /// legacy preamble-less roots), v2 chain-link UUID for rotated
+    /// segments. The sidecar must present the same UUID.
     uuid: u128,
-    /// Byte offset of the first frame (`PREAMBLE_LEN`, or 0 for legacy).
+    /// Byte offset of the first frame (`PREAMBLE_LEN`, `PREAMBLE_V2_LEN`,
+    /// or 0 for legacy).
     data_start: u64,
-    /// `(frame byte offset, payload byte length)` per record.
+    /// Global position of this segment's first record. Positions stay
+    /// dense across the chain: `base[i+1] = base[i] + frames[i].len()`.
+    base: u64,
+    /// `(frame byte offset, payload byte length)` per record, offsets
+    /// local to this segment's file.
     frames: Vec<(u64, u32)>,
-    /// Per-[`PayloadType`] position index, maintained on append and
-    /// restored from the checkpoint (or rebuilt by the recovery scan) on
-    /// reopen.
+    /// Byte length of the indexed portion (the write position for the
+    /// active segment; the sealed length for sealed ones).
+    len: u64,
+}
+
+struct Inner {
+    /// The segment chain; never empty, last = active.
+    segs: Vec<Segment>,
+    /// Per-[`PayloadType`] **global** position index over the whole
+    /// chain, maintained on append and restored from checkpoints (or
+    /// rebuilt by the recovery scan) on reopen.
     types: TypeIndex,
-    write_pos: u64,
+    /// The active segment's **local** slice of the type index — what its
+    /// sidecar snapshots. Maintained in lockstep with `types` on append;
+    /// reset on rotation.
+    seg_types: TypeIndex,
     stats: BackendStats,
     ckpt_stats: CheckpointStats,
     /// Opaque keyed blobs persisted through the sidecar for layers above
     /// the backend (the registry's namespace maps).
     aux: BTreeMap<String, Vec<u8>>,
-    /// False when the segment's preamble is damaged: the UUID is
+    /// False when the root segment's preamble is damaged: the UUID is
     /// unknowable, so no sidecar we write could ever be trusted by a
     /// future open — writing one would just churn bytes and mislead the
-    /// `sidecar_rejected` stat on every reopen.
+    /// `sidecar_rejected` stat on every reopen. Rotation is disabled for
+    /// the same reason (a chain needs a trustworthy root identity).
     sidecar_writable: bool,
     /// Frames (or aux blobs) appended since the last checkpoint write.
     dirty: bool,
@@ -118,6 +166,41 @@ struct Inner {
     /// index still matches the disk, so reads stay valid — it has merely
     /// lost the *right* to append.
     fenced: Option<lease::Fenced>,
+    /// Rotation thresholds: seal the active segment once it holds at
+    /// least this many bytes / records. `None` (the default) never
+    /// rotates — the log stays a single segment and grows no manifest.
+    rotate_bytes: Option<u64>,
+    rotate_records: Option<u64>,
+}
+
+impl Inner {
+    fn active(&self) -> &Segment {
+        self.segs.last().expect("segment chain is never empty")
+    }
+
+    fn active_mut(&mut self) -> &mut Segment {
+        self.segs.last_mut().expect("segment chain is never empty")
+    }
+
+    /// One past the last global position (the chain's record count).
+    fn tail(&self) -> u64 {
+        let a = self.active();
+        a.base + a.frames.len() as u64
+    }
+
+    /// Map a global position to `(segment index, local frame index)`.
+    fn locate(&self, global: u64) -> Option<(usize, usize)> {
+        let si = self.segs.partition_point(|s| s.base <= global);
+        if si == 0 {
+            return None;
+        }
+        let seg = &self.segs[si - 1];
+        let local = (global - seg.base) as usize;
+        if local >= seg.frames.len() {
+            return None;
+        }
+        Some((si - 1, local))
+    }
 }
 
 pub const FRAME_HEADER: usize = 8; // u32 len + u32 crc
@@ -129,10 +212,49 @@ fn poisoned_err() -> std::io::Error {
     )
 }
 
+fn chain_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
 fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32::hash(bytes).to_le_bytes());
     out.extend_from_slice(bytes);
+}
+
+/// Scan `[from, limit)` of a segment file, appending every intact frame
+/// to `frames` (offsets local to the file) and classifying it into
+/// `types` (positions local to the segment). Stops at the first torn or
+/// corrupt frame; returns the byte position it stopped at. The scan
+/// reads every payload for its CRC check, so classifying it for the
+/// type index is one header peek away.
+fn scan_frames_into(
+    io: &dyn SegmentIo,
+    file: &File,
+    from: u64,
+    limit: u64,
+    frames: &mut Vec<(u64, u32)>,
+    types: &mut TypeIndex,
+) -> std::io::Result<u64> {
+    let mut pos = from;
+    let mut header = [0u8; FRAME_HEADER];
+    while pos + FRAME_HEADER as u64 <= limit {
+        io.read_exact_at(file, &mut header, pos)?;
+        let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if pos + FRAME_HEADER as u64 + rec_len as u64 > limit {
+            break; // torn write
+        }
+        let mut buf = vec![0u8; rec_len as usize];
+        io.read_exact_at(file, &mut buf, pos + FRAME_HEADER as u64)?;
+        if crc32::hash(&buf) != crc {
+            break; // corrupt tail
+        }
+        types.note(frames.len() as u64, &buf);
+        frames.push((pos, rec_len));
+        pos += FRAME_HEADER as u64 + rec_len as u64;
+    }
+    Ok(pos)
 }
 
 /// The highest append-lease epoch any in-log `driver_election` marker
@@ -141,23 +263,28 @@ fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
 /// on-disk record, so epochs stay monotone even if `<log>.lease` was
 /// deleted between sessions. Only Policy-typed frames are read — one
 /// indexed point-read each, not a log scan — and only on opens where the
-/// lease file doesn't already attest an epoch for this segment (a valid
+/// lease file doesn't already attest an epoch for this log (a valid
 /// lease dominates every marker by construction).
-fn max_log_lease_epoch(
-    io: &dyn SegmentIo,
-    file: &File,
-    frames: &[(u64, u32)],
-    types: &TypeIndex,
-) -> u64 {
-    let positions = match types.positions(PayloadType::Policy, 0, frames.len() as u64) {
+fn max_log_lease_epoch(io: &dyn SegmentIo, segs: &[Segment], types: &TypeIndex) -> u64 {
+    let total: u64 = segs.iter().map(|s| s.frames.len() as u64).sum();
+    let positions = match types.positions(PayloadType::Policy, 0, total) {
         Some(p) => p,
         None => return 0,
     };
     let mut max = 0u64;
     for pos in positions {
-        let (off, len) = frames[pos as usize];
+        let si = segs.partition_point(|s| s.base <= pos);
+        if si == 0 {
+            continue;
+        }
+        let seg = &segs[si - 1];
+        let local = (pos - seg.base) as usize;
+        if local >= seg.frames.len() {
+            continue;
+        }
+        let (off, len) = seg.frames[local];
         let mut buf = vec![0u8; len as usize];
-        if io.read_exact_at(file, &mut buf, off + FRAME_HEADER as u64).is_err() {
+        if io.read_exact_at(&seg.file, &mut buf, off + FRAME_HEADER as u64).is_err() {
             continue;
         }
         if let Some(e) = Entry::from_bytes(&buf) {
@@ -167,6 +294,75 @@ fn max_log_lease_epoch(
         }
     }
     max
+}
+
+/// Validate segment `idx`'s head against its manifest entry. Returns the
+/// segment's `data_start`. Chained opens are strict: any identity doubt
+/// is a hard error, because silently adopting a wrong file would splice
+/// foreign records into dense global positions.
+fn chain_head_check(
+    io: &dyn SegmentIo,
+    file: &File,
+    file_len: u64,
+    idx: usize,
+    meta: &SegmentMeta,
+    prev: Option<&SegmentMeta>,
+) -> std::io::Result<u64> {
+    if idx == 0 {
+        // Root segment: v1 preamble (or none, for a legacy root that was
+        // rotated — uuid 0 in the manifest attests the absence).
+        if file_len < PREAMBLE_LEN {
+            if meta.uuid == 0 {
+                return Ok(0);
+            }
+            return Err(chain_err(format!(
+                "manifest names root segment uuid {:032x} but the file is shorter than a preamble",
+                meta.uuid
+            )));
+        }
+        let mut head = [0u8; PREAMBLE_LEN as usize];
+        io.read_exact_at(file, &mut head, 0)?;
+        return match check_preamble(&head) {
+            PreambleCheck::Valid(u) if u == meta.uuid => Ok(PREAMBLE_LEN),
+            PreambleCheck::Valid(u) => Err(chain_err(format!(
+                "root segment uuid {u:032x} disagrees with the manifest's {:032x}",
+                meta.uuid
+            ))),
+            PreambleCheck::Absent if meta.uuid == 0 => Ok(0),
+            PreambleCheck::Absent => {
+                Err(chain_err("manifest expects a stamped root segment; preamble absent".into()))
+            }
+            PreambleCheck::Damaged => {
+                Err(chain_err("root segment preamble damaged under a manifest".into()))
+            }
+        };
+    }
+    // Rotated segment: v2 chain-link preamble, every field cross-checked
+    // against the manifest and the predecessor.
+    let prev = prev.expect("rotated segments always have a predecessor");
+    if file_len < PREAMBLE_V2_LEN {
+        return Err(chain_err(format!("segment {idx} is shorter than its chain-link preamble")));
+    }
+    let mut head = [0u8; PREAMBLE_V2_LEN as usize];
+    io.read_exact_at(file, &mut head, 0)?;
+    match check_preamble_v2(&head) {
+        ChainCheck::Valid(link) => {
+            if link.uuid != meta.uuid
+                || link.prev_uuid != prev.uuid
+                || link.base_pos != meta.base
+                || link.prev_len != prev.sealed_len
+            {
+                return Err(chain_err(format!(
+                    "segment {idx} chain link disagrees with the manifest (chain broken)"
+                )));
+            }
+            Ok(PREAMBLE_V2_LEN)
+        }
+        ChainCheck::Damaged => Err(chain_err(format!("segment {idx} has a damaged chain link"))),
+        ChainCheck::Absent => {
+            Err(chain_err(format!("segment {idx} carries no chain link (chain broken)")))
+        }
+    }
 }
 
 impl DurableBackend {
@@ -186,15 +382,22 @@ impl DurableBackend {
 
     /// Open with an explicit [`SegmentIo`] and lease policy.
     ///
-    /// Recovery order: read/stamp the preamble, adopt the sidecar if it
-    /// verifies, scan whatever the sidecar doesn't cover, **acquire the
-    /// append lease**, then truncate any torn tail and rewrite the
-    /// sidecar if the one on disk didn't fully describe the recovered
-    /// log. The lease comes before the mutations: a process that fails
-    /// to acquire it (a live holder owns the log) must not have
-    /// truncated a tail the owner was mid-way through writing. Open
-    /// fails with `WouldBlock` when the holder's heartbeat is fresh
-    /// after `cfg.attempts` backoff rounds.
+    /// A `<log>.manifest` (CRC-guarded, atomically renamed into place by
+    /// rotation) names the segment chain; its absence means the log is a
+    /// single segment — every pre-rotation log opens exactly as before.
+    /// A manifest that exists but doesn't verify is a hard error, never
+    /// a silent fallback: guessing at the chain shape could splice or
+    /// drop sealed records.
+    ///
+    /// Recovery order per segment: read/stamp the preamble, adopt the
+    /// sidecar if it verifies, scan whatever the sidecar doesn't cover.
+    /// Then **acquire the append lease**, truncate any torn active tail,
+    /// and rewrite the active sidecar if the one on disk didn't fully
+    /// describe the recovered log. The lease comes before the
+    /// mutations: a process that fails to acquire it (a live holder owns
+    /// the log) must not have truncated a tail the owner was mid-way
+    /// through writing. Open fails with `WouldBlock` when the holder's
+    /// heartbeat is fresh after `cfg.attempts` backoff rounds.
     pub fn open_with(
         path: impl AsRef<Path>,
         io: Arc<dyn SegmentIo>,
@@ -204,6 +407,18 @@ impl DurableBackend {
         if let Some(dir) = path.parent() {
             io.create_dir_all(dir)?;
         }
+        match manifest::load(&*io, &path)? {
+            Some(m) => DurableBackend::open_chained(path, io, cfg, m),
+            None => DurableBackend::open_single(path, io, cfg),
+        }
+    }
+
+    /// Open the implicit one-segment chain (no manifest on disk).
+    fn open_single(
+        path: PathBuf,
+        io: Arc<dyn SegmentIo>,
+        cfg: LeaseConfig,
+    ) -> std::io::Result<DurableBackend> {
         let ckpt_path = sidecar_path(&path);
         let file = io.open_log(&path)?;
         let mut len = io.file_len(&file)?;
@@ -267,27 +482,9 @@ impl DurableBackend {
         }
 
         // Scan the uncovered suffix, rebuilding (or extending) both
-        // indexes. The scan reads every payload for its CRC check, so
-        // classifying it for the type index is one header peek away.
+        // indexes.
         ckpt_stats.reopen_scanned_bytes = len - scan_from;
-        let mut pos = scan_from;
-        let mut header = [0u8; FRAME_HEADER];
-        while pos + FRAME_HEADER as u64 <= len {
-            io.read_exact_at(&file, &mut header, pos)?;
-            let rec_len = u32::from_le_bytes(header[0..4].try_into().unwrap());
-            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
-            if pos + FRAME_HEADER as u64 + rec_len as u64 > len {
-                break; // torn write: truncate below
-            }
-            let mut buf = vec![0u8; rec_len as usize];
-            io.read_exact_at(&file, &mut buf, pos + FRAME_HEADER as u64)?;
-            if crc32::hash(&buf) != crc {
-                break; // corrupt tail
-            }
-            types.note(frames.len() as u64, &buf);
-            frames.push((pos, rec_len));
-            pos += FRAME_HEADER as u64 + rec_len as u64;
-        }
+        let mut pos = scan_frames_into(&*io, &file, scan_from, len, &mut frames, &mut types)?;
 
         // Acquire the append lease before mutating the recovered tail:
         // what looks like a torn suffix may be a live owner's in-flight
@@ -308,9 +505,13 @@ impl DurableBackend {
             .as_deref()
             .and_then(LeaseRecord::decode)
             .is_some_and(|rec| rec.uuid == uuid);
+        let seg =
+            Segment { file, path: path.clone(), uuid, data_start, base: 0, frames, len: pos };
+        let segs_for_epoch = std::slice::from_ref(&seg);
         let log_epoch =
-            if lease_attests { 0 } else { max_log_lease_epoch(&*io, &file, &frames, &types) };
+            if lease_attests { 0 } else { max_log_lease_epoch(&*io, segs_for_epoch, &types) };
         let (mut lease_rec, took_over) = lease::acquire(&*io, &lease_file, uuid, log_epoch, &cfg)?;
+        let Segment { file, mut uuid, mut data_start, frames, .. } = seg;
 
         if pos < len {
             // Drop the torn/corrupt suffix so future appends are clean.
@@ -330,22 +531,20 @@ impl DurableBackend {
             lease_rec.uuid = uuid;
             lease::write_atomic(&*io, &lease_file, &lease_rec)?;
         }
-
         let rewrite = ckpt_stats.sidecar_rejected
             || frames.len() as u64 != ckpt_stats.frames_from_checkpoint;
+        let seg_types = types.clone();
         let backend = DurableBackend {
-            path,
+            path: path.clone(),
             ckpt_path,
             lease_file,
             io,
             clock: cfg.clock,
+            ttl_ms: cfg.ttl_ms,
             inner: Mutex::new(Inner {
-                file,
-                uuid,
-                data_start,
-                frames,
+                segs: vec![Segment { file, path, uuid, data_start, base: 0, frames, len: pos }],
                 types,
-                write_pos: pos,
+                seg_types,
                 stats: BackendStats::default(),
                 ckpt_stats,
                 aux,
@@ -355,6 +554,8 @@ impl DurableBackend {
                 lease: lease_rec,
                 took_over,
                 fenced: None,
+                rotate_bytes: None,
+                rotate_records: None,
             }),
             sync_each_append: true,
             auto_checkpoint: AtomicBool::new(true),
@@ -367,8 +568,199 @@ impl DurableBackend {
         Ok(backend)
     }
 
-    /// Verify a decoded sidecar against this segment. `None` (reject) on
-    /// any doubt; the caller falls back to the full scan.
+    /// Open a rotated log: walk the manifest's chain, verifying every
+    /// sealed segment against its manifest entry (identity, chain link,
+    /// exact sealed length and frame count — all hard errors), then
+    /// recover the active segment exactly like a single-segment open.
+    fn open_chained(
+        path: PathBuf,
+        io: Arc<dyn SegmentIo>,
+        cfg: LeaseConfig,
+        m: Manifest,
+    ) -> std::io::Result<DurableBackend> {
+        let ckpt_path = sidecar_path(&path);
+        let n = m.len();
+        let mut segs: Vec<Segment> = Vec::with_capacity(n);
+        let mut types = TypeIndex::new();
+        let mut ckpt_stats = CheckpointStats::default();
+        let mut fallback_aux: Option<BTreeMap<String, Vec<u8>>> = None;
+
+        // Sealed segments: read-only, byte-exact. A sealed segment's
+        // sidecar (published at seal time) normally covers it entirely,
+        // so the scan below is a no-op; a missing or stale sidecar costs
+        // a scan of the uncovered part, never correctness.
+        for (i, meta) in m.segments[..n - 1].iter().enumerate() {
+            let sp = manifest::segment_path(&path, i);
+            let file = io.open_read(&sp)?;
+            let flen = io.file_len(&file)?;
+            if flen < meta.sealed_len {
+                return Err(chain_err(format!(
+                    "sealed segment {i} holds {flen} bytes but the manifest sealed {}",
+                    meta.sealed_len
+                )));
+            }
+            let prev = i.checked_sub(1).map(|j| &m.segments[j]);
+            let data_start = chain_head_check(&*io, &file, flen, i, meta, prev)?;
+            let mut frames: Vec<(u64, u32)> = Vec::new();
+            let mut seg_types = TypeIndex::new();
+            let mut scan_from = data_start;
+            if let Ok(bytes) = io.read_file(&sidecar_path(&sp)) {
+                if let Some((ck_frames, ck_types, ck_aux, ck_len)) = DurableBackend::try_adopt(
+                    &*io,
+                    &file,
+                    &bytes,
+                    meta.uuid,
+                    data_start,
+                    meta.sealed_len,
+                ) {
+                    ckpt_stats.frames_from_checkpoint += ck_frames.len() as u64;
+                    frames = ck_frames;
+                    seg_types = ck_types;
+                    fallback_aux = Some(ck_aux);
+                    scan_from = ck_len;
+                }
+            }
+            let end = scan_frames_into(
+                &*io,
+                &file,
+                scan_from,
+                meta.sealed_len,
+                &mut frames,
+                &mut seg_types,
+            )?;
+            if end != meta.sealed_len || frames.len() as u64 != meta.sealed_frames {
+                return Err(chain_err(format!(
+                    "sealed segment {i} recovered {} frames over {end} bytes; the manifest \
+                     sealed {} frames over {} bytes",
+                    frames.len(),
+                    meta.sealed_frames,
+                    meta.sealed_len
+                )));
+            }
+            ckpt_stats.reopen_scanned_bytes += meta.sealed_len - scan_from;
+            ckpt_stats.segment_bytes_at_open += flen;
+            types.merge_shifted(&seg_types, meta.base);
+            segs.push(Segment {
+                file,
+                path: sp,
+                uuid: meta.uuid,
+                data_start,
+                base: meta.base,
+                frames,
+                len: meta.sealed_len,
+            });
+        }
+
+        // Active segment: the only mutable file in the chain. Recovered
+        // like a single-segment log — sidecar adoption, tail scan, torn
+        // tail truncated (after the lease is ours).
+        let meta = *m.active();
+        let ai = n - 1;
+        let sp = manifest::segment_path(&path, ai);
+        let file = io.open_log(&sp)?;
+        let flen = io.file_len(&file)?;
+        let prev = ai.checked_sub(1).map(|j| &m.segments[j]);
+        let data_start = chain_head_check(&*io, &file, flen, ai, &meta, prev)?;
+        ckpt_stats.segment_bytes_at_open += flen;
+        let mut aframes: Vec<(u64, u32)> = Vec::new();
+        let mut seg_types = TypeIndex::new();
+        let mut active_aux: Option<BTreeMap<String, Vec<u8>>> = None;
+        let mut active_adopted = 0u64;
+        let mut scan_from = data_start;
+        if let Ok(bytes) = io.read_file(&sidecar_path(&sp)) {
+            match DurableBackend::try_adopt(&*io, &file, &bytes, meta.uuid, data_start, flen) {
+                Some((ck_frames, ck_types, ck_aux, ck_len)) => {
+                    ckpt_stats.sidecar_loaded = true;
+                    active_adopted = ck_frames.len() as u64;
+                    ckpt_stats.frames_from_checkpoint += active_adopted;
+                    aframes = ck_frames;
+                    seg_types = ck_types;
+                    active_aux = Some(ck_aux);
+                    scan_from = ck_len;
+                }
+                None => ckpt_stats.sidecar_rejected = true,
+            }
+        }
+        let end = scan_frames_into(&*io, &file, scan_from, flen, &mut aframes, &mut seg_types)?;
+        ckpt_stats.reopen_scanned_bytes += flen - scan_from;
+        types.merge_shifted(&seg_types, meta.base);
+        segs.push(Segment {
+            file,
+            path: sp,
+            uuid: meta.uuid,
+            data_start,
+            base: meta.base,
+            frames: aframes,
+            len: end,
+        });
+
+        // The lease covers the whole chain and is keyed by the *root*
+        // segment's identity — it predates every rotation.
+        let root_uuid = m.segments[0].uuid;
+        let lease_file = lease::lease_path(&path);
+        let lease_attests = io
+            .read_file(&lease_file)
+            .ok()
+            .as_deref()
+            .and_then(LeaseRecord::decode)
+            .is_some_and(|rec| rec.uuid == root_uuid);
+        let log_epoch =
+            if lease_attests { 0 } else { max_log_lease_epoch(&*io, &segs, &types) };
+        let (lease_rec, took_over) =
+            lease::acquire(&*io, &lease_file, root_uuid, log_epoch, &cfg)?;
+
+        // Ours now: drop the active segment's torn suffix, then clear
+        // any orphan next-segment file a crashed rotation left behind
+        // (created before the manifest rename that would have made it
+        // real). The orphan is outside the manifest-recorded chain, so
+        // removing it can never lose a committed byte — and leaving it
+        // would make the *next* rotation's create truncate it anyway.
+        {
+            let active = segs.last().expect("chain has at least the active segment");
+            if end < flen {
+                io.truncate(&active.file, end)?;
+                io.sync(&active.file)?;
+            }
+        }
+        let _ = io.remove_file(&manifest::segment_path(&path, n));
+
+        let rewrite = ckpt_stats.sidecar_rejected
+            || segs.last().expect("active").frames.len() as u64 != active_adopted;
+        let aux = active_aux.or(fallback_aux).unwrap_or_default();
+        let backend = DurableBackend {
+            path,
+            ckpt_path,
+            lease_file,
+            io,
+            clock: cfg.clock,
+            ttl_ms: cfg.ttl_ms,
+            inner: Mutex::new(Inner {
+                segs,
+                types,
+                seg_types,
+                stats: BackendStats::default(),
+                ckpt_stats,
+                aux,
+                sidecar_writable: true,
+                dirty: false,
+                poisoned: false,
+                lease: lease_rec,
+                took_over,
+                fenced: None,
+                rotate_bytes: None,
+                rotate_records: None,
+            }),
+            sync_each_append: true,
+            auto_checkpoint: AtomicBool::new(true),
+        };
+        if rewrite {
+            let _ = backend.write_checkpoint();
+        }
+        Ok(backend)
+    }
+
+    /// Verify a decoded sidecar against one segment. `None` (reject) on
+    /// any doubt; the caller falls back to scanning the uncovered bytes.
     ///
     /// Identity caveat: legacy preamble-less segments all carry uuid 0,
     /// so for them the UUID check only separates legacy from stamped
@@ -427,7 +819,8 @@ impl DurableBackend {
         &self.path
     }
 
-    /// The checkpoint sidecar's path (`<log>.ckpt`).
+    /// The root checkpoint sidecar's path (`<log>.ckpt`). Rotated
+    /// segments keep their own sidecars at `<log>.000N.ckpt`.
     pub fn checkpoint_path(&self) -> &Path {
         &self.ckpt_path
     }
@@ -473,7 +866,7 @@ impl DurableBackend {
             if let Some(f) = &g.fenced {
                 return Err(lease::fenced_error(f.clone()));
             }
-            (g.frames.len() as u64, g.lease.epoch)
+            (g.tail(), g.lease.epoch)
         };
         let marker = Entry {
             position,
@@ -489,9 +882,27 @@ impl DurableBackend {
         Ok(at)
     }
 
-    /// This segment's preamble UUID (0 for legacy preamble-less logs).
+    /// The root segment's preamble UUID (0 for legacy preamble-less
+    /// logs) — the identity the lease and the chain hang off.
     pub fn segment_uuid(&self) -> u128 {
-        self.inner.lock().unwrap().uuid
+        self.inner.lock().unwrap().segs[0].uuid
+    }
+
+    /// How many segments the chain currently holds (1 until the first
+    /// rotation).
+    pub fn segment_count(&self) -> usize {
+        self.inner.lock().unwrap().segs.len()
+    }
+
+    /// Arm (or disarm, with `None`/`None`) segment rotation: once the
+    /// active segment holds at least `bytes` bytes or `records` records
+    /// after a commit, it is sealed and a fresh segment opened. Until
+    /// the first rotation fires, the log stays byte-identical to an
+    /// unrotated one (no manifest is written).
+    pub fn set_rotation(&self, bytes: Option<u64>, records: Option<u64>) {
+        let mut g = self.inner.lock().unwrap();
+        g.rotate_bytes = bytes;
+        g.rotate_records = records;
     }
 
     /// Enable/disable automatic checkpoint writes on `flush` and drop.
@@ -499,39 +910,48 @@ impl DurableBackend {
         self.auto_checkpoint.store(on, Ordering::Relaxed);
     }
 
-    /// Snapshot the current durable state into the sidecar: revalidate
-    /// the lease, fsync the segment (the sidecar must never describe
-    /// frames the disk might not hold), publish the new `<log>.ckpt`
-    /// atomically (write `<log>.ckpt.tmp`, fsync, rename), and finally
-    /// refresh the lease heartbeat — flushing is how a live holder
-    /// proves it is alive. A crash anywhere in between leaves the old
-    /// sidecar (rename is atomic), and a takeover observed at either
-    /// lease read fences this handle.
+    /// Publish the active segment's sidecar atomically (write
+    /// `<segment>.ckpt.tmp`, fsync, rename). Four I/O ops; the rename is
+    /// the commit point.
+    fn publish_sidecar(&self, g: &mut Inner) -> std::io::Result<()> {
+        let active = g.active();
+        let ck = Checkpoint {
+            uuid: active.uuid,
+            data_start: active.data_start,
+            log_len: active.len,
+            frame_lens: active.frames.iter().map(|&(_, l)| l).collect(),
+            types: g.seg_types.clone(),
+            aux: g.aux.clone(),
+        };
+        let bytes = ck.encode();
+        let scp = sidecar_path(&active.path);
+        let mut os = scp.as_os_str().to_os_string();
+        os.push(".tmp");
+        let tmp = PathBuf::from(os);
+        let f = self.io.create(&tmp)?;
+        self.io.write_all(&f, &bytes)?;
+        self.io.sync(&f)?;
+        self.io.rename(&tmp, &scp)?;
+        g.ckpt_stats.checkpoints_written += 1;
+        Ok(())
+    }
+
+    /// Snapshot the current durable state into the active segment's
+    /// sidecar: revalidate the lease, fsync the segment (the sidecar
+    /// must never describe frames the disk might not hold), publish the
+    /// sidecar atomically, and finally refresh the lease heartbeat —
+    /// flushing is how a live holder proves it is alive. A crash
+    /// anywhere in between leaves the old sidecar (rename is atomic),
+    /// and a takeover observed at either lease read fences this handle.
     pub fn write_checkpoint(&self) -> std::io::Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(poisoned_err());
         }
         self.check_lease(&mut g)?;
-        self.io.sync(&g.file)?;
+        self.io.sync(&g.active().file)?;
         if g.sidecar_writable {
-            let ck = Checkpoint {
-                uuid: g.uuid,
-                data_start: g.data_start,
-                log_len: g.write_pos,
-                frame_lens: g.frames.iter().map(|&(_, l)| l).collect(),
-                types: g.types.clone(),
-                aux: g.aux.clone(),
-            };
-            let bytes = ck.encode();
-            let mut os = self.ckpt_path.as_os_str().to_os_string();
-            os.push(".tmp");
-            let tmp = PathBuf::from(os);
-            let f = self.io.create(&tmp)?;
-            self.io.write_all(&f, &bytes)?;
-            self.io.sync(&f)?;
-            self.io.rename(&tmp, &self.ckpt_path)?;
-            g.ckpt_stats.checkpoints_written += 1;
+            self.publish_sidecar(&mut g)?;
             g.dirty = false;
         }
         // Damaged preamble (`!sidecar_writable`): a sidecar stamped with
@@ -563,10 +983,11 @@ impl DurableBackend {
     }
 
     /// Full bit-rot scrub: re-walk and re-hash every frame the index
-    /// covers against its stored CRC. Returns the first position whose
-    /// on-disk frame no longer matches the index (offset, length or CRC),
-    /// or `None` if the whole segment verifies. This is the explicit
-    /// O(log) check that checkpointed reopen deliberately skips.
+    /// covers — across every segment of the chain — against its stored
+    /// CRC. Returns the first global position whose on-disk frame no
+    /// longer matches the index (offset, length or CRC), or `None` if
+    /// the whole chain verifies. This is the explicit O(log) check that
+    /// checkpointed reopen deliberately skips.
     ///
     /// There is exactly one integrity-scan implementation in the crate:
     /// this method is a thin wrapper over the log linter's frame scrub
@@ -574,11 +995,14 @@ impl DurableBackend {
     /// precisely what `verify()` sees.
     pub fn verify(&self) -> std::io::Result<Option<u64>> {
         let g = self.inner.lock().unwrap();
-        let scan = crate::lint::scrub::scan_frames(&*self.io, &g.file, g.data_start, g.write_pos)?;
-        for (i, &(off, len)) in g.frames.iter().enumerate() {
-            match scan.frames.get(i) {
-                Some(f) if f.offset == off && f.len == len && f.crc_ok => {}
-                _ => return Ok(Some(i as u64)),
+        for seg in g.segs.iter() {
+            let scan =
+                crate::lint::scrub::scan_frames(&*self.io, &seg.file, seg.data_start, seg.len)?;
+            for (i, &(off, len)) in seg.frames.iter().enumerate() {
+                match scan.frames.get(i) {
+                    Some(f) if f.offset == off && f.len == len && f.crc_ok => {}
+                    _ => return Ok(Some(seg.base + i as u64)),
+                }
             }
         }
         Ok(None)
@@ -598,28 +1022,34 @@ impl DurableBackend {
     /// length probe — if the file didn't grow by exactly this blob,
     /// another writer's bytes interleaved with ours and the handle
     /// poisons rather than serve an index that disagrees with the disk.
+    ///
+    /// After a successful commit two slow-path steps may run: the lease
+    /// heartbeat refreshes if its stamp has aged past TTL/3 (best
+    /// effort — a failed refresh never fails the commit, the next one
+    /// retries), and the active segment rotates if it crossed a
+    /// [`DurableBackend::set_rotation`] threshold.
     fn commit(&self, blob: &[u8], lens: &[u32], payload_bytes: u64) -> std::io::Result<u64> {
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(poisoned_err());
         }
         self.check_lease(&mut g)?; // fenced: refuse before touching the file
-        let wrote = self.io.write_all(&g.file, blob);
+        let wrote = self.io.write_all(&g.active().file, blob);
         let committed = match wrote {
-            Ok(()) if self.sync_each_append => self.io.sync(&g.file),
+            Ok(()) if self.sync_each_append => self.io.sync(&g.active().file),
             other => other,
         };
         if let Err(e) = committed {
             // Roll the file back to the indexed state; if even that
             // fails, refuse all future appends.
-            let indexed = g.write_pos;
-            if self.io.truncate(&g.file, indexed).is_err() {
+            let indexed = g.active().len;
+            if self.io.truncate(&g.active().file, indexed).is_err() {
                 g.poisoned = true;
             }
             return Err(e);
         }
-        let expected_end = g.write_pos + blob.len() as u64;
-        match self.io.file_len(&g.file) {
+        let expected_end = g.active().len + blob.len() as u64;
+        match self.io.file_len(&g.active().file) {
             Ok(actual) if actual == expected_end => {}
             Ok(_) => {
                 // Foreign bytes under (or over) ours: truncating would
@@ -633,8 +1063,8 @@ impl DurableBackend {
                 ));
             }
             Err(e) => {
-                let indexed = g.write_pos;
-                if self.io.truncate(&g.file, indexed).is_err() {
+                let indexed = g.active().len;
+                if self.io.truncate(&g.active().file, indexed).is_err() {
                     g.poisoned = true;
                 }
                 return Err(e);
@@ -647,8 +1077,8 @@ impl DurableBackend {
                 // by rolling back — the length probe above confirmed the
                 // blob is still the topmost bytes, so this retracts only
                 // our own write.
-                let indexed = g.write_pos;
-                if self.io.truncate(&g.file, indexed).is_err() {
+                let indexed = g.active().len;
+                if self.io.truncate(&g.active().file, indexed).is_err() {
                     g.poisoned = true;
                 }
             }
@@ -662,21 +1092,142 @@ impl DurableBackend {
             // (fenced, not poisoned — reads of the prefix stay valid).
             return Err(e);
         }
-        let first = g.frames.len() as u64;
-        let mut off = g.write_pos;
+        let base = g.active().base;
+        let first = base + g.active().frames.len() as u64;
+        let mut off = g.active().len;
         let mut blob_off = 0usize;
         for (i, &len) in lens.iter().enumerate() {
             let payload = &blob[blob_off + FRAME_HEADER..blob_off + FRAME_HEADER + len as usize];
             g.types.note(first + i as u64, payload);
-            g.frames.push((off, len));
+            g.seg_types.note(first + i as u64 - base, payload);
+            g.active_mut().frames.push((off, len));
             off += (FRAME_HEADER + len as usize) as u64;
             blob_off += FRAME_HEADER + len as usize;
         }
-        g.write_pos = off;
+        g.active_mut().len = off;
         g.stats.appended_records += lens.len() as u64;
         g.stats.appended_bytes += payload_bytes;
         g.dirty = true;
+
+        // Liveness without flushing: refresh the heartbeat once the
+        // stamp ages past a third of the TTL, so a holder that only ever
+        // commits is never mistaken for dead. Time-gated (a fresh stamp
+        // costs zero extra ops) and best-effort (a failed refresh never
+        // un-commits the frames above — the next commit retries).
+        let now = self.clock.realtime_ms();
+        if lease::needs_heartbeat(&g.lease, now, self.ttl_ms) {
+            let mut hb = g.lease.clone();
+            hb.heartbeat_ms = now;
+            if lease::write_atomic(&*self.io, &self.lease_file, &hb).is_ok() {
+                g.lease = hb;
+            }
+        }
+
+        // Rotation rides the commit path: seal once the active segment
+        // crosses a threshold. Never on a damaged-preamble log (the
+        // chain needs a trustworthy root identity).
+        if g.sidecar_writable
+            && (g.rotate_bytes.is_some_and(|t| g.active().len >= t)
+                || g.rotate_records.is_some_and(|t| g.active().frames.len() as u64 >= t))
+        {
+            self.try_rotate(&mut g);
+        }
         Ok(first)
+    }
+
+    /// Seal the active segment and open its successor. Best effort: any
+    /// failure before the manifest rename simply aborts (the commit that
+    /// triggered us already succeeded; the oversized active segment
+    /// keeps accepting appends and the next commit retries). The
+    /// manifest rename is the single commit point:
+    ///
+    /// 1. fsync the active segment (the seal must describe real bytes),
+    /// 2. publish its final sidecar,
+    /// 3. create `<log>.000N` with a v2 chain-link preamble and fsync it,
+    /// 4. reopen it with an append handle,
+    /// 5. atomically rename the new manifest into place,
+    /// 6. switch the in-memory chain.
+    ///
+    /// A crash (or injected fault) anywhere in 1–4 leaves the manifest
+    /// describing the old chain — reopen sees the pre-rotation log and
+    /// removes the orphan `.000N`. After 5 the new chain is real —
+    /// reopen sees the post-rotation log. An *indeterminate* rename is
+    /// resolved by re-reading the manifest; only an unreadable manifest
+    /// poisons the handle (the in-memory chain can no longer be proven
+    /// to match the disk).
+    fn try_rotate(&self, g: &mut Inner) {
+        if self.io.sync(&g.active().file).is_err() {
+            return;
+        }
+        if self.publish_sidecar(g).is_err() {
+            return;
+        }
+        let next_index = g.segs.len();
+        let next_path = manifest::segment_path(&self.path, next_index);
+        let link = ChainLink {
+            uuid: fresh_uuid(),
+            prev_uuid: g.active().uuid,
+            base_pos: g.tail(),
+            prev_len: g.active().len,
+        };
+        let stamped = (|| {
+            // `create` truncates, which is what makes a retry after a
+            // half-written orphan safe.
+            let f = self.io.create(&next_path)?;
+            self.io.write_all(&f, &encode_preamble_v2(&link))?;
+            self.io.sync(&f)
+        })();
+        if stamped.is_err() {
+            return;
+        }
+        // The create handle is cursor-positioned; appends need O_APPEND
+        // (and the non-unix pread fallback seeks), so take a fresh one.
+        let file = match self.io.open_log(&next_path) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let mut m = Manifest { segments: Vec::with_capacity(next_index + 1) };
+        for s in g.segs.iter() {
+            m.segments.push(SegmentMeta {
+                uuid: s.uuid,
+                base: s.base,
+                sealed_len: s.len,
+                sealed_frames: s.frames.len() as u64,
+            });
+        }
+        m.segments.push(SegmentMeta {
+            uuid: link.uuid,
+            base: link.base_pos,
+            sealed_len: 0,
+            sealed_frames: 0,
+        });
+        if manifest::publish(&*self.io, &self.path, &m).is_err() {
+            // The rename may or may not have landed; the disk knows.
+            match manifest::load(&*self.io, &self.path) {
+                Ok(Some(on_disk)) if on_disk == m => {} // landed: finish the switch
+                Ok(_) => return,                        // didn't: abort, stay on the old active
+                Err(_) => {
+                    // Can't tell — the in-memory chain can no longer be
+                    // proven to match the disk, and appending to either
+                    // candidate active segment risks a fork.
+                    g.poisoned = true;
+                    return;
+                }
+            }
+        }
+        g.segs.push(Segment {
+            file,
+            path: next_path,
+            uuid: link.uuid,
+            data_start: PREAMBLE_V2_LEN,
+            base: link.base_pos,
+            frames: Vec::new(),
+            len: PREAMBLE_V2_LEN,
+        });
+        g.seg_types = TypeIndex::new();
+        // `dirty` is deliberately left set: the new active segment has
+        // no sidecar yet, and the next flush/drop writes one carrying
+        // the current aux blobs.
     }
 }
 
@@ -740,21 +1291,24 @@ impl LogBackend for DurableBackend {
                 return Err(poisoned_err());
             }
             self.check_lease(&mut g)?;
-            self.io.sync(&g.file)
+            self.io.sync(&g.active().file)
         }
     }
 
     fn read(&self, start: u64, end: u64) -> std::io::Result<Vec<(u64, Vec<u8>)>> {
         let mut g = self.inner.lock().unwrap();
-        let tail = g.frames.len() as u64;
+        let tail = g.tail();
         let lo = start.min(tail);
         // `.max(lo)` clamps inverted ranges (end < start) to empty.
         let hi = end.min(tail).max(lo);
         let mut out = Vec::with_capacity((hi - lo) as usize);
         for i in lo..hi {
-            let (off, len) = g.frames[i as usize];
+            let (si, local) =
+                g.locate(i).expect("every position below the tail lies in some segment");
+            let seg = &g.segs[si];
+            let (off, len) = seg.frames[local];
             let mut buf = vec![0u8; len as usize];
-            self.io.read_exact_at(&g.file, &mut buf, off + FRAME_HEADER as u64)?;
+            self.io.read_exact_at(&seg.file, &mut buf, off + FRAME_HEADER as u64)?;
             out.push((i, buf));
         }
         g.stats.read_records += out.len() as u64;
@@ -766,7 +1320,7 @@ impl LogBackend for DurableBackend {
     }
 
     fn tail(&self) -> u64 {
-        self.inner.lock().unwrap().frames.len() as u64
+        self.inner.lock().unwrap().tail()
     }
 
     fn stats(&self) -> BackendStats {
@@ -1503,5 +2057,232 @@ mod tests {
         assert_eq!(b.tail(), 4, "reopen truncates the torn half-blob");
         assert_eq!(b.append(b"clean").unwrap(), 4);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn commit_heartbeat_keeps_a_flush_free_holder_alive() {
+        // Regression (the headline bug): the heartbeat used to refresh
+        // only in write_checkpoint, so a holder that committed steadily
+        // but never flushed went "stale" and was fenced mid-life. The
+        // commit path now refreshes once the stamp ages past TTL/3.
+        use std::time::Duration;
+        let p = tmp("hb-live");
+        let clock = Clock::sim();
+        let cfg = LeaseConfig {
+            holder: "holder".into(),
+            clock: clock.clone(),
+            ..LeaseConfig::default()
+        };
+        let a = DurableBackend::open_with(&p, Arc::new(FsIo), cfg).unwrap();
+        a.append(&entry_frame(0, PayloadType::Mail)).unwrap();
+        // Commit (never flush) across twice the TTL of simulated time.
+        let ttl = lease::DEFAULT_TTL_MS;
+        for i in 1..=6u64 {
+            clock.charge(Duration::from_millis(ttl / 3 + 1));
+            a.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+        }
+        // A successor on the same clock sees a fresh heartbeat: its
+        // backoff rounds (well under a TTL) must end in WouldBlock, not
+        // a takeover of a demonstrably live holder.
+        let cfg = LeaseConfig {
+            holder: "successor".into(),
+            clock: clock.clone(),
+            ..LeaseConfig::default()
+        };
+        let err = DurableBackend::open_with(&p, Arc::new(FsIo), cfg).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock, "{err}");
+        // The holder was never fenced and keeps appending.
+        a.append(&entry_frame(7, PayloadType::Mail)).unwrap();
+        assert!(!a.is_fenced(), "a flush-free committer is never fenced while live");
+        drop(a);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn fresh_heartbeat_commit_stays_five_ops() {
+        // The refresh is time-gated: with a fresh stamp (real clock,
+        // sub-millisecond test) a commit is exactly the documented five
+        // ops — lease revalidate + blob write + fsync + length probe +
+        // lease revalidate. No heartbeat tax on the hot path.
+        let p = tmp("hb-ops");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+        let before = io.ops();
+        b.append(&entry_frame(0, PayloadType::Mail)).unwrap();
+        assert_eq!(io.ops() - before, 5, "fresh-heartbeat group commit is five ops");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn stale_heartbeat_commit_refreshes_inline() {
+        use std::time::Duration;
+        let p = tmp("hb-stale");
+        let io = FaultIo::new();
+        let clock = Clock::sim();
+        let cfg = LeaseConfig {
+            holder: "holder".into(),
+            clock: clock.clone(),
+            ..LeaseConfig::default()
+        };
+        let b = DurableBackend::open_with(&p, io.clone(), cfg).unwrap();
+        let before = io.ops();
+        b.append(&entry_frame(0, PayloadType::Mail)).unwrap();
+        assert_eq!(io.ops() - before, 5, "stamp is fresh at sim-time zero");
+        // Age the stamp past TTL/3: the next commit pays the 4-op atomic
+        // lease write (tmp create + write + sync + rename) on top of its
+        // five, and the on-disk heartbeat moves.
+        clock.charge(Duration::from_millis(2_000));
+        let before = io.ops();
+        b.append(&entry_frame(1, PayloadType::Mail)).unwrap();
+        assert_eq!(io.ops() - before, 9, "stale-heartbeat commit = 5 + 4-op refresh");
+        let rec = LeaseRecord::decode(&std::fs::read(lease::lease_path(&p)).unwrap()).unwrap();
+        assert_eq!(rec.heartbeat_ms, 2_000, "the refresh landed on disk");
+        // And the very next commit is back to five.
+        let before = io.ops();
+        b.append(&entry_frame(2, PayloadType::Mail)).unwrap();
+        assert_eq!(io.ops() - before, 5);
+        drop(b);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn rotation_chains_segments_and_reopens_bit_identically() {
+        let p = tmp("rotate");
+        let via_live;
+        let positions_live: Vec<Option<Vec<u64>>>;
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.set_rotation(None, Some(8));
+            for i in 0..30u64 {
+                assert_eq!(
+                    b.append(&entry_frame(i, PayloadType::ALL[(i % 9) as usize])).unwrap(),
+                    i
+                );
+            }
+            assert_eq!(b.segment_count(), 4, "30 records at 8/segment = 3 sealed + active");
+            assert_eq!(b.tail(), 30);
+            via_live = b.read(0, 30).unwrap();
+            positions_live = PayloadType::ALL
+                .iter()
+                .map(|&t| b.positions_for_type(t, 0, 100))
+                .collect();
+            assert_eq!(b.verify().unwrap(), None, "the whole chain scrubs clean");
+        } // drop checkpoints the active segment
+        assert!(manifest::manifest_path(&p).exists());
+        assert!(manifest::segment_path(&p, 1).exists());
+        assert!(manifest::segment_path(&p, 3).exists());
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.segment_count(), 4);
+        assert_eq!(b.tail(), 30);
+        assert_eq!(b.read(0, 30).unwrap(), via_live, "bit-identical across reopen");
+        let positions_reopen: Vec<Option<Vec<u64>>> = PayloadType::ALL
+            .iter()
+            .map(|&t| b.positions_for_type(t, 0, 100))
+            .collect();
+        assert_eq!(positions_reopen, positions_live, "type index identical across reopen");
+        let s = b.checkpoint_stats().unwrap();
+        assert_eq!(
+            s.reopen_scanned_bytes, 0,
+            "every segment's sidecar covered it: zero bytes rescanned"
+        );
+        assert_eq!(s.frames_from_checkpoint, 30);
+        assert_eq!(b.verify().unwrap(), None);
+        // Appends keep landing at dense global positions.
+        assert_eq!(b.append(&entry_frame(30, PayloadType::Mail)).unwrap(), 30);
+        drop(b);
+        for i in 0..4 {
+            let sp = manifest::segment_path(&p, i);
+            let _ = std::fs::remove_file(sidecar_path(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(manifest::manifest_path(&p));
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn unrotated_log_never_grows_a_manifest() {
+        let p = tmp("no-manifest");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            for i in 0..5 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+            b.flush().unwrap();
+            assert_eq!(b.segment_count(), 1);
+        }
+        assert!(
+            !manifest::manifest_path(&p).exists(),
+            "a log that never rotates stays manifest-free (legacy shape)"
+        );
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.tail(), 5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_manifest_fails_open_loudly() {
+        let p = tmp("bad-manifest");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.set_rotation(None, Some(4));
+            for i in 0..10 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+            assert_eq!(b.segment_count(), 3);
+        }
+        let mp = manifest::manifest_path(&p);
+        let mut bytes = std::fs::read(&mp).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&mp, &bytes).unwrap();
+        // A manifest that exists but doesn't verify is a hard error —
+        // never a silent single-segment fallback that would truncate the
+        // log at the first chain boundary.
+        let err = DurableBackend::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("manifest"), "{err}");
+        for i in 0..3 {
+            let sp = manifest::segment_path(&p, i);
+            let _ = std::fs::remove_file(sidecar_path(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(mp);
+        let _ = std::fs::remove_file(lease::lease_path(&p));
+    }
+
+    #[test]
+    fn aux_survives_rotation_without_a_final_checkpoint() {
+        // The seal-time sidecar snapshots the aux blobs, so a crash that
+        // outruns the active segment's first checkpoint still recovers
+        // them from the last sealed sidecar (layers above replay from
+        // their frontier, so a slightly stale snapshot is safe).
+        let p = tmp("rotate-aux");
+        {
+            let b = DurableBackend::open(&p).unwrap();
+            b.persist_aux("registry", vec![1, 2, 3]);
+            b.set_rotation(None, Some(4));
+            for i in 0..4 {
+                b.append(&entry_frame(i, PayloadType::Mail)).unwrap();
+            }
+            assert_eq!(b.segment_count(), 2, "the 4th append sealed segment 0");
+            b.set_auto_checkpoint(false); // the "crash": no active sidecar
+        }
+        let b = DurableBackend::open(&p).unwrap();
+        assert_eq!(b.tail(), 4);
+        assert_eq!(
+            b.load_aux("registry"),
+            Some(vec![1, 2, 3]),
+            "aux recovered from the sealed segment's sidecar"
+        );
+        drop(b);
+        for i in 0..2 {
+            let sp = manifest::segment_path(&p, i);
+            let _ = std::fs::remove_file(sidecar_path(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(manifest::manifest_path(&p));
+        let _ = std::fs::remove_file(lease::lease_path(&p));
     }
 }

@@ -1,9 +1,9 @@
 //! The durable backend's file-operation seam.
 //!
 //! [`DurableBackend`](super::DurableBackend) performs every segment and
-//! sidecar operation through a [`SegmentIo`] — an eleven-verb trait
+//! sidecar operation through a [`SegmentIo`] — a twelve-verb trait
 //! (opens, appends, positioned/whole-file reads, fsync, truncate, stat,
-//! mkdir, atomic rename) with two implementations:
+//! mkdir, atomic rename, unlink) with two implementations:
 //!
 //! * [`FsIo`] — the real thing, a thin pass-through to `std::fs`;
 //! * [`FaultIo`] — a test double that counts every operation, records an
@@ -46,6 +46,9 @@ pub enum IoOp {
     Mkdir,
     /// Atomic replace (`rename(2)`) — sidecar and lease publication.
     Rename,
+    /// Unlink a file (orphan next-segment cleanup after a crashed
+    /// rotation).
+    Remove,
 }
 
 /// File operations the durable backend needs, as a mockable seam. All
@@ -93,6 +96,12 @@ pub trait SegmentIo: Send + Sync {
     /// published: readers see either the old file or the new one, never a
     /// torn mix.
     fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+
+    /// Unlink `path`. The segmented backend uses this to clear an orphan
+    /// next-segment file left by a rotation that crashed before its
+    /// manifest publish — the one mutation reopen performs *outside* the
+    /// manifest-recorded chain.
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
 }
 
 /// The production [`SegmentIo`]: straight to the filesystem.
@@ -156,6 +165,10 @@ impl SegmentIo for FsIo {
 
     fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
         std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
     }
 }
 
@@ -333,6 +346,13 @@ impl SegmentIo for FaultIo {
             _ => self.inner.rename(from, to),
         }
     }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        match self.enter(IoOp::Remove, 0) {
+            (i, Some(_)) => Err(FaultIo::injected(i, IoOp::Remove)),
+            _ => self.inner.remove_file(path),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -450,6 +470,28 @@ mod tests {
         assert_eq!(std::fs::read(&t).unwrap(), b"next", "failed rename leaves source intact");
         let _ = std::fs::remove_file(&p);
         let _ = std::fs::remove_file(&t);
+    }
+
+    #[test]
+    fn remove_is_counted_faultable_and_unlinks() {
+        let p = tmp("rm");
+        let io = FaultIo::new();
+        let f = io.create(&p).unwrap(); // op 1
+        io.write_all(&f, b"x").unwrap(); // op 2
+        io.fail_after(1, FaultMode::Fail);
+        assert!(io.remove_file(&p).is_err()); // op 3: armed
+        assert!(p.exists(), "failed remove leaves the file");
+        io.fail_after(1, FaultMode::Torn); // Torn degrades to Fail
+        assert!(io.remove_file(&p).is_err()); // op 4
+        assert!(p.exists());
+        io.remove_file(&p).unwrap(); // op 5
+        assert!(!p.exists());
+        assert_eq!(io.oplog()[4].op, IoOp::Remove);
+        assert_eq!(
+            io.remove_file(&p).unwrap_err().kind(),
+            io::ErrorKind::NotFound,
+            "removing a missing file reports NotFound"
+        );
     }
 
     #[test]

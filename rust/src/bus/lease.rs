@@ -345,6 +345,17 @@ pub fn revalidate(io: &dyn SegmentIo, lease: &Path, mine: &LeaseRecord) -> io::R
     }
 }
 
+/// Should a live holder refresh its heartbeat now? True once the held
+/// record's heartbeat is older than a third of the TTL — early enough
+/// that a steady committer can miss two refresh opportunities and still
+/// never look stale to a waiting successor, late enough that the common
+/// commit stays one write + one fsync (no lease write). `ttl_ms == 0`
+/// never refreshes: a zero TTL is the tests' "always stealable" mode and
+/// no heartbeat can keep such a lease fresh.
+pub fn needs_heartbeat(rec: &LeaseRecord, now_ms: u64, ttl_ms: u64) -> bool {
+    ttl_ms > 0 && now_ms.saturating_sub(rec.heartbeat_ms) > ttl_ms / 3
+}
+
 /// Hand the lease back cleanly: if `mine` still owns it, republish it as
 /// released (same epoch) so the next acquisition needn't wait out the
 /// TTL. A lease we no longer own is left alone — a fenced ex-holder must
@@ -512,6 +523,19 @@ mod tests {
         let on_disk = LeaseRecord::decode(&std::fs::read(&p).unwrap()).unwrap();
         assert_eq!(on_disk, b, "a's release must not clobber b's lease");
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn heartbeat_gate_is_a_third_of_the_ttl() {
+        let mut rec = sample();
+        rec.heartbeat_ms = 9_000;
+        let ttl = DEFAULT_TTL_MS; // 5000 → gate at 1666
+        assert!(!needs_heartbeat(&rec, 9_000, ttl), "just stamped");
+        assert!(!needs_heartbeat(&rec, 9_000 + ttl / 3, ttl), "at the gate: not yet");
+        assert!(needs_heartbeat(&rec, 9_001 + ttl / 3, ttl), "past the gate");
+        assert!(needs_heartbeat(&rec, 9_000 + ttl, ttl), "long past");
+        assert!(!needs_heartbeat(&rec, 0, ttl), "clock behind the stamp: no refresh");
+        assert!(!needs_heartbeat(&rec, u64::MAX, 0), "ttl 0 never refreshes");
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Segment-chain manifest: the CRC-guarded map of a rotated durable log.
+//!
+//! A durable log starts life as one segment (`<log>`). When rotation
+//! seals that segment, the chain grows: `<log>.0001`, `<log>.0002`, …
+//! each new segment opening with a v2 chain-link preamble
+//! ([`super::checkpoint::ChainLink`]) that names its predecessor. The
+//! **manifest** (`<log>.manifest`) is the authoritative index over that
+//! chain: one entry per segment carrying its UUID, the global position
+//! of its first record (`base`), and — for sealed segments — the exact
+//! byte length and frame count the seal froze. Global positions stay
+//! dense across the chain because `base[i+1] = base[i] +
+//! sealed_frames[i]` is *validated at decode*, not merely assumed.
+//!
+//! The manifest is the rotation's **commit point**: it is published
+//! atomically (write `<log>.manifest.tmp`, fsync, rename), so a crash
+//! anywhere inside a rotation leaves either the old manifest (the
+//! rotation never happened; the orphan next-segment file is removed at
+//! reopen) or the new one (the rotation fully happened). No manifest at
+//! all means a legacy single-segment log — those open exactly as before
+//! this layer existed.
+//!
+//! A manifest that *exists but does not decode* is a hard open error,
+//! never silently ignored: falling back to single-segment on a corrupt
+//! manifest would serve a truncated log as if it were whole. The offline
+//! linter reports the same state as a `corrupt-manifest` finding.
+//!
+//! Wire form: magic `LACTMAN1`(8) + varint version(=1) + varint
+//! n_segments + per segment [uuid u128 le(16), varint base, varint
+//! sealed_len, varint sealed_frames] + crc32 le(4) over everything
+//! before it. Sealed entries have `sealed_len > 0`; the final (active)
+//! entry always records `sealed_len = 0, sealed_frames = 0` — the
+//! active segment's length is whatever recovery finds, exactly as for a
+//! single-segment log.
+
+use super::io::SegmentIo;
+use crate::util::crc32;
+use crate::util::varint::{self, Reader};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// First 8 bytes of every manifest file.
+pub const MANIFEST_MAGIC: [u8; 8] = *b"LACTMAN1";
+
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// The manifest's conventional location: `<log>.manifest`.
+pub fn manifest_path(log: &Path) -> PathBuf {
+    let mut os = log.as_os_str().to_os_string();
+    os.push(".manifest");
+    PathBuf::from(os)
+}
+
+/// Segment `index`'s file path: the log path itself for segment 0,
+/// `<log>.000N` (4-digit, zero-padded) for rotated segments.
+pub fn segment_path(log: &Path, index: usize) -> PathBuf {
+    if index == 0 {
+        return log.to_path_buf();
+    }
+    let mut os = log.as_os_str().to_os_string();
+    os.push(format!(".{index:04}"));
+    PathBuf::from(os)
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// The segment's preamble UUID (v1 uuid for segment 0, v2 chain-link
+    /// uuid for rotated segments; 0 for a legacy preamble-less root).
+    pub uuid: u128,
+    /// Global position of the segment's first record.
+    pub base: u64,
+    /// Exact byte length the seal froze; 0 for the open active segment.
+    pub sealed_len: u64,
+    /// Exact frame count the seal froze; 0 for the active segment.
+    pub sealed_frames: u64,
+}
+
+/// The decoded `<log>.manifest`: a dense, validated segment chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub segments: Vec<SegmentMeta>,
+}
+
+impl Manifest {
+    /// Number of segments in the chain (always ≥ 1).
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// The active (last) segment's entry.
+    pub fn active(&self) -> &SegmentMeta {
+        self.segments.last().expect("manifest is never empty")
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.segments.len() * 24);
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        varint::write_u64(&mut out, MANIFEST_VERSION);
+        varint::write_u64(&mut out, self.segments.len() as u64);
+        for seg in &self.segments {
+            out.extend_from_slice(&seg.uuid.to_le_bytes());
+            varint::write_u64(&mut out, seg.base);
+            varint::write_u64(&mut out, seg.sealed_len);
+            varint::write_u64(&mut out, seg.sealed_frames);
+        }
+        let crc = crc32::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and structurally validate. `None` on any defect: bad
+    /// magic, CRC mismatch, unknown version, zero segments, a non-dense
+    /// base sequence (`base[i+1] != base[i] + sealed_frames[i]`), a
+    /// sealed entry with no bytes, an active entry claiming sealed
+    /// state, a segment count the bytes cannot hold, or trailing
+    /// garbage.
+    pub fn decode(bytes: &[u8]) -> Option<Manifest> {
+        if bytes.len() < MANIFEST_MAGIC.len() + 4 || bytes[0..8] != MANIFEST_MAGIC {
+            return None;
+        }
+        let body_end = bytes.len() - 4;
+        let crc = u32::from_le_bytes(bytes[body_end..].try_into().ok()?);
+        if crc32::hash(&bytes[..body_end]) != crc {
+            return None;
+        }
+        let mut r = Reader::new(&bytes[8..body_end]);
+        if r.read_u64()? != MANIFEST_VERSION {
+            return None;
+        }
+        let n = r.read_u64()?;
+        // Every entry costs at least 16 uuid bytes + 3 varints.
+        if n == 0 || n > r.remaining() as u64 / 19 {
+            return None;
+        }
+        let mut segments = Vec::with_capacity(n as usize);
+        for i in 0..n as usize {
+            let uuid = u128::from_le_bytes(r.read_exact(16)?.try_into().ok()?);
+            let base = r.read_u64()?;
+            let sealed_len = r.read_u64()?;
+            let sealed_frames = r.read_u64()?;
+            let last = i + 1 == n as usize;
+            if i == 0 && base != 0 {
+                return None; // the chain's positions start at 0
+            }
+            if let Some(&SegmentMeta { base: pb, sealed_frames: pf, .. }) = segments.last() {
+                if base != pb.checked_add(pf)? {
+                    return None; // positions must stay dense across segments
+                }
+            }
+            if last {
+                if sealed_len != 0 || sealed_frames != 0 {
+                    return None; // the active segment is open by definition
+                }
+            } else if sealed_len == 0 {
+                return None; // a sealed segment always holds its preamble
+            }
+            segments.push(SegmentMeta { uuid, base, sealed_len, sealed_frames });
+        }
+        if !r.is_empty() {
+            return None; // trailing garbage: not something we wrote
+        }
+        Some(Manifest { segments })
+    }
+}
+
+/// Load `<log>.manifest`. `Ok(None)` when absent (a legacy
+/// single-segment log); a manifest that exists but fails validation is a
+/// hard `InvalidData` error — serving a chained log without its chain
+/// map would silently truncate it.
+pub fn load(io: &dyn SegmentIo, log: &Path) -> io::Result<Option<Manifest>> {
+    let path = manifest_path(log);
+    let bytes = match io.read_file(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    match Manifest::decode(&bytes) {
+        Some(m) => Ok(Some(m)),
+        None => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("corrupt segment manifest at {}", path.display()),
+        )),
+    }
+}
+
+/// Publish `m` atomically: write `<log>.manifest.tmp`, fsync, rename
+/// over `<log>.manifest`. Four [`SegmentIo`] ops, each fault-injectable;
+/// the rename is the rotation's commit point.
+pub fn publish(io: &dyn SegmentIo, log: &Path, m: &Manifest) -> io::Result<()> {
+    let path = manifest_path(log);
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    let f = io.create(&tmp)?;
+    io.write_all(&f, &m.encode())?;
+    io.sync(&f)?;
+    io.rename(&tmp, &path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            segments: vec![
+                SegmentMeta { uuid: 0xA1, base: 0, sealed_len: 2_080, sealed_frames: 48 },
+                SegmentMeta { uuid: 0xB2, base: 48, sealed_len: 1_472, sealed_frames: 33 },
+                SegmentMeta { uuid: 0xC3, base: 81, sealed_len: 0, sealed_frames: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        let d = Manifest::decode(&m.encode()).expect("decodes");
+        assert_eq!(d, m);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.active().uuid, 0xC3);
+        assert_eq!(d.active().base, 81);
+    }
+
+    #[test]
+    fn single_active_entry_is_valid() {
+        let m = Manifest {
+            segments: vec![SegmentMeta { uuid: 7, base: 0, sealed_len: 0, sealed_frames: 0 }],
+        };
+        assert_eq!(Manifest::decode(&m.encode()), Some(m));
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(Manifest::decode(&bad).is_none(), "flip at byte {i} accepted");
+        }
+        for cut in 0..bytes.len() {
+            assert!(Manifest::decode(&bytes[..cut]).is_none(), "truncation to {cut} accepted");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Manifest::decode(&long).is_none(), "trailing garbage accepted");
+    }
+
+    #[test]
+    fn structural_defects_rejected_even_with_valid_crc() {
+        // Each defect re-encodes (so the CRC is fine) but must fail the
+        // structural validation.
+        let mut gap = sample();
+        gap.segments[1].base = 49; // ≠ 0 + 48
+        assert!(Manifest::decode(&gap.encode()).is_none(), "non-dense base accepted");
+
+        let mut nonzero_root = sample();
+        nonzero_root.segments[0].base = 1;
+        assert!(Manifest::decode(&nonzero_root.encode()).is_none(), "base[0] ≠ 0 accepted");
+
+        let mut open_mid = sample();
+        open_mid.segments[1].sealed_len = 0;
+        assert!(Manifest::decode(&open_mid.encode()).is_none(), "unsealed mid-chain accepted");
+
+        let mut sealed_active = sample();
+        sealed_active.segments[2].sealed_len = 99;
+        assert!(Manifest::decode(&sealed_active.encode()).is_none(), "sealed active accepted");
+
+        let empty = Manifest { segments: vec![] };
+        assert!(Manifest::decode(&empty.encode()).is_none(), "empty chain accepted");
+    }
+
+    #[test]
+    fn segment_paths_are_stable() {
+        let log = Path::new("/tmp/x/bus.log");
+        assert_eq!(segment_path(log, 0), PathBuf::from("/tmp/x/bus.log"));
+        assert_eq!(segment_path(log, 1), PathBuf::from("/tmp/x/bus.log.0001"));
+        assert_eq!(segment_path(log, 12), PathBuf::from("/tmp/x/bus.log.0012"));
+        assert_eq!(segment_path(log, 10_000), PathBuf::from("/tmp/x/bus.log.10000"));
+        assert_eq!(manifest_path(log), PathBuf::from("/tmp/x/bus.log.manifest"));
+    }
+
+    #[test]
+    fn publish_and_load_through_the_seam() {
+        use crate::bus::io::{FaultIo, FaultMode, IoOp};
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let log = dir.join(format!("manifest-{}.log", crate::util::ids::next_id()));
+        let io = FaultIo::new();
+        assert_eq!(load(io.as_ref(), &log).unwrap(), None, "absent manifest is legacy");
+        let m = sample();
+        publish(io.as_ref(), &log, &m).unwrap();
+        assert_eq!(load(io.as_ref(), &log).unwrap(), Some(m.clone()));
+        // Publication is exactly create/write/sync/rename, and a fault
+        // at any of the four leaves the previous manifest intact.
+        let tail: Vec<IoOp> = io.oplog().iter().rev().take(4).rev().map(|o| o.op).collect();
+        assert_eq!(tail, vec![IoOp::Create, IoOp::Write, IoOp::Sync, IoOp::Rename]);
+        let mut next = m.clone();
+        next.segments[2].uuid = 0xDD;
+        for k in 1..=4u64 {
+            for mode in [FaultMode::Fail, FaultMode::Torn] {
+                io.fail_after(k, mode);
+                assert!(publish(io.as_ref(), &log, &next).is_err());
+                assert_eq!(
+                    load(io.as_ref(), &log).unwrap(),
+                    Some(m.clone()),
+                    "op {k} {mode:?} disturbed the published manifest"
+                );
+            }
+        }
+        // A corrupt manifest is a *hard* load error, not a silent None.
+        let p = manifest_path(&log);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(io.as_ref(), &log).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        let _ = std::fs::remove_file(&p);
+        let mut os = p.as_os_str().to_os_string();
+        os.push(".tmp");
+        let _ = std::fs::remove_file(PathBuf::from(os));
+    }
+}

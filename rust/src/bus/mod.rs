@@ -30,7 +30,13 @@
 //! The durable cold path is **checkpointed**: a CRC-guarded sidecar
 //! ([`checkpoint`]) snapshots the offset/type indexes (and the registry's
 //! namespace maps) so reopen scans only the tail since the last
-//! checkpoint, falling back to the full scan on any doubt. All durable
+//! checkpoint, falling back to the full scan on any doubt. Durable logs
+//! are **segmented**: when the active segment crosses a rotation
+//! threshold it is sealed (final sidecar + a chain-link preamble naming
+//! its successor's predecessor) and appends move to a fresh `<log>.000N`
+//! segment, with a CRC-guarded [`manifest`] recording the chain — global
+//! positions stay dense across segments, and logs that never rotate keep
+//! the legacy single-file shape. All durable
 //! file operations run through a pluggable [`io::SegmentIo`], whose
 //! [`io::FaultIo`] test double makes every crash point deterministically
 //! reachable. Cross-process ownership of the append path is fenced by an
@@ -46,6 +52,7 @@ pub mod durable;
 pub mod entry;
 pub mod io;
 pub mod lease;
+pub mod manifest;
 pub mod mem;
 pub mod registry;
 pub mod remote;
@@ -58,6 +65,7 @@ pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
 pub use io::{FaultIo, FaultMode, FsIo, IoOp, SegmentIo};
 pub use lease::{Fenced, LeaseConfig, LeaseRecord};
+pub use manifest::{Manifest, SegmentMeta};
 pub use mem::MemBackend;
-pub use registry::{BusRegistry, NamespacedBackend};
+pub use registry::{BusRegistry, NamespacedBackend, DEFAULT_REGISTRY_SHARDS};
 pub use remote::{LatencyProfile, RemoteBackend};

@@ -9,7 +9,11 @@
 //!   well-formedness and CRCs, preamble/UUID and sidecar-vs-log
 //!   consistency, the `<log>.lease` append lease (corrupt/foreign/stale
 //!   classification plus the lease-vs-marker epoch cross-check),
-//!   monotonic positions, a `TypeIndex` cross-check, and
+//!   monotonic positions, a `TypeIndex` cross-check, the segment-chain
+//!   audit for rotated logs (`<log>.manifest` validation, per-segment
+//!   chain-link preambles, sealed length/frame-count agreement, orphan
+//!   segments past the manifest — codes `corrupt-manifest`,
+//!   `chain-break`, `manifest-length-mismatch`, `stale-manifest`), and
 //!   the LogAct protocol invariants over the typed entries: every
 //!   `Vote`/`Commit`/`Abort`/`Result` resolves its `intent_pos` to an
 //!   earlier `Intent`, no `Commit`+`Abort` conflict, no `Result` before

@@ -14,8 +14,12 @@
 //! is a thin wrapper over it.
 
 use super::{lint_entries, Finding, Report};
-use crate::bus::checkpoint::{check_preamble, sidecar_path, Checkpoint, PreambleCheck, PREAMBLE_LEN};
+use crate::bus::checkpoint::{
+    check_preamble, check_preamble_v2, sidecar_path, ChainCheck, Checkpoint, PreambleCheck,
+    PREAMBLE_LEN, PREAMBLE_V2_LEN,
+};
 use crate::bus::durable::FRAME_HEADER;
+use crate::bus::manifest;
 use crate::bus::entry::Entry;
 use crate::bus::io::{FsIo, SegmentIo};
 use crate::bus::lease::{lease_path, LeaseRecord, DEFAULT_TTL_MS};
@@ -94,13 +98,13 @@ pub fn lint_log_file(path: &Path) -> io::Result<Report> {
 
 pub fn lint_log_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result<Report> {
     let mut report = Report::new(path.display().to_string(), "log");
-    let (scan, lease_epoch) = audit_segment(io, path, &mut report)?;
+    let chain = audit_chain(io, path, &mut report)?;
+    let lease_epoch = chain.lease_epoch;
     let mut entries = Vec::new();
-    for (i, f) in scan.frames.iter().enumerate() {
+    for (pos, f) in chain.frames() {
         if !f.crc_ok {
             continue; // rotted payload, already flagged: don't double-report
         }
-        let pos = i as u64;
         match Entry::from_bytes(&f.payload) {
             Some(e) => {
                 if e.position != pos {
@@ -161,14 +165,13 @@ pub fn lint_registry_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result
     // Registry records are namespace-framed, not entry frames, so there
     // are no in-log election markers to cross-check the lease against —
     // the physical lease audit (corrupt/foreign/stale) still runs.
-    let (scan, _lease_epoch) = audit_segment(io, path, &mut report)?;
+    let chain = audit_chain(io, path, &mut report)?;
     let mut tenants: BTreeMap<String, Vec<(u64, Entry)>> = BTreeMap::new();
     let mut locals: BTreeMap<String, u64> = BTreeMap::new();
-    for (i, f) in scan.frames.iter().enumerate() {
+    for (global, f) in chain.frames() {
         if !f.crc_ok {
             continue;
         }
-        let global = i as u64;
         let (name, payload) = match split_namespaced(&f.payload) {
             Ok(split) => split,
             Err(e) => {
@@ -221,6 +224,291 @@ pub fn lint_registry_file_with_io(io: &dyn SegmentIo, path: &Path) -> io::Result
             .extend(lint_entries(entries).into_iter().map(|f| f.scoped(name.clone())));
     }
     Ok(report)
+}
+
+/// Physical audit of a whole segment chain, in chain order. Each element
+/// pairs a segment's global base position with its frame walk, so
+/// callers can iterate chain-wide frames at their global positions.
+struct ChainScan {
+    segments: Vec<(u64, FrameScan)>,
+    lease_epoch: Option<u64>,
+}
+
+impl ChainScan {
+    /// All frames across the chain, with their global positions.
+    fn frames(&self) -> impl Iterator<Item = (u64, &ScannedFrame)> {
+        self.segments.iter().flat_map(|(base, scan)| {
+            scan.frames.iter().enumerate().map(move |(i, f)| (base + i as u64, f))
+        })
+    }
+}
+
+/// Audit a durable log that may have rotated: if a `<log>.manifest`
+/// names a segment chain, walk every segment — chain-link preambles
+/// cross-checked against the manifest and each predecessor, sealed
+/// lengths and frame counts verified, each segment's sidecar audited,
+/// the lease keyed to the root segment — and look past the manifest for
+/// orphan segments a crashed rotation left behind. Without a manifest
+/// this is exactly the single-segment [`audit_segment`].
+fn audit_chain(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Result<ChainScan> {
+    let m = match manifest::load(io, path) {
+        Ok(m) => m,
+        Err(e) => {
+            report.findings.push(Finding::error(
+                "corrupt-manifest",
+                format!(
+                    "segment manifest exists but fails validation ({e}); the chain is \
+                     unwalkable — auditing the root segment alone"
+                ),
+            ));
+            None
+        }
+    };
+    let Some(m) = m else {
+        let (scan, lease_epoch) = audit_segment(io, path, report)?;
+        return Ok(ChainScan { segments: vec![(0, scan)], lease_epoch });
+    };
+
+    let n = m.segments.len();
+    let mut segments = Vec::with_capacity(n);
+    let mut lease_epoch = None;
+    for (i, meta) in m.segments.iter().enumerate() {
+        let sp = manifest::segment_path(path, i);
+        let sealed = i + 1 < n;
+        let opened = io.open_read(&sp).and_then(|f| {
+            let l = io.file_len(&f)?;
+            Ok((f, l))
+        });
+        let (file, file_len) = match opened {
+            Ok(v) => v,
+            Err(e) => {
+                report.findings.push(Finding::error(
+                    "chain-break",
+                    format!(
+                        "segment {i} ({}) is unreadable ({e}): the manifest names a link the \
+                         chain does not have",
+                        sp.display()
+                    ),
+                ));
+                segments.push((meta.base, FrameScan { frames: Vec::new(), torn: None, end: 0 }));
+                continue;
+            }
+        };
+
+        // Head check: v1 identity preamble on the root segment, v2
+        // chain-link preamble (predecessor UUID + tail cross-checked)
+        // on every rotated segment. Mirrors reopen's chain_head_check,
+        // but reports instead of refusing.
+        let mut uuid = Some(meta.uuid);
+        let data_start;
+        if i == 0 {
+            data_start = if file_len >= PREAMBLE_LEN { PREAMBLE_LEN } else { 0 };
+            if file_len >= PREAMBLE_LEN {
+                let mut head = [0u8; PREAMBLE_LEN as usize];
+                io.read_exact_at(&file, &mut head, 0)?;
+                match check_preamble(&head) {
+                    PreambleCheck::Valid(u) if u == meta.uuid => {}
+                    PreambleCheck::Valid(u) => report.findings.push(Finding::error(
+                        "chain-break",
+                        format!(
+                            "root segment is uuid {u:032x} but the manifest chains from \
+                             {:032x}",
+                            meta.uuid
+                        ),
+                    )),
+                    PreambleCheck::Absent => report.findings.push(Finding::error(
+                        "chain-break",
+                        "the manifest expects a stamped root segment but its preamble is absent",
+                    )),
+                    PreambleCheck::Damaged => {
+                        report.findings.push(
+                            Finding::error(
+                                "damaged-preamble",
+                                "root segment magic matches but the preamble CRC fails: the \
+                                 chain's identity is unknowable",
+                            )
+                            .offset(0),
+                        );
+                        uuid = None;
+                    }
+                }
+            }
+        } else {
+            data_start = PREAMBLE_V2_LEN.min(file_len);
+            if file_len < PREAMBLE_V2_LEN {
+                report.findings.push(Finding::error(
+                    "chain-break",
+                    format!("segment {i} is shorter than its chain-link preamble"),
+                ));
+                uuid = None;
+            } else {
+                let mut head = [0u8; PREAMBLE_V2_LEN as usize];
+                io.read_exact_at(&file, &mut head, 0)?;
+                let prev = &m.segments[i - 1];
+                match check_preamble_v2(&head) {
+                    ChainCheck::Valid(link)
+                        if link.uuid == meta.uuid
+                            && link.prev_uuid == prev.uuid
+                            && link.base_pos == meta.base
+                            && link.prev_len == prev.sealed_len => {}
+                    ChainCheck::Valid(link) => report.findings.push(
+                        Finding::error(
+                            "chain-break",
+                            format!(
+                                "segment {i} chain link (uuid {:032x}, prev {:032x}, base {}, \
+                                 prev_len {}) disagrees with the manifest (uuid {:032x}, prev \
+                                 {:032x}, base {}, prev_len {})",
+                                link.uuid,
+                                link.prev_uuid,
+                                link.base_pos,
+                                link.prev_len,
+                                meta.uuid,
+                                prev.uuid,
+                                meta.base,
+                                prev.sealed_len
+                            ),
+                        )
+                        .offset(0),
+                    ),
+                    ChainCheck::Damaged => report.findings.push(
+                        Finding::error(
+                            "chain-break",
+                            format!("segment {i} has a damaged chain-link preamble"),
+                        )
+                        .offset(0),
+                    ),
+                    ChainCheck::Absent => report.findings.push(
+                        Finding::error(
+                            "chain-break",
+                            format!("segment {i} carries no chain link (chain broken)"),
+                        )
+                        .offset(0),
+                    ),
+                }
+            }
+        }
+
+        // Length audit against the manifest. Sealed segments are
+        // byte-frozen: shorter than sealed is lost data (reopen refuses),
+        // longer means bytes appended after the seal (reopen ignores
+        // them, but something wrote where nothing should).
+        let mut short_seal = false;
+        let scan_to = if sealed {
+            if file_len < meta.sealed_len {
+                short_seal = true;
+                report.findings.push(Finding::error(
+                    "manifest-length-mismatch",
+                    format!(
+                        "sealed segment {i} holds {file_len} bytes but the manifest sealed {}",
+                        meta.sealed_len
+                    ),
+                ));
+            } else if file_len > meta.sealed_len {
+                report.findings.push(Finding::warn(
+                    "manifest-length-mismatch",
+                    format!(
+                        "sealed segment {i} holds {file_len} bytes, {} past its seal — bytes \
+                         were appended after rotation (reopen ignores them)",
+                        file_len - meta.sealed_len
+                    ),
+                ));
+            }
+            meta.sealed_len.min(file_len)
+        } else {
+            file_len
+        };
+
+        let scan = scan_frames(io, &file, data_start.min(scan_to), scan_to)?;
+        for (j, f) in scan.frames.iter().enumerate() {
+            if !f.crc_ok {
+                report.findings.push(
+                    Finding::error(
+                        "crc-mismatch",
+                        format!(
+                            "frame payload ({} bytes) does not hash to its stored CRC",
+                            f.len
+                        ),
+                    )
+                    .at(meta.base + j as u64)
+                    .offset(f.offset),
+                );
+            }
+        }
+        if sealed {
+            // Skipped when the segment is short: the truncation finding
+            // above already explains why the frames can't lay out.
+            if !short_seal
+                && (scan.end != meta.sealed_len || scan.frames.len() as u64 != meta.sealed_frames)
+            {
+                report.findings.push(Finding::error(
+                    "manifest-length-mismatch",
+                    format!(
+                        "sealed segment {i} frames out to {} frames over {} bytes; the \
+                         manifest sealed {} frames over {} bytes",
+                        scan.frames.len(),
+                        scan.end,
+                        meta.sealed_frames,
+                        meta.sealed_len
+                    ),
+                ));
+            }
+        } else if let Some((off, bytes)) = scan.torn {
+            report.findings.push(
+                Finding::warn(
+                    "torn-tail",
+                    format!(
+                        "{bytes} trailing bytes do not form a complete frame (crash \
+                         mid-append; reopen would truncate them)"
+                    ),
+                )
+                .offset(off),
+            );
+        }
+
+        // Per-segment sidecar (sealed segments got theirs at seal time).
+        if let Some(uuid) = uuid {
+            match io.read_file(&sidecar_path(&sp)) {
+                Err(_) => {
+                    if !scan.frames.is_empty() {
+                        report.findings.push(
+                            Finding::warn(
+                                "missing-sidecar",
+                                format!(
+                                    "no checkpoint sidecar alongside segment {i}: reopen pays \
+                                     a scan of it"
+                                ),
+                            )
+                            .scoped(sp.display().to_string()),
+                        );
+                    }
+                }
+                Ok(bytes) => {
+                    audit_sidecar(&bytes, uuid, data_start, file_len, &scan, meta.base, report)
+                }
+            }
+            if i == 0 {
+                lease_epoch = audit_lease(io, path, uuid, report);
+            }
+        }
+        segments.push((meta.base, scan));
+    }
+
+    // A segment file past the manifest's chain is a crashed rotation's
+    // orphan: the new segment was created but the manifest rename never
+    // landed. Reopen removes it; the linter (which never mutates) flags
+    // the manifest as stale instead.
+    let orphan = manifest::segment_path(path, n);
+    if io.open_read(&orphan).is_ok() {
+        report.findings.push(Finding::warn(
+            "stale-manifest",
+            format!(
+                "segment file {} exists past the manifest's {n}-segment chain — a crashed \
+                 rotation left it behind (reopen removes it)",
+                orphan.display()
+            ),
+        ));
+    }
+    Ok(ChainScan { segments, lease_epoch })
 }
 
 /// Shared physical audit: preamble, frame walk, sidecar-vs-segment
@@ -301,7 +589,7 @@ fn audit_segment(
                 ));
             }
         }
-        Ok(bytes) => audit_sidecar(&bytes, uuid, data_start, file_len, &scan, report),
+        Ok(bytes) => audit_sidecar(&bytes, uuid, data_start, file_len, &scan, 0, report),
     }
     let lease_epoch = audit_lease(io, path, uuid, report);
     Ok((scan, lease_epoch))
@@ -355,6 +643,7 @@ fn audit_sidecar(
     data_start: u64,
     file_len: u64,
     scan: &FrameScan,
+    base: u64,
     report: &mut Report,
 ) {
     let Some(c) = Checkpoint::decode(bytes) else {
@@ -411,7 +700,7 @@ fn audit_sidecar(
                              the segment ({found})"
                         ),
                     )
-                    .at(i as u64),
+                    .at(base + i as u64),
                 );
                 return;
             }

@@ -9,6 +9,7 @@
 //!   kernel-demo             AgentKernel control-plane tour
 //!   lint <log> | --registry <log> | --src <dir>   offline analyzer
 //!   lease <log>             inspect the <log>.lease append lease
+//!   segments <log>          inspect the <log>.manifest segment chain
 //!
 //! (clap is unavailable offline; argument parsing is hand-rolled.)
 
@@ -38,13 +39,16 @@ fn main() {
         Some("kernel-demo") => kernel_demo(),
         Some("lint") => lint(&args),
         Some("lease") => lease_cmd(&args),
+        Some("segments") => segments_cmd(&args),
         _ => {
-            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease> [flags]");
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease|segments> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
-            eprintln!("  swarm   --seed S [--shared] [--log <path>]");
+            eprintln!("  swarm   --seed S [--shared] [--log <path>] [--rotate-bytes N]");
             eprintln!("          (--shared: one multi-tenant log for all workers;");
-            eprintln!("           --log: put that log on disk, ready for `lint --registry`)");
+            eprintln!("           --log: put that log on disk, ready for `lint --registry`;");
+            eprintln!("           --rotate-bytes: seal segments at N bytes — leaves a");
+            eprintln!("           multi-segment chain behind, see `segments`)");
             eprintln!("  serve   --requests N");
             eprintln!("  lint    <log> | --registry <log> | --src <dir>  [--json]");
             eprintln!("          offline analyzer: segment/sidecar scrub + LogAct protocol");
@@ -52,6 +56,9 @@ fn main() {
             eprintln!("          exits 1 if any Error-severity finding");
             eprintln!("  lease   <log>   holder/epoch/heartbeat of the append lease;");
             eprintln!("          exits 1 if the lease is corrupt or foreign");
+            eprintln!("  segments <log>  the segment chain the <log>.manifest records");
+            eprintln!("          (single-segment logs have no manifest); exits 1 if the");
+            eprintln!("          manifest is corrupt");
             std::process::exit(2);
         }
     }
@@ -122,6 +129,7 @@ fn swarm(args: &[String]) {
     let seed = flag(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(2026);
     let shared_log = args.iter().any(|a| a == "--shared");
     let log_path = flag(args, "--log").map(std::path::PathBuf::from);
+    let rotate_bytes = flag(args, "--rotate-bytes").and_then(|s| s.parse().ok());
     // Only the supervisor run writes the durable artifact: giving both
     // runs the same path would interleave two swarms in one log.
     let run = |supervisor| {
@@ -129,6 +137,7 @@ fn swarm(args: &[String]) {
             supervisor,
             shared_log,
             log_path: if supervisor { log_path.clone() } else { None },
+            rotate_bytes,
             seed,
             ..logact::swarm::SwarmConfig::default()
         })
@@ -287,6 +296,47 @@ fn lease_cmd(args: &[String]) {
             std::process::exit(1);
         }
     }
+}
+
+/// `segments <log>` — print the segment chain the `<log>.manifest`
+/// records, without opening the log for write. A log that never rotated
+/// has no manifest and is reported as single-segment. Exit codes: 0 ok,
+/// 1 corrupt manifest, 2 no path given.
+fn segments_cmd(args: &[String]) {
+    use logact::bus::manifest;
+    use logact::bus::FsIo;
+    use logact::util::tables::Table;
+    let Some(log) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("segments: pass a log path");
+        std::process::exit(2);
+    };
+    let path = std::path::Path::new(log);
+    let m = match manifest::load(&FsIo, path) {
+        Err(e) => {
+            eprintln!("segments: {e}");
+            std::process::exit(1);
+        }
+        Ok(None) => {
+            println!("{log}: no manifest — single-segment log (never rotated)");
+            return;
+        }
+        Ok(Some(m)) => m,
+    };
+    let title = format!("segment chain of {log} ({} segments)", m.segments.len());
+    let mut t = Table::new(&title, &["segment", "file", "uuid", "base", "sealed bytes", "sealed frames"]);
+    let n = m.segments.len();
+    for (i, s) in m.segments.iter().enumerate() {
+        let active = i + 1 == n;
+        t.row(&[
+            i.to_string(),
+            manifest::segment_path(path, i).display().to_string(),
+            format!("{:032x}", s.uuid),
+            s.base.to_string(),
+            if active { "(active)".to_string() } else { s.sealed_len.to_string() },
+            if active { "(active)".to_string() } else { s.sealed_frames.to_string() },
+        ]);
+    }
+    println!("{}", t.to_markdown());
 }
 
 fn kernel_demo() {

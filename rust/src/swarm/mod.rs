@@ -86,6 +86,13 @@ pub struct SwarmConfig {
     /// `logact lint --registry <path>` runs the offline analyzer over it.
     /// Implies `shared_log`.
     pub log_path: Option<PathBuf>,
+    /// Rotate the on-disk shared log into a fresh segment whenever the
+    /// active one crosses this many bytes (see
+    /// [`DurableBackend::set_rotation`]). Only meaningful with
+    /// `log_path`; `None` keeps the single-segment shape. A small
+    /// threshold makes the swarm leave a *multi-segment* artifact behind
+    /// for `logact lint --registry` / `logact segments` to audit.
+    pub rotate_bytes: Option<u64>,
     pub seed: u64,
     pub costs: SwarmCosts,
 }
@@ -99,6 +106,7 @@ impl Default for SwarmConfig {
             supervisor: false,
             shared_log: false,
             log_path: None,
+            rotate_bytes: None,
             seed: 42,
             costs: SwarmCosts::default(),
         }
@@ -270,6 +278,9 @@ pub fn run_swarm(cfg: &SwarmConfig) -> SwarmOutcome {
                 },
             )
             .expect("open swarm shared log");
+            if cfg.rotate_bytes.is_some() {
+                backend.set_rotation(cfg.rotate_bytes, None);
+            }
             Some(BusRegistry::new(Arc::new(backend)))
         }
         None if cfg.shared_log => Some(BusRegistry::new(Arc::new(MemBackend::new()))),
@@ -434,6 +445,37 @@ mod tests {
         let (base, _) = run_fig9(5);
         assert_eq!(base.per_worker_files.len(), 6);
         assert_eq!(base.per_worker_files.iter().sum::<usize>(), base.files_fixed);
+    }
+
+    #[test]
+    fn rotated_swarm_log_is_a_clean_multi_segment_artifact() {
+        // A durable swarm log with a small rotation threshold seals
+        // segments mid-run; the chain must reopen for audit and lint
+        // clean (the CI `lint` job drives the same path via the CLI).
+        use crate::bus::manifest;
+        let dir = std::env::temp_dir().join("logact-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("swarm-rotate-{}.log", crate::util::ids::next_id()));
+        let _ = std::fs::remove_file(&p);
+        let out = run_swarm(&SwarmConfig {
+            supervisor: true,
+            log_path: Some(p.clone()),
+            rotate_bytes: Some(64 * 1024),
+            seed: 13,
+            ..SwarmConfig::default()
+        });
+        assert!(out.shared_log_records.unwrap() > 0);
+        let m = manifest::load(&crate::bus::FsIo, &p).unwrap().expect("swarm log rotated");
+        assert!(m.segments.len() >= 3, "expected >= 3 segments, got {}", m.segments.len());
+        let report = crate::lint::lint_registry_file(&p).unwrap();
+        assert_eq!(report.errors(), 0, "rotated swarm artifact lints clean: {:?}", report.codes());
+        for i in 0..m.segments.len() {
+            let sp = manifest::segment_path(&p, i);
+            let _ = std::fs::remove_file(crate::bus::checkpoint::sidecar_path(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(manifest::manifest_path(&p));
+        let _ = std::fs::remove_file(crate::bus::lease::lease_path(&p));
     }
 
     #[test]

@@ -472,3 +472,101 @@ fn two_writer_lease_fault_sites_never_fork() {
         }
     }
 }
+
+/// Rotation matrix (segmented-log tentpole): the 4th append of a
+/// `rotate_records = 4` log performs a group commit followed by a full
+/// rotation (seal sidecar, chain-link the next segment, publish the
+/// manifest). Every I/O site of that sequence is faulted both ways; a
+/// crash at any point must reopen to the pre- or post-rotation log —
+/// never a forked chain, never a lost sealed byte.
+#[test]
+fn every_rotation_fault_site_reopens_to_one_unforked_chain() {
+    use logact::bus::manifest;
+
+    fn cleanup(p: &Path) {
+        for i in 0..3 {
+            let sp = manifest::segment_path(p, i);
+            let _ = std::fs::remove_file(sidecar(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(manifest::manifest_path(p));
+        let _ = std::fs::remove_file(format!("{}.lease", p.display()));
+    }
+
+    // Measure: ops of the commit that trips the rotation threshold.
+    let ops_rotating_commit;
+    {
+        let p = tmp("rot-ops");
+        let io = FaultIo::new();
+        let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+        b.set_rotation(None, Some(4));
+        prefill(&b, 3);
+        let before = io.ops();
+        b.append(&entry_bytes(3, false)).unwrap();
+        ops_rotating_commit = io.ops() - before;
+        assert_eq!(
+            ops_rotating_commit, 18,
+            "5-op group commit + rotation: segment fsync, 4-op sealed-sidecar publish, \
+             next-segment create + chain-link write + fsync, append reopen, 4-op manifest \
+             publish"
+        );
+        assert_eq!(b.segment_count(), 2);
+        drop(b);
+        cleanup(&p);
+    }
+
+    // Enumerate: every site × {clean failure, torn write}. Sites 1..=5
+    // fail the commit itself (the 4th record rolls back); later sites
+    // fail mid-rotation, which never fails the commit — the rotation
+    // either completes or aborts, resolved at the manifest rename.
+    for k in 1..=ops_rotating_commit {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("rotation site {k} {mode:?}");
+            let p = tmp(&format!("rot-site-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            b.set_rotation(None, Some(4));
+            prefill(&b, 3);
+            let before = io.ops();
+            io.fail_op(before + k, mode);
+            let r = b.append(&entry_bytes(3, false));
+            let expected = if k <= 5 {
+                assert!(r.is_err(), "{ctx}: commit-site fault must fail the append");
+                3u64
+            } else {
+                assert_eq!(r.unwrap(), 3, "{ctx}: rotation faults never fail the commit");
+                4u64
+            };
+            // Crash here: no drop-time checkpoint papering over the state.
+            b.set_auto_checkpoint(false);
+            drop(b);
+
+            // Reopen: pre- or post-rotation, one linear history.
+            let c = DurableBackend::open(&p).unwrap();
+            assert_eq!(c.tail(), expected, "{ctx}: sealed records must all survive");
+            let segs = c.segment_count();
+            assert!(segs == 1 || segs == 2, "{ctx}: {segs} segments");
+            for (pos, bytes) in c.read(0, expected).unwrap() {
+                assert_eq!(
+                    Entry::from_bytes(&bytes).unwrap().position,
+                    pos,
+                    "{ctx}: byte-identical prefix"
+                );
+            }
+            for ty in PayloadType::ALL {
+                let want: Vec<u64> =
+                    (0..expected).filter(|&i| PayloadType::ALL[(i % 9) as usize] == ty).collect();
+                assert_eq!(c.positions_for_type(ty, 0, 99), Some(want), "{ctx}: index");
+            }
+            // The chain stays writable at dense global positions, scrubs
+            // clean, and survives one more reopen.
+            assert_eq!(c.append(&entry_bytes(expected, false)).unwrap(), expected, "{ctx}");
+            assert_eq!(c.verify().unwrap(), None, "{ctx}: scrub");
+            drop(c);
+            let d = DurableBackend::open(&p).unwrap();
+            assert_eq!(d.tail(), expected + 1, "{ctx}: second reopen");
+            drop(d);
+            cleanup(&p);
+        }
+    }
+}

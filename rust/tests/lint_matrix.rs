@@ -474,3 +474,167 @@ fn swarm_log_artifact_is_lintable_and_clean() {
         r.to_table().to_markdown()
     );
 }
+
+// ---- segment-chain matrix (segmented-log tentpole) -------------------
+
+use logact::bus::manifest;
+
+/// Build a cleanly-closed log rotated across several segments: `n`
+/// Mail entries at `rotate_records` per segment. Returns the root path.
+fn build_chain(name: &str, n: u64, rotate_records: u64) -> PathBuf {
+    let p = tmp(name);
+    let b = DurableBackend::open(&p).unwrap();
+    b.set_rotation(None, Some(rotate_records));
+    for i in 0..n {
+        b.append(&ent(i, PayloadType::Mail, Json::Null)).unwrap();
+    }
+    assert!(b.segment_count() > 1, "fixture must actually rotate");
+    drop(b);
+    p
+}
+
+fn chain_cleanup(p: &PathBuf) {
+    for i in 0..8 {
+        let sp = manifest::segment_path(p, i);
+        let _ = std::fs::remove_file(sidecar_path(&sp));
+        let _ = std::fs::remove_file(&sp);
+    }
+    let _ = std::fs::remove_file(manifest::manifest_path(p));
+    let _ = std::fs::remove_file(logact::bus::lease::lease_path(p));
+}
+
+#[test]
+fn clean_multi_segment_chain_yields_zero_findings() {
+    let p = build_chain("chain-clean", 10, 4);
+    let r = lint_log_file(&p).unwrap();
+    assert!(r.findings.is_empty(), "clean chain flagged:\n{}", r.to_table().to_markdown());
+    chain_cleanup(&p);
+}
+
+#[test]
+fn damaged_chain_link_is_flagged_exactly_once() {
+    let p = build_chain("chain-damaged", 10, 4);
+    // Flip one byte inside segment 1's chain-link preamble: its CRC
+    // fails, so the link is damaged and the chain is broken there.
+    let sp = manifest::segment_path(&p, 1);
+    let mut bytes = std::fs::read(&sp).unwrap();
+    bytes[20] ^= 0xFF; // inside the uuid field, before the preamble CRC
+    std::fs::write(&sp, &bytes).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["chain-break"], "{}", r.to_table().to_markdown());
+    assert!(warn_codes(&r).is_empty());
+    chain_cleanup(&p);
+}
+
+#[test]
+fn chain_link_uuid_mismatch_is_flagged_exactly_once() {
+    let p = build_chain("chain-uuid", 10, 4);
+    // Rewrite the manifest (valid CRC and all) so the *last* segment's
+    // uuid disagrees with the chain link stamped in the segment itself.
+    let mut m = manifest::load(&logact::bus::FsIo, &p).unwrap().unwrap();
+    let last = m.segments.len() - 1;
+    m.segments[last].uuid ^= 0xDEAD_BEEF;
+    std::fs::write(manifest::manifest_path(&p), m.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["chain-break"], "{}", r.to_table().to_markdown());
+    // The segment's own sidecar names the real uuid, which no longer
+    // matches the (tampered) manifest identity: that warn follows.
+    assert_eq!(warn_codes(&r), vec!["foreign-sidecar"]);
+    chain_cleanup(&p);
+}
+
+#[test]
+fn sealed_length_disagreement_is_flagged_exactly_once() {
+    let p = build_chain("chain-short", 10, 4);
+    // Chop the tail off sealed segment 1: the manifest sealed more bytes
+    // than the file now holds.
+    let sp = manifest::segment_path(&p, 1);
+    let bytes = std::fs::read(&sp).unwrap();
+    std::fs::write(&sp, &bytes[..bytes.len() - 5]).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(
+        error_codes(&r),
+        vec!["manifest-length-mismatch"],
+        "{}",
+        r.to_table().to_markdown()
+    );
+    // The seal-time sidecar now describes more bytes than the segment
+    // holds — the same class of warn reopen's fallback logic reports.
+    assert_eq!(warn_codes(&r), vec!["stale-sidecar"]);
+    chain_cleanup(&p);
+}
+
+#[test]
+fn bytes_past_a_seal_are_flagged() {
+    let p = build_chain("chain-long", 10, 4);
+    // Append junk to a sealed (byte-frozen) segment: survivable — reopen
+    // ignores it — but something wrote where nothing should.
+    use std::io::Write;
+    let sp = manifest::segment_path(&p, 0);
+    let mut f = std::fs::OpenOptions::new().append(true).open(&sp).unwrap();
+    f.write_all(b"junk-past-the-seal").unwrap();
+    drop(f);
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["manifest-length-mismatch"]);
+    chain_cleanup(&p);
+}
+
+#[test]
+fn stale_manifest_orphan_segment_is_warned() {
+    let p = build_chain("chain-orphan", 10, 4);
+    // A crashed rotation creates the next segment before the manifest
+    // rename lands; linting must flag the leftover, not remove it.
+    let n = manifest::load(&logact::bus::FsIo, &p).unwrap().unwrap().segments.len();
+    let orphan = manifest::segment_path(&p, n);
+    std::fs::write(&orphan, b"half-born segment").unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["stale-manifest"]);
+    assert!(orphan.exists(), "the linter must never mutate the artifact");
+    chain_cleanup(&p);
+}
+
+#[test]
+fn corrupt_manifest_is_an_error_and_audit_degrades_to_the_root() {
+    let p = build_chain("chain-badman", 10, 4);
+    let mp = manifest::manifest_path(&p);
+    let mut bytes = std::fs::read(&mp).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x55;
+    std::fs::write(&mp, &bytes).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["corrupt-manifest"], "{}", r.to_table().to_markdown());
+    chain_cleanup(&p);
+}
+
+#[test]
+fn registry_protocol_pass_spans_segment_boundaries() {
+    // A tenant's commit/abort conflict whose entries land in *different*
+    // segments: the chain walk must feed global positions to the
+    // per-namespace pass, or the conflict would never line up.
+    let p = tmp("chain-registry");
+    {
+        let d = Arc::new(DurableBackend::open(&p).unwrap());
+        d.set_rotation(None, Some(3));
+        let registry = BusRegistry::new(d.clone());
+        let alice = registry.backend("alice").unwrap();
+        let bob = registry.backend("bob").unwrap();
+        alice.append(&ent(0, PayloadType::Mail, Json::Null)).unwrap();
+        bob.append(&ent(0, PayloadType::Intent, Json::Null)).unwrap();
+        alice.append(&ent(1, PayloadType::Mail, Json::Null)).unwrap();
+        bob.append(&ent(1, PayloadType::Commit, ipos(0))).unwrap();
+        alice.append(&ent(2, PayloadType::Mail, Json::Null)).unwrap();
+        bob.append(&ent(2, PayloadType::Abort, ipos(0))).unwrap();
+        bob.append(&ent(3, PayloadType::Result, ipos(0))).unwrap();
+        assert!(d.segment_count() >= 2, "fixture must span segments");
+        registry.checkpoint().unwrap();
+    }
+    let r = lint_registry_file(&p).unwrap();
+    let errors: Vec<&Finding> =
+        r.findings.iter().filter(|f| f.severity == Severity::Error).collect();
+    assert_eq!(errors.len(), 1, "{}", r.to_table().to_markdown());
+    assert_eq!(errors[0].code, "commit-abort-conflict");
+    assert_eq!(errors[0].scope.as_deref(), Some("bob"));
+    chain_cleanup(&p);
+}
