@@ -6,10 +6,11 @@ BENCH_bus.json at the repo root, then calls this script against the
 previous run's file (restored from the actions cache). Any headline
 metric that regressed by more than --factor (default 2x) fails the job.
 
-Metric direction is inferred from the name: times (`*_ms`) and
-per-entry/per-read cost ratios are lower-is-better; everything else
-(speedups, `*_krecs` throughputs) is higher-is-better. Keep new bench
-metric names consistent with those conventions.
+Metric direction is inferred from the name: times (`*_ms`), overhead
+percentages (`*_pct`) and per-entry/per-read cost ratios are
+lower-is-better; everything else (speedups, `*_krecs` throughputs) is
+higher-is-better. Keep new bench metric names consistent with those
+conventions.
 
 Exit codes: 0 = pass (or no baseline yet), 1 = regression, 2 = bad input.
 """
@@ -21,7 +22,12 @@ import sys
 
 
 def lower_is_better(name: str) -> bool:
-    return name.endswith("_ms") or "per_entry" in name or "per_read" in name
+    return (
+        name.endswith("_ms")
+        or name.endswith("_pct")
+        or "per_entry" in name
+        or "per_read" in name
+    )
 
 
 def load_metrics(path: str) -> dict:

@@ -9,6 +9,14 @@
 //! rebuilt on reopen — so a filtered read resolves to exactly the matching
 //! positions ([`LogBackend::positions_for_type`]) instead of scanning and
 //! decoding the whole range.
+//!
+//! The durable backend additionally keeps an incremental Merkle tree over
+//! its frames ([`super::merkle`]): every `append_batch` yields a
+//! [`super::merkle::Receipt`] (readable via
+//! [`super::DurableBackend::last_receipt`]), any record gets an O(log n)
+//! [`super::merkle::InclusionProof`], and the tree rides the existing
+//! checkpoint sidecar and manifest writes — the trait surface here stays
+//! byte-log-dumb, tamper evidence is a durable-backend property.
 
 use super::checkpoint::CheckpointStats;
 use super::entry::{Entry, PayloadType};

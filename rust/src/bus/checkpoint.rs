@@ -36,7 +36,12 @@
 //! Aux sections let layers above the backend ride the same sidecar:
 //! [`BusRegistry`](super::BusRegistry) persists its namespace maps as an
 //! opaque keyed blob (see `LogBackend::persist_aux`), so a multi-tenant
-//! reopen recovers every tenant without rescanning the shared log.
+//! reopen recovers every tenant without rescanning the shared log. The
+//! backend itself reserves one aux key for its Merkle leaf list
+//! ([`super::merkle::MERKLE_AUX_KEY`]): the active segment's tree
+//! checkpoints through the same atomic publish, under a softer trust
+//! rule — a damaged or missing leaf section costs a leaf rebuild from
+//! the already-adopted frames, never a rejected sidecar.
 
 use super::backend::TypeIndex;
 use crate::util::crc32;

@@ -71,6 +71,7 @@ use super::entry::{Entry, Payload, PayloadType};
 use super::io::{FsIo, SegmentIo};
 use super::lease::{self, LeaseConfig, LeaseRecord};
 use super::manifest::{self, Manifest, SegmentMeta};
+use super::merkle::{self, InclusionProof, MerkleTree, Receipt};
 use crate::util::clock::Clock;
 use crate::util::crc32;
 use std::collections::BTreeMap;
@@ -122,6 +123,13 @@ struct Segment {
     /// Byte length of the indexed portion (the write position for the
     /// active segment; the sealed length for sealed ones).
     len: u64,
+    /// Merkle tree over this segment's frame payload hashes, maintained
+    /// in lockstep with `frames`: one leaf per indexed record. Restored
+    /// from the sidecar's [`merkle::MERKLE_AUX_KEY`] aux section on
+    /// reopen (same trust rules as the TypeIndex), rebuilt from a frame
+    /// scan on any doubt. Sealing freezes it; the sealed root is
+    /// recorded in the segment's manifest entry.
+    merkle: MerkleTree,
 }
 
 struct Inner {
@@ -171,6 +179,11 @@ struct Inner {
     /// rotates — the log stays a single segment and grows no manifest.
     rotate_bytes: Option<u64>,
     rotate_records: Option<u64>,
+    /// The receipt of the most recent batch this handle committed:
+    /// first position, batch size, last leaf hash, the chain root after
+    /// the batch, and the lease epoch it was written under. `None`
+    /// until the first commit.
+    last_receipt: Option<Receipt>,
 }
 
 impl Inner {
@@ -186,6 +199,14 @@ impl Inner {
     fn tail(&self) -> u64 {
         let a = self.active();
         a.base + a.frames.len() as u64
+    }
+
+    /// Per-segment Merkle roots of every non-empty segment, in chain
+    /// order — the chain-root preimage. A freshly rotated, still-empty
+    /// active segment contributes nothing, so sealing alone never moves
+    /// the chain root: it only moves when a record lands.
+    fn seg_roots(&self) -> Vec<[u8; 32]> {
+        self.segs.iter().filter(|s| !s.merkle.is_empty()).map(|s| s.merkle.root()).collect()
     }
 
     /// Map a global position to `(segment index, local frame index)`.
@@ -223,11 +244,11 @@ fn encode_frame(out: &mut Vec<u8>, bytes: &[u8]) {
 }
 
 /// Scan `[from, limit)` of a segment file, appending every intact frame
-/// to `frames` (offsets local to the file) and classifying it into
-/// `types` (positions local to the segment). Stops at the first torn or
-/// corrupt frame; returns the byte position it stopped at. The scan
-/// reads every payload for its CRC check, so classifying it for the
-/// type index is one header peek away.
+/// to `frames` (offsets local to the file), classifying it into `types`
+/// (positions local to the segment), and pushing its payload's Merkle
+/// leaf into `tree`. Stops at the first torn or corrupt frame; returns
+/// the byte position it stopped at. The scan reads every payload for its
+/// CRC check, so classifying and hashing it are in-memory follow-ups.
 fn scan_frames_into(
     io: &dyn SegmentIo,
     file: &File,
@@ -235,6 +256,7 @@ fn scan_frames_into(
     limit: u64,
     frames: &mut Vec<(u64, u32)>,
     types: &mut TypeIndex,
+    tree: &mut MerkleTree,
 ) -> std::io::Result<u64> {
     let mut pos = from;
     let mut header = [0u8; FRAME_HEADER];
@@ -252,9 +274,57 @@ fn scan_frames_into(
         }
         types.note(frames.len() as u64, &buf);
         frames.push((pos, rec_len));
+        tree.push(merkle::leaf_hash(&buf));
         pos += FRAME_HEADER as u64 + rec_len as u64;
     }
     Ok(pos)
+}
+
+/// Rebuild a segment's leaf hashes by reading every already-indexed
+/// payload back — the frame-scan fallback for a sidecar without a
+/// usable Merkle section (pre-Merkle checkpoint, or a damaged leaf
+/// list). Mirrors the TypeIndex rule: doubt costs a rebuild, never a
+/// rejected open.
+fn rebuild_leaves(
+    io: &dyn SegmentIo,
+    file: &File,
+    frames: &[(u64, u32)],
+) -> std::io::Result<MerkleTree> {
+    let mut tree = MerkleTree::new();
+    for &(off, len) in frames {
+        let mut buf = vec![0u8; len as usize];
+        io.read_exact_at(file, &mut buf, off + FRAME_HEADER as u64)?;
+        tree.push(merkle::leaf_hash(&buf));
+    }
+    Ok(tree)
+}
+
+/// The chain root as it stood when the chain held exactly `tail`
+/// records; `None` if it holds fewer. Appends only extend per-segment
+/// leaf lists, so a historical root is a fold over whole sealed subtrees
+/// plus one truncated prefix of the segment `tail` landed in.
+fn root_at_tail(segs: &[Segment], tail: u64) -> Option<[u8; 32]> {
+    let have = segs.last().map_or(0, |a| a.base + a.frames.len() as u64);
+    if tail > have {
+        return None;
+    }
+    let mut roots = Vec::new();
+    for seg in segs {
+        if tail <= seg.base {
+            break;
+        }
+        let take = (tail - seg.base).min(seg.merkle.len());
+        if take == 0 {
+            continue;
+        }
+        if take == seg.merkle.len() {
+            roots.push(seg.merkle.root());
+        } else {
+            let prefix = seg.merkle.leaves()[..take as usize].iter().copied();
+            roots.push(MerkleTree::from_leaves(prefix).root());
+        }
+    }
+    Some(merkle::chain_root(&roots))
 }
 
 /// The highest append-lease epoch any in-log `driver_election` marker
@@ -465,26 +535,35 @@ impl DurableBackend {
         let mut frames: Vec<(u64, u32)> = Vec::new();
         let mut types = TypeIndex::new();
         let mut aux: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        let mut tree: Option<MerkleTree> = None;
         let mut scan_from = data_start;
 
         if let Ok(bytes) = io.read_file(&ckpt_path) {
             match DurableBackend::try_adopt(&*io, &file, &bytes, uuid, data_start, len) {
-                Some((ck_frames, ck_types, ck_aux, ck_len)) => {
+                Some((ck_frames, ck_types, ck_aux, ck_len, ck_tree)) => {
                     ckpt_stats.sidecar_loaded = true;
                     ckpt_stats.frames_from_checkpoint = ck_frames.len() as u64;
                     frames = ck_frames;
                     types = ck_types;
                     aux = ck_aux;
+                    tree = ck_tree;
                     scan_from = ck_len;
                 }
                 None => ckpt_stats.sidecar_rejected = true,
             }
         }
+        // A sidecar without a usable leaf list costs a leaf rebuild over
+        // the adopted frames — reads, but never a rejected open.
+        let mut tree = match tree {
+            Some(t) => t,
+            None => rebuild_leaves(&*io, &file, &frames)?,
+        };
 
-        // Scan the uncovered suffix, rebuilding (or extending) both
+        // Scan the uncovered suffix, rebuilding (or extending) all three
         // indexes.
         ckpt_stats.reopen_scanned_bytes = len - scan_from;
-        let mut pos = scan_frames_into(&*io, &file, scan_from, len, &mut frames, &mut types)?;
+        let mut pos =
+            scan_frames_into(&*io, &file, scan_from, len, &mut frames, &mut types, &mut tree)?;
 
         // Acquire the append lease before mutating the recovered tail:
         // what looks like a torn suffix may be a live owner's in-flight
@@ -505,13 +584,21 @@ impl DurableBackend {
             .as_deref()
             .and_then(LeaseRecord::decode)
             .is_some_and(|rec| rec.uuid == uuid);
-        let seg =
-            Segment { file, path: path.clone(), uuid, data_start, base: 0, frames, len: pos };
+        let seg = Segment {
+            file,
+            path: path.clone(),
+            uuid,
+            data_start,
+            base: 0,
+            frames,
+            len: pos,
+            merkle: tree,
+        };
         let segs_for_epoch = std::slice::from_ref(&seg);
         let log_epoch =
             if lease_attests { 0 } else { max_log_lease_epoch(&*io, segs_for_epoch, &types) };
         let (mut lease_rec, took_over) = lease::acquire(&*io, &lease_file, uuid, log_epoch, &cfg)?;
-        let Segment { file, mut uuid, mut data_start, frames, .. } = seg;
+        let Segment { file, mut uuid, mut data_start, frames, merkle, .. } = seg;
 
         if pos < len {
             // Drop the torn/corrupt suffix so future appends are clean.
@@ -542,7 +629,16 @@ impl DurableBackend {
             clock: cfg.clock,
             ttl_ms: cfg.ttl_ms,
             inner: Mutex::new(Inner {
-                segs: vec![Segment { file, path, uuid, data_start, base: 0, frames, len: pos }],
+                segs: vec![Segment {
+                    file,
+                    path,
+                    uuid,
+                    data_start,
+                    base: 0,
+                    frames,
+                    len: pos,
+                    merkle,
+                }],
                 types,
                 seg_types,
                 stats: BackendStats::default(),
@@ -556,6 +652,7 @@ impl DurableBackend {
                 fenced: None,
                 rotate_bytes: None,
                 rotate_records: None,
+                last_receipt: None,
             }),
             sync_each_append: true,
             auto_checkpoint: AtomicBool::new(true),
@@ -603,23 +700,31 @@ impl DurableBackend {
             let data_start = chain_head_check(&*io, &file, flen, i, meta, prev)?;
             let mut frames: Vec<(u64, u32)> = Vec::new();
             let mut seg_types = TypeIndex::new();
+            let mut tree: Option<MerkleTree> = None;
             let mut scan_from = data_start;
             if let Ok(bytes) = io.read_file(&sidecar_path(&sp)) {
-                if let Some((ck_frames, ck_types, ck_aux, ck_len)) = DurableBackend::try_adopt(
-                    &*io,
-                    &file,
-                    &bytes,
-                    meta.uuid,
-                    data_start,
-                    meta.sealed_len,
-                ) {
+                if let Some((ck_frames, ck_types, ck_aux, ck_len, ck_tree)) =
+                    DurableBackend::try_adopt(
+                        &*io,
+                        &file,
+                        &bytes,
+                        meta.uuid,
+                        data_start,
+                        meta.sealed_len,
+                    )
+                {
                     ckpt_stats.frames_from_checkpoint += ck_frames.len() as u64;
                     frames = ck_frames;
                     seg_types = ck_types;
+                    tree = ck_tree;
                     fallback_aux = Some(ck_aux);
                     scan_from = ck_len;
                 }
             }
+            let mut tree = match tree {
+                Some(t) => t,
+                None => rebuild_leaves(&*io, &file, &frames)?,
+            };
             let end = scan_frames_into(
                 &*io,
                 &file,
@@ -627,6 +732,7 @@ impl DurableBackend {
                 meta.sealed_len,
                 &mut frames,
                 &mut seg_types,
+                &mut tree,
             )?;
             if end != meta.sealed_len || frames.len() as u64 != meta.sealed_frames {
                 return Err(chain_err(format!(
@@ -648,6 +754,7 @@ impl DurableBackend {
                 base: meta.base,
                 frames,
                 len: meta.sealed_len,
+                merkle: tree,
             });
         }
 
@@ -665,23 +772,30 @@ impl DurableBackend {
         let mut aframes: Vec<(u64, u32)> = Vec::new();
         let mut seg_types = TypeIndex::new();
         let mut active_aux: Option<BTreeMap<String, Vec<u8>>> = None;
+        let mut active_tree: Option<MerkleTree> = None;
         let mut active_adopted = 0u64;
         let mut scan_from = data_start;
         if let Ok(bytes) = io.read_file(&sidecar_path(&sp)) {
             match DurableBackend::try_adopt(&*io, &file, &bytes, meta.uuid, data_start, flen) {
-                Some((ck_frames, ck_types, ck_aux, ck_len)) => {
+                Some((ck_frames, ck_types, ck_aux, ck_len, ck_tree)) => {
                     ckpt_stats.sidecar_loaded = true;
                     active_adopted = ck_frames.len() as u64;
                     ckpt_stats.frames_from_checkpoint += active_adopted;
                     aframes = ck_frames;
                     seg_types = ck_types;
                     active_aux = Some(ck_aux);
+                    active_tree = ck_tree;
                     scan_from = ck_len;
                 }
                 None => ckpt_stats.sidecar_rejected = true,
             }
         }
-        let end = scan_frames_into(&*io, &file, scan_from, flen, &mut aframes, &mut seg_types)?;
+        let mut atree = match active_tree {
+            Some(t) => t,
+            None => rebuild_leaves(&*io, &file, &aframes)?,
+        };
+        let end =
+            scan_frames_into(&*io, &file, scan_from, flen, &mut aframes, &mut seg_types, &mut atree)?;
         ckpt_stats.reopen_scanned_bytes += flen - scan_from;
         types.merge_shifted(&seg_types, meta.base);
         segs.push(Segment {
@@ -692,6 +806,7 @@ impl DurableBackend {
             base: meta.base,
             frames: aframes,
             len: end,
+            merkle: atree,
         });
 
         // The lease covers the whole chain and is keyed by the *root*
@@ -749,6 +864,7 @@ impl DurableBackend {
                 fenced: None,
                 rotate_bytes: None,
                 rotate_records: None,
+                last_receipt: None,
             }),
             sync_each_append: true,
             auto_checkpoint: AtomicBool::new(true),
@@ -768,6 +884,15 @@ impl DurableBackend {
     /// defense against a sidecar copied between two legacy logs. Stamped
     /// segments (everything written since the preamble landed) get the
     /// full UUID guarantee.
+    ///
+    /// The sidecar's Merkle leaf section rides along on a softer rule:
+    /// a decodable list whose length matches the frame count is adopted
+    /// as the segment's tree (`Some`), anything else — absent section,
+    /// damaged bytes, count skew — returns `None` in the last slot and
+    /// the caller rebuilds the tree from a frame scan. Leaf doubt never
+    /// rejects the sidecar itself: the accept/reject boundary the crash
+    /// matrix pins down is exactly the pre-Merkle one.
+    #[allow(clippy::type_complexity)]
     fn try_adopt(
         io: &dyn SegmentIo,
         file: &File,
@@ -775,7 +900,8 @@ impl DurableBackend {
         uuid: u128,
         data_start: u64,
         file_len: u64,
-    ) -> Option<(Vec<(u64, u32)>, TypeIndex, BTreeMap<String, Vec<u8>>, u64)> {
+    ) -> Option<(Vec<(u64, u32)>, TypeIndex, BTreeMap<String, Vec<u8>>, u64, Option<MerkleTree>)>
+    {
         let c = Checkpoint::decode(sidecar)?; // magic + CRC + structure
         if c.uuid != uuid || c.data_start != data_start || c.log_len > file_len {
             return None;
@@ -812,7 +938,13 @@ impl DurableBackend {
         if frames.len() > 1 {
             spot(frames.first().unwrap())?;
         }
-        Some((frames, c.types, c.aux, c.log_len))
+        let mut aux = c.aux;
+        let tree = aux
+            .remove(merkle::MERKLE_AUX_KEY)
+            .and_then(|bytes| merkle::decode_leaves(&bytes))
+            .filter(|leaves| leaves.len() as u64 == n)
+            .map(MerkleTree::from_leaves);
+        Some((frames, c.types, aux, c.log_len, tree))
     }
 
     pub fn path(&self) -> &Path {
@@ -915,13 +1047,23 @@ impl DurableBackend {
     /// the commit point.
     fn publish_sidecar(&self, g: &mut Inner) -> std::io::Result<()> {
         let active = g.active();
+        // The Merkle leaf list rides the aux map of the sidecar we were
+        // going to write anyway — bigger payload, zero extra I/O ops.
+        // Inserted into a copy: `g.aux` itself never holds the reserved
+        // key (adoption strips it), so user blobs and the tree section
+        // can't shadow each other.
+        let mut aux = g.aux.clone();
+        aux.insert(
+            merkle::MERKLE_AUX_KEY.to_string(),
+            merkle::encode_leaves(active.merkle.leaves()),
+        );
         let ck = Checkpoint {
             uuid: active.uuid,
             data_start: active.data_start,
             log_len: active.len,
             frame_lens: active.frames.iter().map(|&(_, l)| l).collect(),
             types: g.seg_types.clone(),
-            aux: g.aux.clone(),
+            aux,
         };
         let bytes = ck.encode();
         let scp = sidecar_path(&active.path);
@@ -982,18 +1124,103 @@ impl DurableBackend {
         }
     }
 
-    /// Full bit-rot scrub: re-walk and re-hash every frame the index
-    /// covers — across every segment of the chain — against its stored
-    /// CRC. Returns the first global position whose on-disk frame no
-    /// longer matches the index (offset, length or CRC), or `None` if
-    /// the whole chain verifies. This is the explicit O(log) check that
-    /// checkpointed reopen deliberately skips.
+    /// Integrity scrub, root-check-first: every segment is bulk-read in
+    /// large sequential chunks at the index's own frame offsets, each
+    /// payload is CRC- and length-checked against its header and hashed
+    /// into a fresh Merkle tree, and the resulting root is compared
+    /// against the segment's **trusted** root — the manifest's sealed
+    /// root for sealed segments (when one is recorded), the in-memory
+    /// tree otherwise. A clean segment costs one pass of chunked reads
+    /// (two positioned reads *per frame* on the old full-scan path — the
+    /// `bus_micro` merkle table measures the difference); only a root
+    /// mismatch pays the full per-frame scan fallback to localize.
     ///
-    /// There is exactly one integrity-scan implementation in the crate:
-    /// this method is a thin wrapper over the log linter's frame scrub
-    /// ([`crate::lint::scrub::scan_frames`]) — `logact lint` sees
-    /// precisely what `verify()` sees.
+    /// Returns the first global position that can no longer be trusted,
+    /// or `None` if the whole chain verifies:
+    /// - header/CRC damage → that frame's position (as before);
+    /// - a CRC-consistent rewrite (payload *and* stored CRC replaced) →
+    ///   the rewritten frame's position, caught by its leaf hash;
+    /// - a tampered sidecar leaf list or manifest root that no frame
+    ///   explains → the segment's base position.
     pub fn verify(&self) -> std::io::Result<Option<u64>> {
+        let g = self.inner.lock().unwrap();
+        let m = manifest::load(&*self.io, &self.path).ok().flatten();
+        for (si, seg) in g.segs.iter().enumerate() {
+            let sealed = si + 1 < g.segs.len();
+            let trusted = m
+                .as_ref()
+                .filter(|_| sealed)
+                .and_then(|m| m.segments.get(si))
+                .map(|meta| meta.sealed_root)
+                .filter(|r| *r != [0u8; 32]) // v1 manifest: no recorded root
+                .unwrap_or_else(|| seg.merkle.root());
+            let disk = self.rootcheck_segment(seg)?;
+            let disk = match disk {
+                Ok(tree) => tree,
+                Err(bad_local) => return Ok(Some(seg.base + bad_local)),
+            };
+            if disk.root() == trusted && seg.merkle.root() == trusted {
+                continue;
+            }
+            // Localize through the full per-frame scan (the shared lint
+            // frame-walk — `logact lint` sees precisely what this sees),
+            // then through leaf-by-leaf comparison; a mismatch no frame
+            // explains (a tampered anchor) pins the segment's base.
+            let scan =
+                crate::lint::scrub::scan_frames(&*self.io, &seg.file, seg.data_start, seg.len)?;
+            for (i, &(off, len)) in seg.frames.iter().enumerate() {
+                let structural = matches!(
+                    scan.frames.get(i),
+                    Some(f) if f.offset == off && f.len == len && f.crc_ok
+                );
+                if !structural || disk.leaf(i as u64) != seg.merkle.leaf(i as u64) {
+                    return Ok(Some(seg.base + i as u64));
+                }
+            }
+            return Ok(Some(seg.base));
+        }
+        Ok(None)
+    }
+
+    /// One root-check pass over a segment: chunked sequential reads,
+    /// per-frame header+CRC validation at the index's offsets, payload
+    /// leaves accumulated into a fresh tree. `Err(local index)` on the
+    /// first frame whose header or CRC disagrees with the index.
+    #[allow(clippy::type_complexity)]
+    fn rootcheck_segment(&self, seg: &Segment) -> std::io::Result<Result<MerkleTree, u64>> {
+        const CHUNK: u64 = 1 << 20;
+        let mut disk = MerkleTree::new();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut buf_start = 0u64;
+        let mut buf_end = 0u64;
+        for (i, &(off, len)) in seg.frames.iter().enumerate() {
+            let frame_end = off + (FRAME_HEADER + len as usize) as u64;
+            if off < buf_start || frame_end > buf_end {
+                // Refill: at least this frame, at most a chunk (bounded
+                // by the indexed length so we never read the torn tail).
+                let want = (frame_end - off).max(CHUNK.min(seg.len.saturating_sub(off)));
+                buf.resize(want as usize, 0);
+                self.io.read_exact_at(&seg.file, &mut buf, off)?;
+                buf_start = off;
+                buf_end = off + want;
+            }
+            let s = (off - buf_start) as usize;
+            let rec_len = u32::from_le_bytes(buf[s..s + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(buf[s + 4..s + 8].try_into().unwrap());
+            let payload = &buf[s + FRAME_HEADER..s + FRAME_HEADER + len as usize];
+            if rec_len != len || crc32::hash(payload) != crc {
+                return Ok(Err(i as u64));
+            }
+            disk.push(merkle::leaf_hash(payload));
+        }
+        Ok(Ok(disk))
+    }
+
+    /// The pre-Merkle scrub, kept verbatim as the explicit full-scan
+    /// baseline: two positioned reads per frame through the shared lint
+    /// frame-walk, compared frame-by-frame against the index. `bus_micro`
+    /// measures [`DurableBackend::verify`] against this.
+    pub fn verify_full_scan(&self) -> std::io::Result<Option<u64>> {
         let g = self.inner.lock().unwrap();
         for seg in g.segs.iter() {
             let scan =
@@ -1006,6 +1233,78 @@ impl DurableBackend {
             }
         }
         Ok(None)
+    }
+
+    /// The receipt of the most recent batch this handle committed, or
+    /// `None` before the first commit. Receipts are pure bookkeeping —
+    /// issuing one costs no I/O.
+    pub fn last_receipt(&self) -> Option<Receipt> {
+        self.inner.lock().unwrap().last_receipt
+    }
+
+    /// The chain root over every committed record: the fold of the
+    /// per-segment subtree roots, in chain order. A never-rotated log's
+    /// chain root *is* its single segment's tree root.
+    pub fn merkle_root(&self) -> [u8; 32] {
+        let g = self.inner.lock().unwrap();
+        merkle::chain_root(&g.seg_roots())
+    }
+
+    /// The chain root as it stood when the log held exactly `tail`
+    /// records — `None` if the log has fewer. Appends only ever extend
+    /// the tree, so any historical root is reconstructible from the
+    /// current leaves; this is what lets a receipt be re-checked long
+    /// after the log has grown past it.
+    pub fn root_at(&self, tail: u64) -> Option<[u8; 32]> {
+        let g = self.inner.lock().unwrap();
+        root_at_tail(&g.segs, tail)
+    }
+
+    /// O(log n) inclusion proof for the record at global position `pos`:
+    /// an authentication path inside its segment's subtree plus the
+    /// sibling segment roots that fold into the chain root. Built
+    /// entirely from the in-memory trees — no log bytes are read.
+    pub fn prove(&self, pos: u64) -> std::io::Result<InclusionProof> {
+        let g = self.inner.lock().unwrap();
+        let (si, local) = g.locate(pos).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("position {pos} is past the tail"),
+            )
+        })?;
+        let seg = &g.segs[si];
+        let leaf = seg.merkle.leaf(local as u64).expect("indexed frame has a leaf");
+        let path = seg.merkle.path(local as u64).expect("indexed frame has a path");
+        let seg_roots = g.seg_roots();
+        let root = merkle::chain_root(&seg_roots);
+        Ok(InclusionProof {
+            position: pos,
+            seg_index: si,
+            seg_size: seg.merkle.len(),
+            leaf_index: local as u64,
+            leaf,
+            path,
+            seg_roots,
+            root,
+        })
+    }
+
+    /// Re-check a previously issued receipt against the log's current
+    /// state: the receipted batch's last record must still carry the
+    /// receipted leaf hash, and the chain root as of the receipt's tail
+    /// (`position + count`) must reproduce the receipted root exactly.
+    /// Any rewrite of history under the receipt — even one with fixed-up
+    /// CRCs — breaks the reconstruction.
+    pub fn verify_receipt(&self, r: &Receipt) -> bool {
+        if r.count == 0 {
+            return false;
+        }
+        let g = self.inner.lock().unwrap();
+        let last = r.position + r.count - 1;
+        let leaf_ok = g
+            .locate(last)
+            .is_some_and(|(si, local)| g.segs[si].merkle.leaf(local as u64) == Some(r.leaf));
+        leaf_ok && root_at_tail(&g.segs, r.position + r.count) == Some(r.root)
     }
 
     /// Write one encoded blob holding `n` frames, fsync once (group
@@ -1096,11 +1395,14 @@ impl DurableBackend {
         let first = base + g.active().frames.len() as u64;
         let mut off = g.active().len;
         let mut blob_off = 0usize;
+        let mut last_leaf = merkle::empty_root();
         for (i, &len) in lens.iter().enumerate() {
             let payload = &blob[blob_off + FRAME_HEADER..blob_off + FRAME_HEADER + len as usize];
             g.types.note(first + i as u64, payload);
             g.seg_types.note(first + i as u64 - base, payload);
+            last_leaf = merkle::leaf_hash(payload);
             g.active_mut().frames.push((off, len));
+            g.active_mut().merkle.push(last_leaf);
             off += (FRAME_HEADER + len as usize) as u64;
             blob_off += FRAME_HEADER + len as usize;
         }
@@ -1108,6 +1410,16 @@ impl DurableBackend {
         g.stats.appended_records += lens.len() as u64;
         g.stats.appended_bytes += payload_bytes;
         g.dirty = true;
+        // The batch's durable receipt: position of its first record, the
+        // last record's leaf, the chain root the batch produced, and the
+        // epoch it was written under. Pure in-memory bookkeeping.
+        g.last_receipt = Some(Receipt {
+            position: first,
+            count: lens.len() as u64,
+            leaf: last_leaf,
+            root: merkle::chain_root(&g.seg_roots()),
+            epoch: g.lease.epoch,
+        });
 
         // Liveness without flushing: refresh the heartbeat once the
         // stamp ages past a third of the TTL, so a holder that only ever
@@ -1188,11 +1500,15 @@ impl DurableBackend {
         };
         let mut m = Manifest { segments: Vec::with_capacity(next_index + 1) };
         for s in g.segs.iter() {
+            // Sealing freezes the segment's subtree: its root rides the
+            // manifest entry and becomes the trusted anchor `verify()`
+            // and lint check sealed bytes against.
             m.segments.push(SegmentMeta {
                 uuid: s.uuid,
                 base: s.base,
                 sealed_len: s.len,
                 sealed_frames: s.frames.len() as u64,
+                sealed_root: s.merkle.root(),
             });
         }
         m.segments.push(SegmentMeta {
@@ -1200,6 +1516,7 @@ impl DurableBackend {
             base: link.base_pos,
             sealed_len: 0,
             sealed_frames: 0,
+            sealed_root: [0u8; 32],
         });
         if manifest::publish(&*self.io, &self.path, &m).is_err() {
             // The rename may or may not have landed; the disk knows.
@@ -1223,6 +1540,7 @@ impl DurableBackend {
             base: link.base_pos,
             frames: Vec::new(),
             len: PREAMBLE_V2_LEN,
+            merkle: MerkleTree::new(),
         });
         g.seg_types = TypeIndex::new();
         // `dirty` is deliberately left set: the new active segment has
@@ -1332,6 +1650,15 @@ impl LogBackend for DurableBackend {
     }
 
     fn persist_aux(&self, key: &str, bytes: Vec<u8>) {
+        // The Merkle leaf section is backend-owned: `publish_sidecar`
+        // regenerates it from the live tree on every checkpoint, so a
+        // caller's blob under the reserved key could never round-trip.
+        // Refuse it outright rather than let it shadow (or be shadowed
+        // by) the real tree.
+        debug_assert_ne!(key, merkle::MERKLE_AUX_KEY, "reserved aux key");
+        if key == merkle::MERKLE_AUX_KEY {
+            return;
+        }
         let mut g = self.inner.lock().unwrap();
         g.aux.insert(key.to_string(), bytes);
         g.dirty = true;

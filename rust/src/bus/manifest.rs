@@ -24,13 +24,17 @@
 //! manifest would serve a truncated log as if it were whole. The offline
 //! linter reports the same state as a `corrupt-manifest` finding.
 //!
-//! Wire form: magic `LACTMAN1`(8) + varint version(=1) + varint
-//! n_segments + per segment [uuid u128 le(16), varint base, varint
-//! sealed_len, varint sealed_frames] + crc32 le(4) over everything
-//! before it. Sealed entries have `sealed_len > 0`; the final (active)
-//! entry always records `sealed_len = 0, sealed_frames = 0` — the
+//! Wire form: magic `LACTMAN1`(8) + varint version + varint n_segments
+//! + per segment [uuid u128 le(16), varint base, varint sealed_len,
+//! varint sealed_frames, and (version ≥ 2) sealed_root(32)] + crc32
+//! le(4) over everything before it. Sealed entries have `sealed_len >
+//! 0`; the final (active) entry always records `sealed_len = 0,
+//! sealed_frames = 0` (and, in v2, an all-zero `sealed_root`) — the
 //! active segment's length is whatever recovery finds, exactly as for a
-//! single-segment log.
+//! single-segment log. Version 2 added the sealed segment's frozen
+//! Merkle subtree root; v1 manifests still decode, with roots reported
+//! as all-zero ("not recorded" — `verify()` and lint then fall back to
+//! the recovered tree).
 
 use super::io::SegmentIo;
 use crate::util::crc32;
@@ -41,7 +45,9 @@ use std::path::{Path, PathBuf};
 /// First 8 bytes of every manifest file.
 pub const MANIFEST_MAGIC: [u8; 8] = *b"LACTMAN1";
 
-pub const MANIFEST_VERSION: u64 = 1;
+/// The version `encode` writes. Decode accepts 1 (pre-Merkle, no sealed
+/// roots) and 2.
+pub const MANIFEST_VERSION: u64 = 2;
 
 /// The manifest's conventional location: `<log>.manifest`.
 pub fn manifest_path(log: &Path) -> PathBuf {
@@ -73,6 +79,11 @@ pub struct SegmentMeta {
     pub sealed_len: u64,
     /// Exact frame count the seal froze; 0 for the active segment.
     pub sealed_frames: u64,
+    /// Merkle root of the sealed segment's frozen subtree; all-zero for
+    /// the active segment and for entries decoded from a v1 manifest
+    /// (root not recorded — integrity checks fall back to the tree
+    /// recovery rebuilds).
+    pub sealed_root: [u8; 32],
 }
 
 /// The decoded `<log>.manifest`: a dense, validated segment chain.
@@ -97,7 +108,7 @@ impl Manifest {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(16 + self.segments.len() * 24);
+        let mut out = Vec::with_capacity(16 + self.segments.len() * 56);
         out.extend_from_slice(&MANIFEST_MAGIC);
         varint::write_u64(&mut out, MANIFEST_VERSION);
         varint::write_u64(&mut out, self.segments.len() as u64);
@@ -106,6 +117,7 @@ impl Manifest {
             varint::write_u64(&mut out, seg.base);
             varint::write_u64(&mut out, seg.sealed_len);
             varint::write_u64(&mut out, seg.sealed_frames);
+            out.extend_from_slice(&seg.sealed_root);
         }
         let crc = crc32::hash(&out);
         out.extend_from_slice(&crc.to_le_bytes());
@@ -116,8 +128,9 @@ impl Manifest {
     /// magic, CRC mismatch, unknown version, zero segments, a non-dense
     /// base sequence (`base[i+1] != base[i] + sealed_frames[i]`), a
     /// sealed entry with no bytes, an active entry claiming sealed
-    /// state, a segment count the bytes cannot hold, or trailing
-    /// garbage.
+    /// state (length, frames, or — in v2 — a recorded root), a segment
+    /// count the bytes cannot hold, or trailing garbage. Version 1
+    /// entries carry no root; they decode with `sealed_root` all-zero.
     pub fn decode(bytes: &[u8]) -> Option<Manifest> {
         if bytes.len() < MANIFEST_MAGIC.len() + 4 || bytes[0..8] != MANIFEST_MAGIC {
             return None;
@@ -128,12 +141,15 @@ impl Manifest {
             return None;
         }
         let mut r = Reader::new(&bytes[8..body_end]);
-        if r.read_u64()? != MANIFEST_VERSION {
+        let version = r.read_u64()?;
+        if version != 1 && version != MANIFEST_VERSION {
             return None;
         }
         let n = r.read_u64()?;
-        // Every entry costs at least 16 uuid bytes + 3 varints.
-        if n == 0 || n > r.remaining() as u64 / 19 {
+        // Every entry costs at least 16 uuid bytes + 3 varints, plus the
+        // 32-byte root from v2 on.
+        let min_entry = if version == 1 { 19 } else { 51 };
+        if n == 0 || n > r.remaining() as u64 / min_entry {
             return None;
         }
         let mut segments = Vec::with_capacity(n as usize);
@@ -142,6 +158,10 @@ impl Manifest {
             let base = r.read_u64()?;
             let sealed_len = r.read_u64()?;
             let sealed_frames = r.read_u64()?;
+            let mut sealed_root = [0u8; 32];
+            if version >= 2 {
+                sealed_root.copy_from_slice(r.read_exact(32)?);
+            }
             let last = i + 1 == n as usize;
             if i == 0 && base != 0 {
                 return None; // the chain's positions start at 0
@@ -152,13 +172,13 @@ impl Manifest {
                 }
             }
             if last {
-                if sealed_len != 0 || sealed_frames != 0 {
+                if sealed_len != 0 || sealed_frames != 0 || sealed_root != [0u8; 32] {
                     return None; // the active segment is open by definition
                 }
             } else if sealed_len == 0 {
                 return None; // a sealed segment always holds its preamble
             }
-            segments.push(SegmentMeta { uuid, base, sealed_len, sealed_frames });
+            segments.push(SegmentMeta { uuid, base, sealed_len, sealed_frames, sealed_root });
         }
         if !r.is_empty() {
             return None; // trailing garbage: not something we wrote
@@ -205,12 +225,34 @@ pub fn publish(io: &dyn SegmentIo, log: &Path, m: &Manifest) -> io::Result<()> {
 mod tests {
     use super::*;
 
+    fn root(b: u8) -> [u8; 32] {
+        [b; 32]
+    }
+
     fn sample() -> Manifest {
         Manifest {
             segments: vec![
-                SegmentMeta { uuid: 0xA1, base: 0, sealed_len: 2_080, sealed_frames: 48 },
-                SegmentMeta { uuid: 0xB2, base: 48, sealed_len: 1_472, sealed_frames: 33 },
-                SegmentMeta { uuid: 0xC3, base: 81, sealed_len: 0, sealed_frames: 0 },
+                SegmentMeta {
+                    uuid: 0xA1,
+                    base: 0,
+                    sealed_len: 2_080,
+                    sealed_frames: 48,
+                    sealed_root: root(0x11),
+                },
+                SegmentMeta {
+                    uuid: 0xB2,
+                    base: 48,
+                    sealed_len: 1_472,
+                    sealed_frames: 33,
+                    sealed_root: root(0x22),
+                },
+                SegmentMeta {
+                    uuid: 0xC3,
+                    base: 81,
+                    sealed_len: 0,
+                    sealed_frames: 0,
+                    sealed_root: [0u8; 32],
+                },
             ],
         }
     }
@@ -228,9 +270,50 @@ mod tests {
     #[test]
     fn single_active_entry_is_valid() {
         let m = Manifest {
-            segments: vec![SegmentMeta { uuid: 7, base: 0, sealed_len: 0, sealed_frames: 0 }],
+            segments: vec![SegmentMeta {
+                uuid: 7,
+                base: 0,
+                sealed_len: 0,
+                sealed_frames: 0,
+                sealed_root: [0u8; 32],
+            }],
         };
         assert_eq!(Manifest::decode(&m.encode()), Some(m));
+    }
+
+    /// A pre-Merkle (version 1) manifest, hand-encoded byte for byte,
+    /// still decodes — with every root reported as "not recorded".
+    #[test]
+    fn v1_manifest_decodes_with_zero_roots() {
+        let want = sample();
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&MANIFEST_MAGIC);
+        varint::write_u64(&mut v1, 1); // version
+        varint::write_u64(&mut v1, want.segments.len() as u64);
+        for seg in &want.segments {
+            v1.extend_from_slice(&seg.uuid.to_le_bytes());
+            varint::write_u64(&mut v1, seg.base);
+            varint::write_u64(&mut v1, seg.sealed_len);
+            varint::write_u64(&mut v1, seg.sealed_frames);
+            // no sealed_root in v1
+        }
+        let crc = crc32::hash(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let d = Manifest::decode(&v1).expect("v1 manifest decodes");
+        assert_eq!(d.len(), want.len());
+        for (got, exp) in d.segments.iter().zip(&want.segments) {
+            assert_eq!((got.uuid, got.base), (exp.uuid, exp.base));
+            assert_eq!((got.sealed_len, got.sealed_frames), (exp.sealed_len, exp.sealed_frames));
+            assert_eq!(got.sealed_root, [0u8; 32], "v1 roots are 'not recorded'");
+        }
+        // An unknown future version is still rejected outright.
+        let mut v3 = Vec::new();
+        v3.extend_from_slice(&MANIFEST_MAGIC);
+        varint::write_u64(&mut v3, 3);
+        varint::write_u64(&mut v3, 0);
+        let crc = crc32::hash(&v3);
+        v3.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(Manifest::decode(&v3), None);
     }
 
     #[test]
@@ -268,6 +351,13 @@ mod tests {
         let mut sealed_active = sample();
         sealed_active.segments[2].sealed_len = 99;
         assert!(Manifest::decode(&sealed_active.encode()).is_none(), "sealed active accepted");
+
+        let mut rooted_active = sample();
+        rooted_active.segments[2].sealed_root = root(0x33);
+        assert!(
+            Manifest::decode(&rooted_active.encode()).is_none(),
+            "active entry with a recorded root accepted"
+        );
 
         let empty = Manifest { segments: vec![] };
         assert!(Manifest::decode(&empty.encode()).is_none(), "empty chain accepted");

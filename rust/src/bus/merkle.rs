@@ -1,0 +1,597 @@
+//! Tamper-evident Merkle commitments over durable log frames.
+//!
+//! Every committed frame contributes one **leaf** — `SHA256(0x00 ||
+//! payload)` over the frame payload (the bytes the CRC already guards;
+//! the CRC catches bit rot, the tree catches CRC-*fixed* rewrites).
+//! Leaves hash pairwise into interior nodes (`SHA256(0x01 || L || R)`),
+//! RFC 6962 style, so an unbalanced tree of `n` leaves has a unique root
+//! and every leaf an O(log n) audit path. A rotated log folds one root
+//! per segment into a **chain root** (`SHA256(0x02 || acc || next)`);
+//! a never-rotated log's chain root is its single segment root, so the
+//! legacy shape is preserved bit-for-bit.
+//!
+//! The tree itself is never written as a file of its own: the active
+//! segment's leaves ride as an aux section of the `<log>.ckpt` sidecar
+//! ([`MERKLE_AUX_KEY`], same trust rules as the TypeIndex — adopted only
+//! from a verified sidecar, rebuilt from a frame scan on any doubt), and
+//! sealing a segment freezes its subtree with the root recorded in the
+//! `<log>.manifest` entry. Appends hand back a [`Receipt`]; auditors get
+//! an [`InclusionProof`] (`logact prove` / `logact verify-receipt`).
+
+use crate::util::sha256;
+use crate::util::varint::{self, Reader};
+
+/// Domain-separation prefixes (RFC 6962 §2.1 plus a chain level): a leaf
+/// can never be confused with an interior node, nor a segment root with a
+/// chain fold.
+pub const LEAF_PREFIX: u8 = 0x00;
+pub const NODE_PREFIX: u8 = 0x01;
+pub const CHAIN_PREFIX: u8 = 0x02;
+
+/// Aux-section key the active segment's leaf list is checkpointed under
+/// in the `<log>.ckpt` sidecar (alongside e.g. the registry's
+/// `registry-namespaces` section).
+pub const MERKLE_AUX_KEY: &str = "merkle-leaves";
+
+const MERKLE_AUX_VERSION: u64 = 1;
+
+/// Leaf hash of one frame payload: `SHA256(0x00 || payload)`.
+pub fn leaf_hash(payload: &[u8]) -> [u8; 32] {
+    let mut buf = Vec::with_capacity(1 + payload.len());
+    buf.push(LEAF_PREFIX);
+    buf.extend_from_slice(payload);
+    sha256::digest(&buf)
+}
+
+/// Interior node hash: `SHA256(0x01 || left || right)`.
+pub fn node_hash(left: &[u8; 32], right: &[u8; 32]) -> [u8; 32] {
+    let mut buf = [0u8; 65];
+    buf[0] = NODE_PREFIX;
+    buf[1..33].copy_from_slice(left);
+    buf[33..65].copy_from_slice(right);
+    sha256::digest(&buf)
+}
+
+/// Root of the empty tree (RFC 6962: the hash of the empty string).
+pub fn empty_root() -> [u8; 32] {
+    sha256::digest(&[])
+}
+
+/// Fold per-segment roots into the chain root. One segment is the
+/// identity fold — a never-rotated log's chain root *is* its segment
+/// root, so adding rotation never changed what a single-segment receipt
+/// commits to.
+pub fn chain_root(roots: &[[u8; 32]]) -> [u8; 32] {
+    match roots {
+        [] => empty_root(),
+        [only] => *only,
+        [first, rest @ ..] => {
+            let mut acc = *first;
+            for r in rest {
+                let mut buf = [0u8; 65];
+                buf[0] = CHAIN_PREFIX;
+                buf[1..33].copy_from_slice(&acc);
+                buf[33..65].copy_from_slice(r);
+                acc = sha256::digest(&buf);
+            }
+            acc
+        }
+    }
+}
+
+/// Incremental RFC 6962 Merkle tree over one segment's frame leaves.
+///
+/// `levels[0]` is the leaf list; `levels[k]` holds the roots of every
+/// *complete* subtree of 2^k leaves, so `levels[k].len() == n >> k`.
+/// [`MerkleTree::push`] cascades parents while pairs complete (amortized
+/// O(1) per append); [`MerkleTree::root`] folds the odd tail of each
+/// level — the mountain-range peaks — lowest first, which is exactly the
+/// RFC 6962 `MTH` of an unbalanced tree.
+#[derive(Debug, Clone, Default)]
+pub struct MerkleTree {
+    levels: Vec<Vec<[u8; 32]>>,
+}
+
+impl MerkleTree {
+    pub fn new() -> MerkleTree {
+        MerkleTree::default()
+    }
+
+    pub fn from_leaves(leaves: impl IntoIterator<Item = [u8; 32]>) -> MerkleTree {
+        let mut t = MerkleTree::new();
+        for l in leaves {
+            t.push(l);
+        }
+        t
+    }
+
+    /// Leaf count.
+    pub fn len(&self) -> u64 {
+        self.levels.first().map_or(0, |l| l.len() as u64)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th leaf hash, if present.
+    pub fn leaf(&self, i: u64) -> Option<[u8; 32]> {
+        self.levels.first()?.get(i as usize).copied()
+    }
+
+    /// The whole leaf list (what the sidecar checkpoints).
+    pub fn leaves(&self) -> &[[u8; 32]] {
+        self.levels.first().map_or(&[], |l| l.as_slice())
+    }
+
+    /// Append one leaf, cascading interior nodes while pairs complete.
+    pub fn push(&mut self, leaf: [u8; 32]) {
+        if self.levels.is_empty() {
+            self.levels.push(Vec::new());
+        }
+        self.levels[0].push(leaf);
+        let mut k = 0;
+        while self.levels[k].len() % 2 == 0 {
+            let lvl = &self.levels[k];
+            let parent = node_hash(&lvl[lvl.len() - 2], &lvl[lvl.len() - 1]);
+            if self.levels.len() == k + 1 {
+                self.levels.push(Vec::new());
+            }
+            self.levels[k + 1].push(parent);
+            k += 1;
+        }
+    }
+
+    /// RFC 6962 `MTH` over the current leaves.
+    pub fn root(&self) -> [u8; 32] {
+        if self.is_empty() {
+            return empty_root();
+        }
+        // A level's odd tail entry is a mountain-range peak (level k has
+        // floor(n / 2^k) nodes, odd exactly when bit k of n is set); the
+        // peaks folded lowest-first reproduce MTH's recursive split.
+        let mut acc: Option<[u8; 32]> = None;
+        for lvl in &self.levels {
+            if lvl.len() % 2 == 1 {
+                let peak = *lvl.last().expect("odd level is non-empty");
+                acc = Some(match acc {
+                    None => peak,
+                    Some(right) => node_hash(&peak, &right),
+                });
+            }
+        }
+        acc.expect("non-empty tree has at least one peak")
+    }
+
+    /// Root of the (possibly incomplete) subtree of 2^k leaves at index
+    /// `idx` on level `k`; `None` if it covers no leaves at all.
+    fn subroot(&self, k: usize, idx: usize) -> Option<[u8; 32]> {
+        if ((idx as u64) << k) >= self.len() {
+            return None;
+        }
+        if let Some(h) = self.levels.get(k).and_then(|l| l.get(idx)) {
+            return Some(*h); // complete subtree: cached
+        }
+        // Incomplete: recurse. k > 0 here — level 0 holds every leaf, so
+        // an in-range leaf index is always cached above.
+        let left = self.subroot(k - 1, idx * 2)?;
+        match self.subroot(k - 1, idx * 2 + 1) {
+            Some(right) => Some(node_hash(&left, &right)),
+            None => Some(left),
+        }
+    }
+
+    /// RFC 6962 audit path for leaf `i`: the sibling subtree roots from
+    /// the leaf level upward, exactly what [`verify_path`] consumes.
+    /// `None` if `i` is out of range.
+    pub fn path(&self, i: u64) -> Option<Vec<[u8; 32]>> {
+        let n = self.len();
+        if i >= n {
+            return None;
+        }
+        let i = i as usize;
+        let mut out = Vec::new();
+        let mut k = 0usize;
+        // Stop once the subtree containing leaf i spans the whole tree.
+        while !(i >> k == 0 && (1u64 << k) >= n) {
+            if let Some(h) = self.subroot(k, (i >> k) ^ 1) {
+                out.push(h);
+            }
+            k += 1;
+        }
+        Some(out)
+    }
+}
+
+/// Verify an RFC 6962 audit path (the RFC 9162 §2.1.3.2 algorithm):
+/// does `leaf` sit at `index` in a tree of `size` leaves whose `MTH` is
+/// `root`, given the sibling hashes in `path`?
+pub fn verify_path(
+    leaf: &[u8; 32],
+    index: u64,
+    size: u64,
+    path: &[[u8; 32]],
+    root: &[u8; 32],
+) -> bool {
+    if size == 0 || index >= size {
+        return false;
+    }
+    let mut fnode = index;
+    let mut snode = size - 1;
+    let mut r = *leaf;
+    for p in path {
+        if snode == 0 {
+            return false; // path longer than the tree is tall
+        }
+        if fnode & 1 == 1 || fnode == snode {
+            r = node_hash(p, &r);
+            if fnode & 1 == 0 {
+                while fnode & 1 == 0 && fnode != 0 {
+                    fnode >>= 1;
+                    snode >>= 1;
+                }
+            }
+        } else {
+            r = node_hash(&r, p);
+        }
+        fnode >>= 1;
+        snode >>= 1;
+    }
+    snode == 0 && r == *root
+}
+
+/// What a durable append hands back: a cryptographic commitment to the
+/// log state the batch landed in. `root` is the **chain root** over every
+/// segment, so a receipt taken before a rotation still verifies after it
+/// (the sealed segment's subtree is frozen, not rehashed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Receipt {
+    /// Global position of the first record in the batch.
+    pub position: u64,
+    /// Records the batch appended.
+    pub count: u64,
+    /// Leaf hash of the batch's **last** record.
+    pub leaf: [u8; 32],
+    /// Chain root after the batch committed.
+    pub root: [u8; 32],
+    /// Append-lease epoch in force at commit time.
+    pub epoch: u64,
+}
+
+/// O(log n) proof that one record is committed under a chain root: the
+/// leaf's audit path inside its segment subtree, plus every segment root
+/// so the chain fold can be replayed. Verifying touches `path.len() +
+/// seg_roots.len()` hashes — never the log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InclusionProof {
+    /// Global position proven.
+    pub position: u64,
+    /// Chain index of the segment holding the record.
+    pub seg_index: usize,
+    /// Leaf count of that segment's subtree.
+    pub seg_size: u64,
+    /// Leaf index of the record inside the segment.
+    pub leaf_index: u64,
+    /// Leaf hash of the record's payload.
+    pub leaf: [u8; 32],
+    /// Audit path inside the segment subtree.
+    pub path: Vec<[u8; 32]>,
+    /// Every segment root in chain order; entry `seg_index` must be
+    /// recomputable from `leaf` + `path`.
+    pub seg_roots: Vec<[u8; 32]>,
+    /// The chain root the proof commits to.
+    pub root: [u8; 32],
+}
+
+impl InclusionProof {
+    /// Structural verification: the leaf + path reproduce segment root
+    /// `seg_roots[seg_index]`, and the segment roots fold to `root`. A
+    /// single flipped bit anywhere in the proof fails this.
+    pub fn verify(&self) -> bool {
+        let claimed = match self.seg_roots.get(self.seg_index) {
+            Some(r) => r,
+            None => return false,
+        };
+        verify_path(&self.leaf, self.leaf_index, self.seg_size, &self.path, claimed)
+            && chain_root(&self.seg_roots) == self.root
+    }
+
+    /// Full verification against the record bytes and a root obtained
+    /// out of band (a receipt, a published checkpoint).
+    pub fn verify_record(&self, payload: &[u8], trusted_root: &[u8; 32]) -> bool {
+        self.verify() && leaf_hash(payload) == self.leaf && self.root == *trusted_root
+    }
+}
+
+/// Serialize a leaf list for the sidecar aux section: varint version,
+/// varint count, then the raw 32-byte leaves.
+pub fn encode_leaves(leaves: &[[u8; 32]]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + leaves.len() * 32);
+    varint::write_u64(&mut out, MERKLE_AUX_VERSION);
+    varint::write_u64(&mut out, leaves.len() as u64);
+    for l in leaves {
+        out.extend_from_slice(l);
+    }
+    out
+}
+
+/// Decode [`encode_leaves`]. `None` on version skew, truncation, a count
+/// the remaining bytes cannot hold (bounding the allocation), or
+/// trailing garbage — any damage means "rebuild from a frame scan",
+/// never "trust a short list".
+pub fn decode_leaves(bytes: &[u8]) -> Option<Vec<[u8; 32]>> {
+    let mut r = Reader::new(bytes);
+    if r.read_u64()? != MERKLE_AUX_VERSION {
+        return None;
+    }
+    let n = r.read_u64()?;
+    if n != (r.remaining() as u64) / 32 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let mut h = [0u8; 32];
+        h.copy_from_slice(r.read_exact(32)?);
+        out.push(h);
+    }
+    if !r.is_empty() {
+        return None;
+    }
+    Some(out)
+}
+
+/// Lowercase hex of a 32-byte hash (receipts, proofs, the CLI).
+pub fn hex32(h: &[u8; 32]) -> String {
+    h.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Parse [`hex32`] output. `None` unless exactly 64 hex digits.
+pub fn parse_hex32(s: &str) -> Option<[u8; 32]> {
+    let s = s.trim();
+    if s.len() != 64 || !s.is_ascii() {
+        return None;
+    }
+    let mut out = [0u8; 32];
+    for (i, chunk) in s.as_bytes().chunks_exact(2).enumerate() {
+        let hi = (chunk[0] as char).to_digit(16)?;
+        let lo = (chunk[1] as char).to_digit(16)?;
+        out[i] = (hi * 16 + lo) as u8;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference MTH straight from RFC 6962 §2.1: recursive split at the
+    /// largest power of two strictly less than n.
+    fn mth(leaves: &[[u8; 32]]) -> [u8; 32] {
+        match leaves.len() {
+            0 => empty_root(),
+            1 => leaves[0],
+            n => {
+                let mut k = 1usize;
+                while k * 2 < n {
+                    k *= 2;
+                }
+                node_hash(&mth(&leaves[..k]), &mth(&leaves[k..]))
+            }
+        }
+    }
+
+    fn leaves(n: u64) -> Vec<[u8; 32]> {
+        (0..n).map(|i| leaf_hash(format!("record-{i}").as_bytes())).collect()
+    }
+
+    #[test]
+    fn incremental_root_matches_reference_mth_at_every_size() {
+        let ls = leaves(130);
+        let mut t = MerkleTree::new();
+        assert_eq!(t.root(), empty_root());
+        for (i, l) in ls.iter().enumerate() {
+            t.push(*l);
+            assert_eq!(t.len(), i as u64 + 1);
+            assert_eq!(t.root(), mth(&ls[..=i]), "root diverges at n={}", i + 1);
+        }
+        assert_eq!(t.leaves(), &ls[..]);
+    }
+
+    #[test]
+    fn every_path_verifies_and_no_other_slot_does() {
+        for n in [1u64, 2, 3, 5, 8, 13, 64, 65] {
+            let t = MerkleTree::from_leaves(leaves(n));
+            let root = t.root();
+            for i in 0..n {
+                let path = t.path(i).expect("in-range leaf has a path");
+                assert!(
+                    path.len() as u64 <= 64 - (n - 1).leading_zeros() as u64 + 1,
+                    "path is O(log n)"
+                );
+                let leaf = t.leaf(i).unwrap();
+                assert!(verify_path(&leaf, i, n, &path, &root), "n={n} i={i}");
+                // The same path must not prove the leaf at any other index.
+                for j in 0..n {
+                    if j != i {
+                        assert!(!verify_path(&leaf, j, n, &path, &root), "n={n} i={i} j={j}");
+                    }
+                }
+            }
+            assert_eq!(t.path(n), None, "out-of-range leaf has no path");
+        }
+    }
+
+    #[test]
+    fn flipping_any_path_root_or_leaf_bit_breaks_verification() {
+        let t = MerkleTree::from_leaves(leaves(11));
+        let root = t.root();
+        let i = 6u64;
+        let path = t.path(i).unwrap();
+        let leaf = t.leaf(i).unwrap();
+        for elem in 0..path.len() {
+            for bit in [0u8, 7, 255] {
+                let mut bad = path.clone();
+                bad[elem][bit as usize / 8] ^= 1 << (bit % 8);
+                assert!(!verify_path(&leaf, i, 11, &bad, &root));
+            }
+        }
+        let mut bad_root = root;
+        bad_root[0] ^= 0x01;
+        assert!(!verify_path(&leaf, i, 11, &path, &bad_root));
+        let mut bad_leaf = leaf;
+        bad_leaf[31] ^= 0x80;
+        assert!(!verify_path(&bad_leaf, i, 11, &path, &root));
+        // Truncated and over-long paths fail too.
+        assert!(!verify_path(&leaf, i, 11, &path[..path.len() - 1], &root));
+        let mut long = path.clone();
+        long.push(root);
+        assert!(!verify_path(&leaf, i, 11, &long, &root));
+    }
+
+    #[test]
+    fn chain_root_is_identity_for_one_segment_and_order_sensitive() {
+        let a = leaf_hash(b"a");
+        let b = leaf_hash(b"b");
+        assert_eq!(chain_root(&[]), empty_root());
+        assert_eq!(chain_root(&[a]), a, "single segment keeps the legacy shape");
+        assert_ne!(chain_root(&[a, b]), chain_root(&[b, a]));
+        // The chain fold is domain-separated from interior nodes.
+        assert_ne!(chain_root(&[a, b]), node_hash(&a, &b));
+    }
+
+    #[test]
+    fn leaf_node_and_chain_domains_never_collide() {
+        // A leaf over bytes that *look* like an interior preimage still
+        // differs from the node hash, because of the prefix byte.
+        let l = leaf_hash(b"x");
+        let r = leaf_hash(b"y");
+        let mut preimage = Vec::new();
+        preimage.extend_from_slice(&l);
+        preimage.extend_from_slice(&r);
+        assert_ne!(leaf_hash(&preimage), node_hash(&l, &r));
+    }
+
+    #[test]
+    fn leaf_codec_roundtrips_and_rejects_all_damage() {
+        for n in [0u64, 1, 2, 7, 33] {
+            let ls = leaves(n);
+            let enc = encode_leaves(&ls);
+            assert_eq!(decode_leaves(&enc), Some(ls));
+            // Every truncation rejected.
+            for cut in 0..enc.len() {
+                assert_eq!(decode_leaves(&enc[..cut]), None, "n={n} cut={cut}");
+            }
+            // Trailing garbage rejected.
+            let mut long = enc.clone();
+            long.push(0);
+            assert_eq!(decode_leaves(&long), None);
+        }
+        // Version skew rejected.
+        let mut skew = Vec::new();
+        varint::write_u64(&mut skew, MERKLE_AUX_VERSION + 1);
+        varint::write_u64(&mut skew, 0);
+        assert_eq!(decode_leaves(&skew), None);
+        // A count mismatching the byte payload is rejected both ways.
+        let ls = leaves(3);
+        let mut enc = Vec::new();
+        varint::write_u64(&mut enc, MERKLE_AUX_VERSION);
+        varint::write_u64(&mut enc, 4); // claims one more than present
+        for l in &ls {
+            enc.extend_from_slice(l);
+        }
+        assert_eq!(decode_leaves(&enc), None);
+    }
+
+    #[test]
+    fn property_random_batches_roundtrip_receipts_and_proofs() {
+        let mut rng = Rng::new(0x6d65726b);
+        for case in 0..40 {
+            let n = 1 + rng.gen_range(200);
+            let payloads: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let len = rng.gen_range(64) as usize;
+                    (0..len).map(|_| rng.next_u64() as u8).collect()
+                })
+                .collect();
+            let t = MerkleTree::from_leaves(payloads.iter().map(|p| leaf_hash(p)));
+            let root = t.root();
+            // Every position proves, and the serialized leaves survive a
+            // codec round trip into an identical tree.
+            let re = MerkleTree::from_leaves(decode_leaves(&encode_leaves(t.leaves())).unwrap());
+            assert_eq!(re.root(), root, "case {case}");
+            for i in 0..n {
+                let path = t.path(i).unwrap();
+                assert!(verify_path(&leaf_hash(&payloads[i as usize]), i, n, &path, &root));
+            }
+            // One random bit flip in the serialized section is rejected
+            // outright or decodes to a tree with a different root.
+            let mut enc = encode_leaves(t.leaves());
+            let bit = rng.gen_range(enc.len() as u64 * 8);
+            enc[(bit / 8) as usize] ^= 1 << (bit % 8);
+            match decode_leaves(&enc) {
+                None => {}
+                Some(ls) => {
+                    assert_ne!(MerkleTree::from_leaves(ls).root(), root, "case {case} bit {bit}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn proof_object_verifies_and_any_field_tamper_fails() {
+        // Three "segments" of 5, 4 and 3 leaves; prove a record in the middle one.
+        let segs: Vec<MerkleTree> = [5u64, 4, 3]
+            .iter()
+            .scan(0u64, |base, &n| {
+                let t =
+                    MerkleTree::from_leaves((0..n).map(|i| leaf_hash(format!("s{base}-{i}").as_bytes())));
+                *base += n;
+                Some(t)
+            })
+            .collect();
+        let seg_roots: Vec<[u8; 32]> = segs.iter().map(|t| t.root()).collect();
+        let root = chain_root(&seg_roots);
+        let proof = InclusionProof {
+            position: 7,
+            seg_index: 1,
+            seg_size: 4,
+            leaf_index: 2,
+            leaf: segs[1].leaf(2).unwrap(),
+            path: segs[1].path(2).unwrap(),
+            seg_roots: seg_roots.clone(),
+            root,
+        };
+        assert!(proof.verify());
+        assert!(proof.verify_record(b"s5-2", &root));
+        assert!(!proof.verify_record(b"s5-2", &seg_roots[1]), "wrong trusted root");
+        assert!(!proof.verify_record(b"s5-3", &root), "wrong payload");
+        for (name, bad) in [
+            ("leaf_index", InclusionProof { leaf_index: 1, ..proof.clone() }),
+            ("seg_size", InclusionProof { seg_size: 5, ..proof.clone() }),
+            ("seg_index", InclusionProof { seg_index: 0, ..proof.clone() }),
+            ("seg_index oob", InclusionProof { seg_index: 9, ..proof.clone() }),
+            ("root", InclusionProof { root: seg_roots[0], ..proof.clone() }),
+            (
+                "seg_roots",
+                InclusionProof {
+                    seg_roots: vec![seg_roots[1], seg_roots[0], seg_roots[2]],
+                    ..proof.clone()
+                },
+            ),
+        ] {
+            assert!(!bad.verify(), "tampered {name} must fail");
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejection() {
+        let h = leaf_hash(b"hex");
+        assert_eq!(parse_hex32(&hex32(&h)), Some(h));
+        assert_eq!(parse_hex32(&hex32(&h).to_uppercase()), Some(h));
+        assert_eq!(parse_hex32("deadbeef"), None, "too short");
+        let mut bad = hex32(&h);
+        bad.replace_range(10..11, "g");
+        assert_eq!(parse_hex32(&bad), None, "non-hex digit");
+    }
+}

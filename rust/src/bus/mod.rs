@@ -43,6 +43,14 @@
 //! epoch-stamped `<log>.lease` ([`lease`]): open acquires it, every
 //! commit and flush revalidates it, and a superseded holder gets a typed
 //! [`lease::Fenced`] error instead of forking the segment.
+//!
+//! The durable log is **tamper-evident**: an incremental [`merkle`] tree
+//! over frame payload hashes rides the sidecar (active segment) and the
+//! manifest (sealed segment roots). Every committed batch yields a
+//! [`merkle::Receipt`], any record gets an O(log n)
+//! [`merkle::InclusionProof`], and [`DurableBackend::verify`] is
+//! root-check-first with a full per-frame scan only as the localization
+//! fallback.
 
 pub mod acl;
 pub mod backend;
@@ -54,6 +62,7 @@ pub mod io;
 pub mod lease;
 pub mod manifest;
 pub mod mem;
+pub mod merkle;
 pub mod registry;
 pub mod remote;
 
@@ -67,5 +76,6 @@ pub use io::{FaultIo, FaultMode, FsIo, IoOp, SegmentIo};
 pub use lease::{Fenced, LeaseConfig, LeaseRecord};
 pub use manifest::{Manifest, SegmentMeta};
 pub use mem::MemBackend;
+pub use merkle::{InclusionProof, MerkleTree, Receipt};
 pub use registry::{BusRegistry, NamespacedBackend, DEFAULT_REGISTRY_SHARDS};
 pub use remote::{LatencyProfile, RemoteBackend};

@@ -13,7 +13,12 @@
 //!   audit for rotated logs (`<log>.manifest` validation, per-segment
 //!   chain-link preambles, sealed length/frame-count agreement, orphan
 //!   segments past the manifest — codes `corrupt-manifest`,
-//!   `chain-break`, `manifest-length-mismatch`, `stale-manifest`), and
+//!   `chain-break`, `manifest-length-mismatch`, `stale-manifest`), the
+//!   Merkle tamper audit (`merkle-root-mismatch` when a sealed segment
+//!   no longer folds to its manifest-frozen root or a sidecar leaf
+//!   disagrees with the frame it checkpoints — the CRC-consistent
+//!   rewrite no CRC check can see; `merkle-stale-checkpoint` when the
+//!   sidecar's leaf list lags its own checkpoint), and
 //!   the LogAct protocol invariants over the typed entries: every
 //!   `Vote`/`Commit`/`Abort`/`Result` resolves its `intent_pos` to an
 //!   earlier `Intent`, no `Commit`+`Abort` conflict, no `Result` before
@@ -28,18 +33,22 @@
 //!
 //! Findings are typed ([`Severity::Error`] / [`Severity::Warn`]) and
 //! positioned; reports render as a human table (`util::tables`) or as
-//! JSON for CI (`--json`). [`crate::bus::DurableBackend::verify`] is a
-//! thin wrapper over [`scrub::scan_frames`], so the crate has exactly one
-//! integrity-scan path. This findings engine is the stepping stone for
-//! the ROADMAP's tamper-evident Merkle receipts: receipts will hang off
-//! the same scrub walk.
+//! JSON for CI (`--json`). [`crate::bus::DurableBackend::verify`] uses
+//! [`scrub::scan_frames`] as its localization fallback behind the
+//! root-check-first pass, so the crate has exactly one integrity-scan
+//! walk. The scrub also powers the read-only proof path:
+//! [`scrub::offline_prove`] builds `logact prove`'s inclusion proofs
+//! without opening the backend (no lease, no truncation).
 
 pub mod protocol;
 pub mod scrub;
 pub mod source;
 
 pub use protocol::lint_entries;
-pub use scrub::{lint_log_file, lint_log_file_with_io, lint_registry_file, scan_frames};
+pub use scrub::{
+    chain_root_at, collect_chain_leaves, lint_log_file, lint_log_file_with_io,
+    lint_registry_file, offline_prove, scan_frames, SegmentLeaves,
+};
 pub use source::lint_sources;
 
 use crate::util::json::Json;

@@ -9,9 +9,20 @@
 //! so one mid-log bit flip yields one `crc-mismatch` finding instead of
 //! hiding everything after it.
 //!
-//! [`scan_frames`] is the single integrity-scan implementation in the
-//! crate — [`DurableBackend::verify`](crate::bus::DurableBackend::verify)
-//! is a thin wrapper over it.
+//! [`scan_frames`] is the single integrity-scan *walk* in the crate —
+//! [`DurableBackend::verify`](crate::bus::DurableBackend::verify) uses
+//! it as the localization fallback behind its root-check-first pass, and
+//! the scrub's Merkle findings recompute the same leaves the backend
+//! maintains: `merkle-root-mismatch` (a sealed segment's bytes no longer
+//! fold to the manifest's frozen root, or a sidecar leaf disagrees with
+//! the frame it checkpoints — the CRC-consistent-rewrite case no CRC
+//! check can see) and `merkle-stale-checkpoint` (the sidecar's leaf list
+//! covers fewer frames than its own checkpoint).
+//!
+//! [`offline_prove`] builds an O(log n) [`InclusionProof`] straight off
+//! the files — sidecar leaf lists where they verify, a frame scan only
+//! as fallback, one point-read for the proven record, no backend open
+//! and no lease touch.
 
 use super::{lint_entries, Finding, Report};
 use crate::bus::checkpoint::{
@@ -23,6 +34,7 @@ use crate::bus::manifest;
 use crate::bus::entry::Entry;
 use crate::bus::io::{FsIo, SegmentIo};
 use crate::bus::lease::{lease_path, LeaseRecord, DEFAULT_TTL_MS};
+use crate::bus::merkle::{self, InclusionProof, MerkleTree};
 use crate::bus::registry::decode as split_namespaced;
 use crate::bus::TypeIndex;
 use crate::util::clock::Clock;
@@ -466,6 +478,7 @@ fn audit_chain(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Resu
         }
 
         // Per-segment sidecar (sealed segments got theirs at seal time).
+        let pre_sidecar = report.findings.len();
         if let Some(uuid) = uuid {
             match io.read_file(&sidecar_path(&sp)) {
                 Err(_) => {
@@ -488,6 +501,41 @@ fn audit_chain(io: &dyn SegmentIo, path: &Path, report: &mut Report) -> io::Resu
             }
             if i == 0 {
                 lease_epoch = audit_lease(io, path, uuid, report);
+            }
+        }
+
+        // Sealed-root audit (v2 manifests record each sealed segment's
+        // frozen subtree root; v1 entries carry the all-zero "not
+        // recorded" root and are silent). Recomputing the root from the
+        // scanned frames catches the one tamper class no CRC check can:
+        // a rewrite that updates payload and CRC together. Gated on a
+        // structurally clean seal — any length or CRC finding above
+        // already explains a root disagreement — and on the sidecar
+        // audit not having flagged the tree already (one tamper, one
+        // finding: the seal-time sidecar checkpoints the same leaves, so
+        // a sealed-bytes rewrite trips its leaf compare first).
+        if sealed
+            && meta.sealed_root != [0u8; 32]
+            && !short_seal
+            && scan.end == meta.sealed_len
+            && scan.frames.len() as u64 == meta.sealed_frames
+            && scan.frames.iter().all(|f| f.crc_ok)
+            && !report.findings[pre_sidecar..].iter().any(|f| f.code == "merkle-root-mismatch")
+        {
+            let disk = MerkleTree::from_leaves(
+                scan.frames.iter().map(|f| merkle::leaf_hash(&f.payload)),
+            );
+            if disk.root() != meta.sealed_root {
+                report.findings.push(Finding::error(
+                    "merkle-root-mismatch",
+                    format!(
+                        "sealed segment {i} recomputes Merkle root {} but the manifest froze \
+                         {} — sealed bytes were rewritten CRC-consistently, or the manifest \
+                         root itself was tampered",
+                        merkle::hex32(&disk.root()),
+                        merkle::hex32(&meta.sealed_root)
+                    ),
+                ));
             }
         }
         segments.push((meta.base, scan));
@@ -723,6 +771,66 @@ fn audit_sidecar(
             ));
         }
     }
+    // Merkle leaf-list cross-check. An absent section is silent (sidecars
+    // predate the tree); a present one must decode, cover exactly the
+    // checkpointed frames, and agree leaf-by-leaf with hashes recomputed
+    // from the segment — a sidecar whose leaves lie would hand reopen a
+    // tree that issues false proofs. Per-leaf comparison is skipped on a
+    // rotted prefix for the same reason as the TypeIndex check.
+    if let Some(mb) = c.aux.get(merkle::MERKLE_AUX_KEY) {
+        match merkle::decode_leaves(mb) {
+            None => report.findings.push(Finding::error(
+                "merkle-root-mismatch",
+                "sidecar Merkle section fails to decode: reopen would rebuild the tree from \
+                 a frame scan, losing nothing, but the checkpointed tree is untrustworthy",
+            )),
+            Some(leaves) if leaves.len() < ck_frames.len() => {
+                report.findings.push(Finding::warn(
+                    "merkle-stale-checkpoint",
+                    format!(
+                        "sidecar Merkle section holds {} leaves but the checkpoint indexes {} \
+                         frames — the tree lags its own checkpoint (reopen rebuilds from a \
+                         frame scan)",
+                        leaves.len(),
+                        ck_frames.len()
+                    ),
+                ));
+            }
+            Some(leaves) if leaves.len() > ck_frames.len() => {
+                report.findings.push(Finding::error(
+                    "merkle-root-mismatch",
+                    format!(
+                        "sidecar Merkle section holds {} leaves for {} checkpointed frames — \
+                         it attests records the checkpoint does not index",
+                        leaves.len(),
+                        ck_frames.len()
+                    ),
+                ));
+            }
+            Some(leaves) if !prefix_rot => {
+                for (i, leaf) in leaves.iter().enumerate() {
+                    if *leaf != merkle::leaf_hash(&scan.frames[i].payload) {
+                        report.findings.push(
+                            Finding::error(
+                                "merkle-root-mismatch",
+                                format!(
+                                    "sidecar Merkle leaf {i} is {} but the frame on disk \
+                                     hashes to {} — the checkpointed tree would prove bytes \
+                                     the segment does not hold",
+                                    merkle::hex32(leaf),
+                                    merkle::hex32(&merkle::leaf_hash(&scan.frames[i].payload))
+                                ),
+                            )
+                            .at(base + i as u64)
+                            .offset(scan.frames[i].offset),
+                        );
+                        break;
+                    }
+                }
+            }
+            Some(_) => {} // rotted prefix: crc-mismatch dominates
+        }
+    }
     if c.log_len < scan.end {
         report.findings.push(Finding::warn(
             "stale-sidecar",
@@ -735,4 +843,202 @@ fn audit_sidecar(
             ),
         ));
     }
+}
+
+/// One segment's leaf material, collected read-only by
+/// [`collect_chain_leaves`]: global base position, frame layout for
+/// point reads, the segment's Merkle subtree, and the open read handle.
+pub struct SegmentLeaves {
+    /// Global position of this segment's first record.
+    pub base: u64,
+    /// `(header offset, payload len)` of every frame, in order.
+    pub frames: Vec<(u64, u32)>,
+    /// Subtree over the segment's frame payload hashes.
+    pub tree: MerkleTree,
+    /// Read handle, for point-reading proven records.
+    pub file: File,
+}
+
+/// Collect one segment's frames and leaves without mutating anything.
+/// The sidecar's checkpointed leaf list is adopted when it identifies
+/// this segment and covers a prefix of it (only the tail past the
+/// checkpoint is then scanned); any doubt falls back to a full frame
+/// scan — the same trust rule reopen uses.
+fn segment_leaves(
+    io: &dyn SegmentIo,
+    sp: &Path,
+    root_seg: bool,
+    limit: Option<u64>,
+    base: u64,
+    manifest_uuid: Option<u128>,
+) -> io::Result<SegmentLeaves> {
+    let file = io.open_read(sp)?;
+    let file_len = io.file_len(&file)?;
+    let (data_start, uuid) = if root_seg {
+        if file_len >= PREAMBLE_LEN {
+            let mut head = [0u8; PREAMBLE_LEN as usize];
+            io.read_exact_at(&file, &mut head, 0)?;
+            match check_preamble(&head) {
+                PreambleCheck::Valid(u) => (PREAMBLE_LEN, Some(manifest_uuid.unwrap_or(u))),
+                PreambleCheck::Damaged => (PREAMBLE_LEN, None),
+                PreambleCheck::Absent => (0, Some(0)),
+            }
+        } else {
+            (0, Some(0))
+        }
+    } else {
+        (PREAMBLE_V2_LEN.min(file_len), manifest_uuid)
+    };
+    let scan_to = limit.map_or(file_len, |l| l.min(file_len));
+
+    // Fast path: adopt the checkpointed leaf list.
+    if let (Some(uuid), Ok(bytes)) = (uuid, io.read_file(&sidecar_path(sp))) {
+        if let Some(c) = Checkpoint::decode(&bytes) {
+            if c.uuid == uuid && c.data_start == data_start && c.log_len <= scan_to {
+                let leaves = c
+                    .aux
+                    .get(merkle::MERKLE_AUX_KEY)
+                    .and_then(|mb| merkle::decode_leaves(mb));
+                if let (Some(ck_frames), Some(leaves)) = (c.frames(), leaves) {
+                    if leaves.len() == ck_frames.len() {
+                        let mut frames = ck_frames;
+                        let mut tree = MerkleTree::from_leaves(leaves);
+                        let tail = scan_frames(io, &file, c.log_len, scan_to)?;
+                        for f in &tail.frames {
+                            frames.push((f.offset, f.len));
+                            tree.push(merkle::leaf_hash(&f.payload));
+                        }
+                        return Ok(SegmentLeaves { base, frames, tree, file });
+                    }
+                }
+            }
+        }
+    }
+
+    // Fallback: full frame scan.
+    let scan = scan_frames(io, &file, data_start.min(scan_to), scan_to)?;
+    let mut frames = Vec::with_capacity(scan.frames.len());
+    let mut tree = MerkleTree::new();
+    for f in &scan.frames {
+        frames.push((f.offset, f.len));
+        tree.push(merkle::leaf_hash(&f.payload));
+    }
+    Ok(SegmentLeaves { base, frames, tree, file })
+}
+
+/// Collect every segment of a (possibly rotated) log, read-only — no
+/// lease acquisition, no tail truncation, safe on a log another process
+/// holds. The outer `Err` is an I/O failure; the inner `Err` is an audit
+/// verdict (corrupt manifest, seal disagreement) in words.
+pub fn collect_chain_leaves(
+    io: &dyn SegmentIo,
+    path: &Path,
+) -> io::Result<Result<Vec<SegmentLeaves>, String>> {
+    let m = match manifest::load(io, path) {
+        Ok(m) => m,
+        Err(e) => return Ok(Err(format!("corrupt manifest: {e}"))),
+    };
+    let Some(m) = m else {
+        return Ok(Ok(vec![segment_leaves(io, path, true, None, 0, None)?]));
+    };
+    let n = m.segments.len();
+    let mut out = Vec::with_capacity(n);
+    for (i, meta) in m.segments.iter().enumerate() {
+        let sp = manifest::segment_path(path, i);
+        let sealed = i + 1 < n;
+        let limit = if sealed { Some(meta.sealed_len) } else { None };
+        let seg = segment_leaves(io, &sp, i == 0, limit, meta.base, Some(meta.uuid))?;
+        if sealed && seg.frames.len() as u64 != meta.sealed_frames {
+            return Ok(Err(format!(
+                "sealed segment {i} lays out {} frames but the manifest sealed {} — run \
+                 `logact lint` for the full audit",
+                seg.frames.len(),
+                meta.sealed_frames
+            )));
+        }
+        if sealed && meta.sealed_root != [0u8; 32] && seg.tree.root() != meta.sealed_root {
+            return Ok(Err(format!(
+                "sealed segment {i} recomputes Merkle root {} but the manifest froze {} — \
+                 refusing to prove over tampered history (run `logact lint`)",
+                merkle::hex32(&seg.tree.root()),
+                merkle::hex32(&meta.sealed_root)
+            )));
+        }
+        out.push(seg);
+    }
+    Ok(Ok(out))
+}
+
+/// Chain root as of global tail `tail`: whole subtree roots for fully
+/// covered segments, a truncated-prefix root for the segment the tail
+/// lands in. Mirrors the backend's receipt-root reconstruction. `None`
+/// when the log never reached `tail`.
+pub fn chain_root_at(segs: &[SegmentLeaves], tail: u64) -> Option<[u8; 32]> {
+    let have: u64 = segs.iter().map(|s| s.frames.len() as u64).sum();
+    if tail > have {
+        return None;
+    }
+    let mut roots = Vec::new();
+    for s in segs {
+        if tail <= s.base {
+            break;
+        }
+        let take = ((tail - s.base) as usize).min(s.frames.len());
+        if take == 0 {
+            continue;
+        }
+        if take == s.frames.len() {
+            roots.push(s.tree.root());
+        } else {
+            roots.push(MerkleTree::from_leaves(s.tree.leaves()[..take].iter().copied()).root());
+        }
+    }
+    Some(merkle::chain_root(&roots))
+}
+
+/// Build an [`InclusionProof`] for global position `pos` straight off
+/// the log's files, plus the proven record's payload (one point read —
+/// O(log n) work past the leaf collection, no backend open) and the
+/// chain's record tail, so a caller holding one proof can synthesize a
+/// whole-log receipt without a second walk. The outer `Err` is an I/O
+/// failure; the inner `Err` an audit verdict.
+pub fn offline_prove(
+    io: &dyn SegmentIo,
+    path: &Path,
+    pos: u64,
+) -> io::Result<Result<(InclusionProof, Vec<u8>, u64), String>> {
+    let segs = match collect_chain_leaves(io, path)? {
+        Ok(s) => s,
+        Err(e) => return Ok(Err(e)),
+    };
+    let total: u64 = segs.iter().map(|s| s.frames.len() as u64).sum();
+    let Some((si, seg)) = segs
+        .iter()
+        .enumerate()
+        .find(|(_, s)| pos >= s.base && pos < s.base + s.frames.len() as u64)
+    else {
+        return Ok(Err(format!("position {pos} is past the tail ({total} records)")));
+    };
+    let li = pos - seg.base;
+    let leaf = seg.tree.leaves()[li as usize];
+    let path_nodes = seg.tree.path(li).expect("located frame has a path");
+    // Only a trailing empty active segment is ever filtered out, so the
+    // located segment's index survives the filter unchanged.
+    let seg_roots: Vec<[u8; 32]> =
+        segs.iter().filter(|s| !s.tree.is_empty()).map(|s| s.tree.root()).collect();
+    let root = merkle::chain_root(&seg_roots);
+    let (off, len) = seg.frames[li as usize];
+    let mut payload = vec![0u8; len as usize];
+    io.read_exact_at(&seg.file, &mut payload, off + FRAME_HEADER as u64)?;
+    let proof = InclusionProof {
+        position: pos,
+        seg_index: si,
+        seg_size: seg.frames.len() as u64,
+        leaf_index: li,
+        leaf,
+        path: path_nodes,
+        seg_roots,
+        root,
+    };
+    Ok(Ok((proof, payload, total)))
 }

@@ -10,6 +10,9 @@
 //!   lint <log> | --registry <log> | --src <dir>   offline analyzer
 //!   lease <log>             inspect the <log>.lease append lease
 //!   segments <log>          inspect the <log>.manifest segment chain
+//!   prove <log> <pos>       O(log n) Merkle inclusion proof for a record
+//!   verify-receipt <log> --position P --count N --leaf H --root H
+//!                           re-check an append receipt against the log
 //!
 //! (clap is unavailable offline; argument parsing is hand-rolled.)
 
@@ -40,8 +43,10 @@ fn main() {
         Some("lint") => lint(&args),
         Some("lease") => lease_cmd(&args),
         Some("segments") => segments_cmd(&args),
+        Some("prove") => prove_cmd(&args),
+        Some("verify-receipt") => verify_receipt_cmd(&args),
         _ => {
-            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease|segments> [flags]");
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease|segments|prove|verify-receipt> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
             eprintln!("  swarm   --seed S [--shared] [--log <path>] [--rotate-bytes N]");
@@ -59,6 +64,14 @@ fn main() {
             eprintln!("  segments <log>  the segment chain the <log>.manifest records");
             eprintln!("          (single-segment logs have no manifest); exits 1 if the");
             eprintln!("          manifest is corrupt");
+            eprintln!("  prove   <log> <pos> [--json]   build and check an O(log n) Merkle");
+            eprintln!("          inclusion proof for the record at <pos>, read-only (no");
+            eprintln!("          lease, no truncation); exits 1 if the proof fails or the");
+            eprintln!("          chain fails its seal audit");
+            eprintln!("  verify-receipt <log> --position P --count N --leaf HEX --root HEX");
+            eprintln!("          re-check an append_batch receipt: the batch's last record");
+            eprintln!("          must still hash to --leaf and the chain root as of");
+            eprintln!("          P+N must reproduce --root; exits 1 on any mismatch");
             std::process::exit(2);
         }
     }
@@ -337,6 +350,176 @@ fn segments_cmd(args: &[String]) {
         ]);
     }
     println!("{}", t.to_markdown());
+}
+
+/// `prove <log> <pos> [--json]` — build an inclusion proof for the
+/// record at global position `pos`, entirely read-only (the backend is
+/// never opened: no lease acquisition, no torn-tail truncation — safe on
+/// a log another process holds). The proof is self-checked against the
+/// point-read payload before printing. Exit codes: 0 proven, 1 the chain
+/// fails its seal audit or the proof does not verify, 2 usage/IO error.
+fn prove_cmd(args: &[String]) {
+    use logact::bus::merkle::hex32;
+    use logact::bus::FsIo;
+    use logact::util::json::Json;
+    let json = args.iter().any(|a| a == "--json");
+    let mut pos_args = args.iter().skip(1).filter(|a| !a.starts_with("--"));
+    let (Some(log), Some(pos)) = (pos_args.next(), pos_args.next()) else {
+        eprintln!("prove: pass a log path and a record position");
+        std::process::exit(2);
+    };
+    let Ok(pos) = pos.parse::<u64>() else {
+        eprintln!("prove: position must be an unsigned integer, got '{pos}'");
+        std::process::exit(2);
+    };
+    let outcome = match logact::lint::offline_prove(&FsIo, std::path::Path::new(log), pos) {
+        Err(e) => {
+            eprintln!("prove: cannot read {log}: {e}");
+            std::process::exit(2);
+        }
+        Ok(o) => o,
+    };
+    let (proof, payload, tail) = match outcome {
+        Err(verdict) => {
+            eprintln!("prove: {verdict}");
+            std::process::exit(1);
+        }
+        Ok(v) => v,
+    };
+    let ok = proof.verify_record(&payload, &proof.root);
+    if json {
+        let hashes = |hs: &[[u8; 32]]| Json::Arr(hs.iter().map(|h| Json::str(hex32(h))).collect());
+        println!(
+            "{}",
+            Json::obj(vec![(
+                "proof",
+                Json::obj(vec![
+                    ("position", Json::Int(proof.position as i64)),
+                    ("seg_index", Json::Int(proof.seg_index as i64)),
+                    ("seg_size", Json::Int(proof.seg_size as i64)),
+                    ("leaf_index", Json::Int(proof.leaf_index as i64)),
+                    ("leaf", Json::str(hex32(&proof.leaf))),
+                    ("path", hashes(&proof.path)),
+                    ("seg_roots", hashes(&proof.seg_roots)),
+                    ("root", Json::str(hex32(&proof.root))),
+                    ("tail", Json::Int(tail as i64)),
+                    ("payload_bytes", Json::Int(payload.len() as i64)),
+                    ("verified", Json::Bool(ok)),
+                ]),
+            )])
+        );
+    } else {
+        println!("record {} of {log}:", proof.position);
+        println!("  segment     {} (leaf {} of {})", proof.seg_index, proof.leaf_index, proof.seg_size);
+        println!("  leaf        {}", hex32(&proof.leaf));
+        for (i, h) in proof.path.iter().enumerate() {
+            println!("  path[{i}]     {}", hex32(h));
+        }
+        for (i, h) in proof.seg_roots.iter().enumerate() {
+            println!("  seg_root[{i}] {}", hex32(h));
+        }
+        println!("  chain root  {}", hex32(&proof.root));
+        println!("  chain tail  {tail} records");
+        println!("  payload     {} bytes", payload.len());
+        println!("  verified    {}", if ok { "yes" } else { "NO" });
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+/// `verify-receipt <log> --position P --count N --leaf HEX --root HEX` —
+/// re-check a receipt returned by `append_batch` against the log as it
+/// now stands, read-only. The receipted batch's last record must still
+/// hash to the receipted leaf, and the chain root as of the receipt's
+/// tail (P+N) must reproduce the receipted root — any rewrite of history
+/// under the receipt, even CRC-consistent, breaks the reconstruction.
+/// Exit codes: 0 verified, 1 mismatch or audit failure, 2 usage/IO.
+fn verify_receipt_cmd(args: &[String]) {
+    use logact::bus::merkle::{hex32, parse_hex32};
+    use logact::bus::FsIo;
+    let Some(log) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("verify-receipt: pass a log path");
+        std::process::exit(2);
+    };
+    let req = |name: &str| {
+        flag(args, name).unwrap_or_else(|| {
+            eprintln!("verify-receipt: missing {name}");
+            std::process::exit(2);
+        })
+    };
+    let Ok(position) = req("--position").parse::<u64>() else {
+        eprintln!("verify-receipt: --position must be an unsigned integer");
+        std::process::exit(2);
+    };
+    let Ok(count) = req("--count").parse::<u64>() else {
+        eprintln!("verify-receipt: --count must be an unsigned integer");
+        std::process::exit(2);
+    };
+    if count == 0 {
+        eprintln!("verify-receipt: --count must be at least 1 (receipts cover real batches)");
+        std::process::exit(1);
+    }
+    let (Some(leaf), Some(root)) = (parse_hex32(&req("--leaf")), parse_hex32(&req("--root")))
+    else {
+        eprintln!("verify-receipt: --leaf and --root must be 64 hex digits");
+        std::process::exit(2);
+    };
+    let segs = match logact::lint::collect_chain_leaves(&FsIo, std::path::Path::new(log)) {
+        Err(e) => {
+            eprintln!("verify-receipt: cannot read {log}: {e}");
+            std::process::exit(2);
+        }
+        Ok(Err(verdict)) => {
+            eprintln!("verify-receipt: {verdict}");
+            std::process::exit(1);
+        }
+        Ok(Ok(s)) => s,
+    };
+    let last = position + count - 1;
+    let got_leaf = segs
+        .iter()
+        .find(|s| last >= s.base && last < s.base + s.frames.len() as u64)
+        .map(|s| s.tree.leaves()[(last - s.base) as usize]);
+    let got_root = logact::lint::chain_root_at(&segs, position + count);
+    match (got_leaf, got_root) {
+        (Some(l), Some(r)) if l == leaf && r == root => {
+            println!(
+                "receipt verified: batch [{position}, {}] still holds leaf {} under chain \
+                 root {}",
+                last,
+                hex32(&leaf),
+                hex32(&root)
+            );
+        }
+        (None, _) | (_, None) => {
+            eprintln!(
+                "receipt REFUTED: the log never reaches position {} ({} is past the tail)",
+                last,
+                position + count
+            );
+            std::process::exit(1);
+        }
+        (Some(l), Some(r)) => {
+            if l != leaf {
+                eprintln!(
+                    "receipt REFUTED: record {last} hashes to {} but the receipt attests {}",
+                    hex32(&l),
+                    hex32(&leaf)
+                );
+            }
+            if r != root {
+                eprintln!(
+                    "receipt REFUTED: chain root as of tail {} recomputes to {} but the \
+                     receipt attests {}",
+                    position + count,
+                    hex32(&r),
+                    hex32(&root)
+                );
+            }
+            std::process::exit(1);
+        }
+    }
 }
 
 fn kernel_demo() {

@@ -15,6 +15,12 @@
 //!   both ways; in every interleaving the log must stay one linear
 //!   history (no fork), with the on-disk lease epoch and the in-log
 //!   election-marker epoch in agreement.
+//! * **Merkle consistency matrix** (ISSUE 9) — every measured op of the
+//!   flush that checkpoints the tree and of the rotating commit that
+//!   publishes a sealed root is failed both ways; reopen must always
+//!   land on one consistent tree (clean root check, offline walk
+//!   agreeing, every record provable, fresh receipts verifying) — a
+//!   crash may lose a checkpoint, never mint a wrong root.
 
 use logact::bus::lease::{self, LeaseConfig};
 use logact::bus::{
@@ -566,6 +572,115 @@ fn every_rotation_fault_site_reopens_to_one_unforked_chain() {
             let d = DurableBackend::open(&p).unwrap();
             assert_eq!(d.tail(), expected + 1, "{ctx}: second reopen");
             drop(d);
+            cleanup(&p);
+        }
+    }
+}
+
+// ---- merkle tree consistency under crash faults (tamper-evidence
+// tentpole) -------------------------------------------------------------
+
+/// After any crashed flush or rotation, the reopened log's Merkle state
+/// must be *consistent*, never merely plausible: the in-memory tree, the
+/// bytes on disk, and the independent offline walk
+/// (`collect_chain_leaves` — the `logact prove` code path) must all
+/// reproduce one chain root, every record must still prove inclusion
+/// under it, and the next commit's receipt must verify against it.
+fn assert_tree_consistent(p: &Path, ctx: &str) {
+    use logact::lint::{chain_root_at, collect_chain_leaves};
+
+    let b = DurableBackend::open(p).unwrap();
+    let n = b.tail();
+    assert_eq!(b.verify().unwrap(), None, "{ctx}: root check must come back clean");
+    let root = b.merkle_root();
+
+    // Independent reconstruction through the offline prover's walk (its
+    // own sidecar-adoption and scan logic, not the backend's).
+    let segs = collect_chain_leaves(&FsIo, p)
+        .unwrap()
+        .unwrap_or_else(|e| panic!("{ctx}: offline walk refused: {e}"));
+    assert_eq!(chain_root_at(&segs, n), Some(root), "{ctx}: offline root must agree");
+
+    // Every surviving record proves inclusion under that one root.
+    for (pos, bytes) in b.read(0, u64::MAX).unwrap() {
+        let proof = b.prove(pos).unwrap();
+        assert!(proof.verify_record(&bytes, &root), "{ctx}: record {pos} must prove");
+    }
+
+    // And the log is still live past the crash: the next commit's
+    // receipt chains onto the recovered tree and verifies.
+    b.append(&entry_bytes(n, false)).unwrap();
+    let r = b.last_receipt().unwrap();
+    assert_eq!(r.position + r.count, n + 1, "{ctx}");
+    assert!(b.verify_receipt(&r), "{ctx}: post-recovery receipt must verify");
+}
+
+#[test]
+fn every_flush_fault_site_reopens_to_a_consistent_merkle_tree() {
+    // 11 = the measured checkpoint-write op count, asserted in
+    // `every_checkpoint_write_fault_site_leaves_a_recoverable_log`. The
+    // Merkle leaf section rides the sidecar blob inside those same ops —
+    // no site is new, so every torn/failed sidecar is also a torn/failed
+    // tree checkpoint, and reopen must fall back to rebuilding the tree
+    // from the frames it actually trusts.
+    for k in 1..=11u64 {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("flush merkle site {k} {mode:?}");
+            let p = tmp(&format!("mk-flush-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            prefill(&b, 4);
+            b.flush().unwrap(); // a good tree checkpoint covering 4 leaves
+            prefill_from(&b, 4, 8);
+            let before = io.ops();
+            io.fail_op(before + k, mode);
+            assert!(b.flush().is_err(), "{ctx}");
+            b.set_auto_checkpoint(false); // crash: no drop-time retry
+            drop(b);
+
+            assert_tree_consistent(&p, &ctx);
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar(&p));
+        }
+    }
+}
+
+#[test]
+fn every_rotation_fault_site_reopens_to_a_consistent_merkle_tree() {
+    use logact::bus::manifest;
+
+    fn cleanup(p: &Path) {
+        for i in 0..3 {
+            let sp = manifest::segment_path(p, i);
+            let _ = std::fs::remove_file(sidecar(&sp));
+            let _ = std::fs::remove_file(&sp);
+        }
+        let _ = std::fs::remove_file(manifest::manifest_path(p));
+        let _ = std::fs::remove_file(format!("{}.lease", p.display()));
+    }
+
+    // 18 = the measured rotating-commit op count, asserted in
+    // `every_rotation_fault_site_reopens_to_one_unforked_chain`. The
+    // sealed root reaches disk inside the 4-op sealed-sidecar publish
+    // and the 4-op manifest publish of that same sequence — a crash at
+    // any of those sites must resolve to a chain whose recorded roots
+    // (if any survived) agree with the bytes, never a wrong root.
+    for k in 1..=18u64 {
+        for mode in [FaultMode::Fail, FaultMode::Torn] {
+            let ctx = format!("rotation merkle site {k} {mode:?}");
+            let p = tmp(&format!("mk-rot-{k}-{mode:?}"));
+            let io = FaultIo::new();
+            let b = DurableBackend::open_with_io(&p, io.clone()).unwrap();
+            b.set_rotation(None, Some(4));
+            prefill(&b, 3);
+            let before = io.ops();
+            io.fail_op(before + k, mode);
+            let r = b.append(&entry_bytes(3, false));
+            assert_eq!(r.is_err(), k <= 5, "{ctx}: only commit-site faults fail the append");
+            b.set_auto_checkpoint(false);
+            drop(b);
+
+            assert_tree_consistent(&p, &ctx);
             cleanup(&p);
         }
     }

@@ -638,3 +638,166 @@ fn registry_protocol_pass_spans_segment_boundaries() {
     assert_eq!(errors[0].scope.as_deref(), Some("bob"));
     chain_cleanup(&p);
 }
+
+// ---- merkle tamper matrix (tamper-evidence tentpole) -----------------
+
+use logact::bus::merkle;
+
+#[test]
+fn sidecar_merkle_leaf_tamper_is_flagged_exactly_once() {
+    use PayloadType::*;
+    let records: Vec<Vec<u8>> = (0..5).map(|i| ent(i, Mail, Json::Null)).collect();
+    let p = build_log("merkle-leaf", &records);
+    // Forge a structurally valid sidecar (good CRC, matching frames and
+    // TypeIndex) whose Merkle section attests a different leaf for
+    // record 2: the checkpointed tree would prove bytes the segment does
+    // not hold.
+    let good = Checkpoint::decode(&std::fs::read(sidecar_path(&p)).unwrap()).unwrap();
+    let mut leaves = merkle::decode_leaves(&good.aux[merkle::MERKLE_AUX_KEY]).unwrap();
+    assert_eq!(leaves.len(), 5, "closing sidecar checkpoints every leaf");
+    leaves[2][7] ^= 0x01;
+    let mut aux = good.aux.clone();
+    aux.insert(merkle::MERKLE_AUX_KEY.to_string(), merkle::encode_leaves(&leaves));
+    let forged = Checkpoint {
+        uuid: good.uuid,
+        data_start: good.data_start,
+        log_len: good.log_len,
+        frame_lens: good.frame_lens.clone(),
+        types: good.types.clone(),
+        aux,
+    };
+    std::fs::write(sidecar_path(&p), forged.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["merkle-root-mismatch"], "{}", r.to_table().to_markdown());
+    assert!(warn_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    let f = r.findings.iter().find(|f| f.code == "merkle-root-mismatch").unwrap();
+    assert_eq!(f.position, Some(2), "finding must anchor to the lied-about record");
+}
+
+#[test]
+fn merkle_section_count_skew_classifies_stale_vs_forged() {
+    use PayloadType::*;
+    let records: Vec<Vec<u8>> = (0..4).map(|i| ent(i, Mail, Json::Null)).collect();
+    let rebuild = |name: &str, mutate: &dyn Fn(&mut Vec<[u8; 32]>)| {
+        let p = build_log(name, &records);
+        let good = Checkpoint::decode(&std::fs::read(sidecar_path(&p)).unwrap()).unwrap();
+        let mut leaves = merkle::decode_leaves(&good.aux[merkle::MERKLE_AUX_KEY]).unwrap();
+        mutate(&mut leaves);
+        let mut aux = good.aux.clone();
+        aux.insert(merkle::MERKLE_AUX_KEY.to_string(), merkle::encode_leaves(&leaves));
+        let forged = Checkpoint {
+            uuid: good.uuid,
+            data_start: good.data_start,
+            log_len: good.log_len,
+            frame_lens: good.frame_lens.clone(),
+            types: good.types.clone(),
+            aux,
+        };
+        std::fs::write(sidecar_path(&p), forged.encode()).unwrap();
+        lint_log_file(&p).unwrap()
+    };
+
+    // Fewer leaves than the checkpoint's own frames: the tree lags its
+    // checkpoint — survivable (reopen rebuilds from a scan), a warn.
+    let r = rebuild("merkle-stale", &|l| {
+        l.pop();
+    });
+    assert!(error_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert_eq!(warn_codes(&r), vec!["merkle-stale-checkpoint"]);
+
+    // More leaves than frames: the section attests records the
+    // checkpoint does not index — a forgery, an error.
+    let r = rebuild("merkle-overlong", &|l| l.push([0xAB; 32]));
+    assert_eq!(error_codes(&r), vec!["merkle-root-mismatch"], "{}", r.to_table().to_markdown());
+    assert!(warn_codes(&r).is_empty());
+
+    // An undecodable section (truncated mid-leaf) is untrustworthy: an
+    // error, even though reopen loses nothing by rebuilding.
+    let p = build_log("merkle-undecodable", &records);
+    let good = Checkpoint::decode(&std::fs::read(sidecar_path(&p)).unwrap()).unwrap();
+    let section = &good.aux[merkle::MERKLE_AUX_KEY];
+    let mut aux = good.aux.clone();
+    aux.insert(merkle::MERKLE_AUX_KEY.to_string(), section[..section.len() - 7].to_vec());
+    let forged = Checkpoint {
+        uuid: good.uuid,
+        data_start: good.data_start,
+        log_len: good.log_len,
+        frame_lens: good.frame_lens.clone(),
+        types: good.types.clone(),
+        aux,
+    };
+    std::fs::write(sidecar_path(&p), forged.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["merkle-root-mismatch"], "{}", r.to_table().to_markdown());
+}
+
+/// Byte range `(header offset, payload len)` of frame `k` in a segment
+/// image, walking real headers from `data_start`.
+fn nth_frame(bytes: &[u8], data_start: usize, k: usize) -> (usize, usize) {
+    let mut off = data_start;
+    for _ in 0..k {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 8 + len;
+    }
+    let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+    (off, len)
+}
+
+#[test]
+fn crc_consistent_rewrite_of_sealed_bytes_is_caught_by_the_tree_alone() {
+    use logact::util::crc32;
+    // String bodies so a masked flip inside the JSON text keeps the
+    // entry decodable — the point is a rewrite *no structural check
+    // sees*: CRC fixed up, lengths unchanged, entry still parses.
+    let p = tmp("merkle-rewrite");
+    {
+        let b = DurableBackend::open(&p).unwrap();
+        b.set_rotation(None, Some(4));
+        for i in 0..10 {
+            b.append(&ent(i, PayloadType::Mail, Json::obj(vec![("d", Json::str("xxxxxxxx"))])))
+                .unwrap();
+        }
+        assert!(b.segment_count() >= 3, "fixture must seal at least two segments");
+    }
+    let sp = manifest::segment_path(&p, 1);
+    let mut bytes = std::fs::read(&sp).unwrap();
+    let (off, len) = nth_frame(&bytes, 64, 1); // after the v2 chain preamble
+    let payload_at = off + 8;
+    let idx = bytes[payload_at..payload_at + len]
+        .windows(8)
+        .position(|w| w == b"xxxxxxxx")
+        .expect("body text present in frame payload");
+    bytes[payload_at + idx] ^= 0x20; // 'x' -> 'X': JSON stays valid
+    let crc = crc32::hash(&bytes[payload_at..payload_at + len]);
+    bytes[off + 4..off + 8].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&sp, &bytes).unwrap();
+
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["merkle-root-mismatch"], "{}", r.to_table().to_markdown());
+    assert!(warn_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    assert!(
+        !r.codes().contains(&"crc-mismatch"),
+        "the rewrite is CRC-consistent by construction — only the tree sees it"
+    );
+    // Global position: segment 1 starts at record 4; its frame 1 is 5.
+    let f = r.findings.iter().find(|f| f.code == "merkle-root-mismatch").unwrap();
+    assert_eq!(f.position, Some(5));
+    chain_cleanup(&p);
+}
+
+#[test]
+fn manifest_sealed_root_tamper_is_flagged_exactly_once() {
+    let p = build_chain("merkle-manroot", 10, 4);
+    // Re-encode the manifest (valid CRC and structure) with one byte of
+    // sealed segment 0's frozen root flipped: the segment and its
+    // sidecar agree with each other, so only the sealed-root audit can
+    // see the lie.
+    let mut m = manifest::load(&logact::bus::FsIo, &p).unwrap().unwrap();
+    assert_ne!(m.segments[0].sealed_root, [0u8; 32], "v2 manifests record sealed roots");
+    m.segments[0].sealed_root[11] ^= 0x40;
+    std::fs::write(manifest::manifest_path(&p), m.encode()).unwrap();
+    let r = lint_log_file(&p).unwrap();
+    assert_eq!(error_codes(&r), vec!["merkle-root-mismatch"], "{}", r.to_table().to_markdown());
+    assert!(warn_codes(&r).is_empty(), "{}", r.to_table().to_markdown());
+    chain_cleanup(&p);
+}

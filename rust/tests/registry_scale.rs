@@ -1,0 +1,100 @@
+//! 10k-tenant sharded-registry fixture (scale-out satellite).
+//!
+//! One durable log carries ten thousand namespaces; the fixture is
+//! built **once**, checkpointed, and then reopened under shard counts
+//! 1, 3, and 16. The shard count is an in-memory layout knob — sidecars
+//! written under one count must restore under any other — so every
+//! tenant's recovered sequence has to come back byte-identical in all
+//! three layouts, and identical to what was written.
+//!
+//! `#[ignore]`d for local `cargo test` (it appends ~20k records); CI's
+//! release lint job runs it explicitly with `--ignored`.
+
+use logact::bus::{BusRegistry, DurableBackend, Entry, LogBackend, Payload, PayloadType};
+use logact::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const TENANTS: u64 = 10_000;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logact-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("scale-{}-{}.log", name, std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(logact::bus::checkpoint::sidecar_path(&p));
+    let _ = std::fs::remove_file(logact::bus::lease::lease_path(&p));
+    p
+}
+
+fn tenant(i: u64) -> String {
+    format!("tenant-{i:05}")
+}
+
+/// Tenant `i` writes `1 + i % 3` records; record `j` is deterministic
+/// from `(i, j)`, so the expected bytes never need to be stored.
+fn record(i: u64, j: u64) -> Vec<u8> {
+    Entry {
+        position: j,
+        realtime_ts: 1_000 + i * 4 + j,
+        payload: Payload::new(
+            PayloadType::ALL[((i + j) % 9) as usize],
+            "writer",
+            Json::obj(vec![("tenant", Json::Int(i as i64)), ("j", Json::Int(j as i64))]),
+        ),
+    }
+    .to_bytes()
+}
+
+fn records_of(i: u64) -> u64 {
+    1 + i % 3
+}
+
+#[test]
+#[ignore = "10k-tenant fixture (~20k appends) — CI's release lint job runs it with --ignored"]
+fn ten_thousand_tenants_recover_identically_under_any_shard_count() {
+    let p = tmp("10k");
+
+    // Build once, under the default shard count.
+    {
+        let mut d = DurableBackend::open(&p).unwrap();
+        d.sync_each_append = false; // one fsync at checkpoint, not 20k
+        let d = Arc::new(d);
+        let registry = BusRegistry::new(d.clone());
+        for i in 0..TENANTS {
+            let nb = registry.backend(&tenant(i)).unwrap();
+            for j in 0..records_of(i) {
+                assert_eq!(nb.append(&record(i, j)).unwrap(), j);
+            }
+        }
+        registry.checkpoint().unwrap();
+    }
+
+    // Reopen under each layout; every tenant must come back identical.
+    let mut roots = Vec::new();
+    for shards in [1usize, 3, 16] {
+        let d = Arc::new(DurableBackend::open(&p).unwrap());
+        roots.push(d.merkle_root());
+        let registry = BusRegistry::with_shards(d.clone(), shards);
+        assert_eq!(registry.shard_count(), shards);
+        assert_eq!(registry.namespaces().len() as u64, TENANTS, "{shards} shards");
+        for i in 0..TENANTS {
+            let nb = registry.backend(&tenant(i)).unwrap();
+            let n = records_of(i);
+            assert_eq!(nb.tail(), n, "{shards} shards, tenant {i}");
+            for (j, bytes) in nb.read(0, u64::MAX).unwrap() {
+                assert_eq!(bytes, record(i, j), "{shards} shards, tenant {i}, record {j}");
+            }
+        }
+        // The restored sidecar state, not a 20k-record rescan, did the
+        // recovery above.
+        let s = registry.checkpoint_stats().unwrap();
+        assert!(s.sidecar_loaded, "{shards} shards: registry section must restore");
+    }
+    // Same bytes, same tree: the chain root is layout-independent.
+    assert!(roots.windows(2).all(|w| w[0] == w[1]), "roots must agree across layouts");
+
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(logact::bus::checkpoint::sidecar_path(&p));
+    let _ = std::fs::remove_file(logact::bus::lease::lease_path(&p));
+}
