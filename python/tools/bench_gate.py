@@ -8,9 +8,11 @@ metric that regressed by more than --factor (default 2x) fails the job.
 
 Metric direction is inferred from the name: times (`*_ms`), overhead
 percentages (`*_pct`) and per-entry/per-read cost ratios are
-lower-is-better; everything else (speedups, `*_krecs` throughputs) is
-higher-is-better. Keep new bench metric names consistent with those
-conventions.
+lower-is-better; everything else (speedups, `*_krecs` throughputs,
+`*_per_s` rates) is higher-is-better. Keep new bench metric names
+consistent with those conventions — e.g. the gateway rows
+(`gateway_appends_per_s` higher-is-better, `gateway_poll_p99_ms`
+lower-is-better) gate the remote-client path without any code here.
 
 Exit codes: 0 = pass (or no baseline yet), 1 = regression, 2 = bad input.
 """

@@ -1,0 +1,609 @@
+#!/usr/bin/env python3
+"""Independent Python reimplementation of the gateway wire protocol and the
+RFC 6962 consistency algebra, cross-validating `rust/src/bus/wire.rs` and
+`rust/src/bus/merkle.rs` without sharing a line of code with them.
+
+The container CI builds have no second Rust toolchain to diff against, so
+this script is the second implementation: it rebuilds, from the documented
+formats only,
+
+* the seeded PRNG (`util::rng` — SplitMix64 seeding xoshiro256**),
+* LEB128 varints (`util::varint`),
+* the CRC-framed wire codec (`bus::wire` — `[len u32 LE][crc32 u32 LE][body]`,
+  zlib/IEEE CRC-32, strict message decode),
+* RFC 6962 SS2.1.2 consistency proofs + the RFC 9162 SS2.1.4.2 verifier
+  (`bus::merkle`), checked against a literal recursive RFC reference,
+
+then (a) property-tests each piece — seeded round-trips, exhaustive
+one-bit-flip and truncation rejection, tamper/fork refusal — and (b) prints
+golden vectors (fixed frames, PRNG outputs, and a digest over the seeded
+random message streams) that are pinned verbatim inside the Rust unit
+tests. Either implementation drifting from the spec breaks the pins.
+
+Run from the repo root (CI does): `python3 python/tools/wire_crosscheck.py`.
+Exit 0 = every check passed.
+"""
+
+import hashlib
+import sys
+import zlib
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util::rng — SplitMix64 seeding xoshiro256**
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed: int):
+        x = (seed + 0x9E3779B97F4A7C15) & MASK64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & MASK64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(v: int, k: int) -> int:
+        return ((v << k) | (v >> (64 - k))) & MASK64
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def gen_range(self, n: int) -> int:
+        """Lemire's method, bit-exact with util::rng::Rng::gen_range."""
+        assert n > 0
+        x = self.next_u64()
+        m = x * n
+        low = m & MASK64
+        if low < n:
+            t = ((1 << 64) - n) % n  # n.wrapping_neg() % n
+            while low < t:
+                x = self.next_u64()
+                m = x * n
+                low = m & MASK64
+        return m >> 64
+
+    def gen_f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def gen_bool(self, p: float) -> bool:
+        return self.gen_f64() < p
+
+    def choice(self, xs):
+        return xs[self.gen_range(len(xs))]
+
+
+# ---------------------------------------------------------------------------
+# util::varint — LEB128
+# ---------------------------------------------------------------------------
+
+
+def varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def read_varint(buf: bytes, pos: int):
+    """Returns (value, new_pos) or None — canonical, bounds-checked, like
+    util::varint::Reader::read_u64."""
+    v = 0
+    shift = 0
+    while True:
+        if pos >= len(buf):
+            return None
+        b = buf[pos]
+        pos += 1
+        if shift == 63 and b > 1:
+            return None  # would overflow u64
+        v |= (b & 0x7F) << shift
+        if (b & 0x80) == 0:
+            return (v, pos)
+        shift += 7
+        if shift > 63:
+            return None
+
+
+# ---------------------------------------------------------------------------
+# bus::wire — frames and messages
+# ---------------------------------------------------------------------------
+
+MAX_FRAME_BODY = 1 << 20
+MAX_APPEND_BODY = 1 << 16
+MAX_CLIENT_NAME = 128
+
+REQ_HELLO, REQ_APPEND, REQ_READ, REQ_POLL = 1, 2, 3, 4
+RESP_HELLO_OK, RESP_RECEIPT, RESP_DENIED, RESP_RECORDS, RESP_ERROR = 1, 2, 3, 4, 5
+POLL_ANY = 0xFF
+
+# Wire tag = index in the Rust declaration order; stable, never renumber.
+ROLES = ["driver", "voter", "decider", "executor", "external", "admin", "observer"]
+PTYPES = ["inf-in", "inf-out", "intent", "vote", "commit", "abort", "result", "mail", "policy"]
+
+
+def frame(body: bytes) -> bytes:
+    assert len(body) <= MAX_FRAME_BODY
+    return (
+        len(body).to_bytes(4, "little")
+        + (zlib.crc32(body) & 0xFFFFFFFF).to_bytes(4, "little")
+        + body
+    )
+
+
+def deframe(buf: bytes):
+    """Decode one frame from the whole buffer, strictly. Returns the body
+    or raises ValueError (mirrors recv_frame error paths)."""
+    if len(buf) < 8:
+        raise ValueError("torn header")
+    length = int.from_bytes(buf[0:4], "little")
+    want_crc = int.from_bytes(buf[4:8], "little")
+    if length > MAX_FRAME_BODY:
+        raise ValueError("oversized frame")
+    if len(buf) != 8 + length:
+        raise ValueError("torn or trailing body")
+    body = buf[8:]
+    if (zlib.crc32(body) & 0xFFFFFFFF) != want_crc:
+        raise ValueError("crc mismatch")
+    return body
+
+
+def put_str(s: str) -> bytes:
+    raw = s.encode("utf-8")
+    return varint(len(raw)) + raw
+
+
+def get_str(buf: bytes, pos: int, maximum: int):
+    got = read_varint(buf, pos)
+    if got is None:
+        return None
+    length, pos = got
+    if length > maximum or pos + length > len(buf):
+        return None
+    try:
+        return (buf[pos : pos + length].decode("utf-8"), pos + length)
+    except UnicodeDecodeError:
+        return None
+
+
+def encode_request(req) -> bytes:
+    kind = req[0]
+    if kind == "hello":
+        _, client, role = req
+        return bytes([REQ_HELLO, ROLES.index(role)]) + put_str(client)
+    if kind == "append":
+        _, ptype, body = req
+        return bytes([REQ_APPEND, PTYPES.index(ptype)]) + put_str(body)
+    if kind == "read":
+        _, start, end = req
+        return bytes([REQ_READ]) + varint(start) + varint(end)
+    if kind == "poll":
+        _, start, ptype = req
+        tag = POLL_ANY if ptype is None else PTYPES.index(ptype)
+        return bytes([REQ_POLL]) + varint(start) + bytes([tag])
+    raise AssertionError(kind)
+
+
+def decode_request(buf: bytes):
+    """Strict decode; None on anything malformed (mirrors Request::decode)."""
+    if len(buf) < 1:
+        return None
+    kind, pos = buf[0], 1
+    if kind == REQ_HELLO:
+        if pos >= len(buf) or buf[pos] >= len(ROLES):
+            return None
+        role, pos = ROLES[buf[pos]], pos + 1
+        got = get_str(buf, pos, MAX_CLIENT_NAME)
+        if got is None:
+            return None
+        client, pos = got
+        req = ("hello", client, role)
+    elif kind == REQ_APPEND:
+        if pos >= len(buf) or buf[pos] >= len(PTYPES):
+            return None
+        ptype, pos = PTYPES[buf[pos]], pos + 1
+        got = get_str(buf, pos, MAX_APPEND_BODY)
+        if got is None:
+            return None
+        body, pos = got
+        req = ("append", ptype, body)
+    elif kind == REQ_READ:
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        start, pos = got
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        end, pos = got
+        req = ("read", start, end)
+    elif kind == REQ_POLL:
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        start, pos = got
+        if pos >= len(buf):
+            return None
+        t, pos = buf[pos], pos + 1
+        if t == POLL_ANY:
+            ptype = None
+        elif t < len(PTYPES):
+            ptype = PTYPES[t]
+        else:
+            return None
+        req = ("poll", start, ptype)
+    else:
+        return None
+    if pos != len(buf):
+        return None  # trailing bytes
+    return req
+
+
+def encode_response(resp) -> bytes:
+    kind = resp[0]
+    if kind == "hello_ok":
+        _, epoch, tail = resp
+        return bytes([RESP_HELLO_OK]) + varint(epoch) + varint(tail)
+    if kind == "receipt":
+        _, position, count, leaf, root, epoch = resp
+        assert len(leaf) == 32 and len(root) == 32
+        return bytes([RESP_RECEIPT]) + varint(position) + varint(count) + leaf + root + varint(epoch)
+    if kind == "denied":
+        return bytes([RESP_DENIED]) + put_str(resp[1])
+    if kind == "records":
+        out = bytearray([RESP_RECORDS])
+        out += varint(len(resp[1]))
+        for pos, raw in resp[1]:
+            out += varint(pos) + varint(len(raw)) + raw
+        return bytes(out)
+    if kind == "error":
+        return bytes([RESP_ERROR]) + put_str(resp[1])
+    raise AssertionError(kind)
+
+
+def decode_response(buf: bytes):
+    if len(buf) < 1:
+        return None
+    kind, pos = buf[0], 1
+    if kind == RESP_HELLO_OK:
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        epoch, pos = got
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        tail, pos = got
+        resp = ("hello_ok", epoch, tail)
+    elif kind == RESP_RECEIPT:
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        position, pos = got
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        count, pos = got
+        if pos + 64 > len(buf):
+            return None
+        leaf, root, pos = buf[pos : pos + 32], buf[pos + 32 : pos + 64], pos + 64
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        epoch, pos = got
+        resp = ("receipt", position, count, leaf, root, epoch)
+    elif kind == RESP_DENIED:
+        got = get_str(buf, pos, MAX_FRAME_BODY)
+        if got is None:
+            return None
+        reason, pos = got
+        resp = ("denied", reason)
+    elif kind == RESP_RECORDS:
+        got = read_varint(buf, pos)
+        if got is None:
+            return None
+        count, pos = got
+        if count > (len(buf) - pos) // 2 + 1:
+            return None  # allocation bound before trusting the count
+        records = []
+        for _ in range(count):
+            got = read_varint(buf, pos)
+            if got is None:
+                return None
+            rpos, pos = got
+            got = read_varint(buf, pos)
+            if got is None:
+                return None
+            length, pos = got
+            if pos + length > len(buf):
+                return None
+            records.append((rpos, buf[pos : pos + length]))
+            pos += length
+        resp = ("records", records)
+    elif kind == RESP_ERROR:
+        got = get_str(buf, pos, MAX_FRAME_BODY)
+        if got is None:
+            return None
+        detail, pos = got
+        resp = ("error", detail)
+    else:
+        return None
+    if pos != len(buf):
+        return None
+    return resp
+
+
+# ---------------------------------------------------------------------------
+# The seeded random message streams — bit-exact mirrors of the generators
+# in wire.rs's unit tests, so a digest over the encoded streams checks the
+# PRNG, the generators, and both encoders at once.
+# ---------------------------------------------------------------------------
+
+
+def rand_string(rng: Rng, maximum: int) -> str:
+    length = rng.gen_range(maximum + 1)
+    return "".join(chr(ord("a") + rng.gen_range(26)) for _ in range(length))
+
+
+def rand_hash(rng: Rng) -> bytes:
+    return bytes(rng.gen_range(256) for _ in range(32))
+
+
+def rand_request(rng: Rng):
+    k = rng.gen_range(4)
+    if k == 0:
+        return ("hello", rand_string(rng, 32), rng.choice(ROLES))
+    if k == 1:
+        return ("append", rng.choice(PTYPES), '{"k":%d}' % rng.gen_range(1 << 20))
+    if k == 2:
+        return ("read", rng.next_u64() >> rng.gen_range(64), rng.next_u64())
+    start = rng.next_u64() >> rng.gen_range(64)
+    ptype = rng.choice(PTYPES) if rng.gen_bool(0.5) else None
+    return ("poll", start, ptype)
+
+
+def rand_response(rng: Rng):
+    k = rng.gen_range(5)
+    if k == 0:
+        return ("hello_ok", rng.gen_range(1 << 30), rng.next_u64() >> 8)
+    if k == 1:
+        return (
+            "receipt",
+            rng.next_u64() >> 16,
+            1 + rng.gen_range(64),
+            rand_hash(rng),
+            rand_hash(rng),
+            rng.gen_range(1 << 20),
+        )
+    if k == 2:
+        return ("denied", rand_string(rng, 64))
+    if k == 3:
+        records = []
+        for i in range(rng.gen_range(8)):
+            length = rng.gen_range(48)
+            records.append((i, bytes(rng.gen_range(256) for _ in range(length))))
+        return ("records", records)
+    return ("error", rand_string(rng, 64))
+
+
+# ---------------------------------------------------------------------------
+# bus::merkle — RFC 6962 trees, consistency paths, RFC 9162 verifier
+# ---------------------------------------------------------------------------
+
+
+def sha(data: bytes) -> bytes:
+    return hashlib.sha256(data).digest()
+
+
+def leaf_hash(payload: bytes) -> bytes:
+    return sha(b"\x00" + payload)
+
+
+def node_hash(left: bytes, right: bytes) -> bytes:
+    return sha(b"\x01" + left + right)
+
+
+def split_point(n: int) -> int:
+    """Largest power of two strictly less than n (n >= 2)."""
+    k = 1 << ((n - 1).bit_length() - 1)
+    assert k < n <= 2 * k
+    return k
+
+
+def mth(leaves) -> bytes:
+    """RFC 6962 SS2.1 Merkle Tree Hash, literally."""
+    n = len(leaves)
+    if n == 0:
+        return sha(b"")
+    if n == 1:
+        return leaves[0]
+    k = split_point(n)
+    return node_hash(mth(leaves[:k]), mth(leaves[k:]))
+
+
+def consistency_path(m: int, leaves):
+    """RFC 6962 SS2.1.2 PROOF(m, D[n]), literal recursive SUBPROOF."""
+    n = len(leaves)
+    if m == 0 or m > n:
+        return None
+
+    def subproof(m, lo, hi, complete, out):
+        if m == hi - lo:
+            if not complete:
+                out.append(mth(leaves[lo:hi]))
+            return
+        k = split_point(hi - lo)
+        if m <= k:
+            subproof(m, lo, lo + k, complete, out)
+            out.append(mth(leaves[lo + k : hi]))
+        else:
+            subproof(m - k, lo + k, hi, False, out)
+            out.append(mth(leaves[lo : lo + k]))
+
+    out = []
+    subproof(m, 0, n, True, out)
+    return out
+
+
+def verify_consistency(m: int, n: int, path, old: bytes, new: bytes) -> bool:
+    """RFC 9162 SS2.1.4.2, mirroring merkle::verify_consistency."""
+    if m == 0 or m > n:
+        return False
+    if m == n:
+        return len(path) == 0 and old == new
+    it = iter(path)
+    if m & (m - 1) == 0:  # power of two: the old root seeds the walk
+        fr = sr = old
+    else:
+        first = next(it, None)
+        if first is None:
+            return False
+        fr = sr = first
+    fnode, snode = m - 1, n - 1
+    while fnode & 1:
+        fnode >>= 1
+        snode >>= 1
+    for c in it:
+        if snode == 0:
+            return False
+        if fnode & 1 or fnode == snode:
+            fr = node_hash(c, fr)
+            sr = node_hash(c, sr)
+            if not fnode & 1:
+                while not fnode & 1 and fnode != 0:
+                    fnode >>= 1
+                    snode >>= 1
+        else:
+            sr = node_hash(sr, c)
+        fnode >>= 1
+        snode >>= 1
+    return snode == 0 and fr == old and sr == new
+
+
+# ---------------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------------
+
+
+def check(name, cond):
+    if not cond:
+        print(f"FAIL  {name}")
+        sys.exit(1)
+    print(f"ok    {name}")
+
+
+def main() -> int:
+    # CRC sanity: the classic IEEE vector util::crc32 also pins.
+    check("crc32 IEEE check vector", zlib.crc32(b"123456789") == 0xCBF43926)
+
+    # Varint canonical round trips, including edges.
+    for v in [0, 1, 127, 128, 300, (1 << 32) - 1, (1 << 63), MASK64]:
+        got = read_varint(varint(v), 0)
+        assert got is not None and got[0] == v and got[1] == len(varint(v)), v
+    check("varint round trips at the edges", True)
+    check("varint rejects non-canonical overflow", read_varint(b"\x80" * 9 + b"\x02", 0) is None)
+
+    # Seeded message round trips (the same seeds as wire.rs's properties).
+    rng = Rng(0x5EED_0001)
+    reqs = [rand_request(rng) for _ in range(500)]
+    for req in reqs:
+        body = encode_request(req)
+        assert decode_request(body) == req, req
+        assert deframe(frame(body)) == body
+    rng = Rng(0x5EED_0010)
+    resps = [rand_response(rng) for _ in range(500)]
+    for resp in resps:
+        body = encode_response(resp)
+        assert decode_response(body) == resp, resp
+    check("500 seeded requests + 500 responses round trip", True)
+
+    # Truncation: no strict prefix of an encoding may decode to the original.
+    for req in reqs[:50]:
+        body = encode_request(req)
+        for cut in range(len(body)):
+            assert decode_request(body[:cut]) != req, (req, cut)
+    check("request truncation rejected at every cut", True)
+
+    # Exhaustive one-bit flips of one full frame must never pass deframing
+    # silently (CRC-32 detects all 1-bit errors).
+    body = encode_request(("append", "intent", '{"a":1}'))
+    fr = frame(body)
+    for bit in range(len(fr) * 8):
+        bad = bytearray(fr)
+        bad[bit // 8] ^= 1 << (bit % 8)
+        try:
+            out = deframe(bytes(bad))
+            assert False, f"bit {bit} slipped through: {out!r}"
+        except ValueError:
+            pass
+    check(f"all {len(fr) * 8} one-bit frame flips rejected", True)
+
+    # Consistency proofs: exhaustive (m, n) agreement between the literal
+    # RFC recursion and the iterative verifier, plus tamper/fork refusal.
+    for n in range(1, 33):
+        leaves = [leaf_hash(b"leaf-%d" % i) for i in range(n)]
+        new = mth(leaves)
+        for m in range(1, n + 1):
+            path = consistency_path(m, leaves)
+            old = mth(leaves[:m])
+            assert verify_consistency(m, n, path, old, new), (m, n)
+            if path:
+                bad = list(path)
+                bad[0] = bytes(b ^ 0x40 for b in bad[0])
+                assert not verify_consistency(m, n, bad, old, new), (m, n)
+            assert not verify_consistency(m, n, path, leaf_hash(b"x"), new) or m == 0
+    check("consistency proofs verify for every (m, n) up to 32, tampers refused", True)
+
+    # A forked history is refused: rewrite one sealed leaf, the old
+    # published root no longer verifies against the new tree.
+    leaves = [leaf_hash(b"entry-%d" % i) for i in range(12)]
+    published_old = mth(leaves[:8])
+    forked = list(leaves)
+    forked[5] = leaf_hash(b"rewritten history")
+    path = consistency_path(8, forked)
+    assert not verify_consistency(8, 12, path, published_old, mth(forked))
+    check("a seeded fork is refused by the published prefix root", True)
+
+    # ----- golden vectors, pinned in the Rust unit tests -----
+    print()
+    rng = Rng(42)
+    print("golden rng   Rng::new(42) first four:", [hex(rng.next_u64()) for _ in range(4)])
+    hello = frame(encode_request(("hello", "c1", "driver")))
+    print("golden frame hello(c1, driver):      ", hello.hex())
+    receipt = frame(
+        encode_response(("receipt", 7, 2, bytes(range(32)), bytes(range(32, 64)), 3))
+    )
+    print("golden frame receipt(7,2,..,3):      ", receipt.hex())
+    digest = hashlib.sha256()
+    rng = Rng(0x5EED_0001)
+    for _ in range(500):
+        digest.update(frame(encode_request(rand_request(rng))))
+    rng = Rng(0x5EED_0010)
+    for _ in range(500):
+        digest.update(frame(encode_response(rand_response(rng))))
+    print("golden digest seeded streams:        ", digest.hexdigest())
+
+    print("\nwire crosscheck: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,45 @@ pub enum Role {
     Observer,
 }
 
+impl Role {
+    /// Every role, in wire-tag order. Tags are stable: they are encoded
+    /// into gateway `Hello` frames and must never be renumbered.
+    pub const ALL: [Role; 7] = [
+        Role::Driver,
+        Role::Voter,
+        Role::Decider,
+        Role::Executor,
+        Role::External,
+        Role::Admin,
+        Role::Observer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Driver => "driver",
+            Role::Voter => "voter",
+            Role::Decider => "decider",
+            Role::Executor => "executor",
+            Role::External => "external",
+            Role::Admin => "admin",
+            Role::Observer => "observer",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Role> {
+        Role::ALL.into_iter().find(|r| r.name() == s)
+    }
+
+    /// Single-byte wire tag (index into [`Role::ALL`]).
+    pub fn tag(self) -> u8 {
+        Role::ALL.iter().position(|r| *r == self).unwrap() as u8
+    }
+
+    pub fn from_tag(t: u8) -> Option<Role> {
+        Role::ALL.get(t as usize).copied()
+    }
+}
+
 /// Append/play permissions at type granularity.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Grant {
@@ -148,5 +187,16 @@ mod tests {
         assert!(!Grant::for_role(Role::Executor).can_play(Mail));
         assert!(Grant::for_role(Role::Observer).can_play(Policy));
         assert!(!Grant::for_role(Role::Observer).can_append(Mail));
+    }
+
+    #[test]
+    fn role_names_and_tags_round_trip() {
+        for (i, r) in Role::ALL.into_iter().enumerate() {
+            assert_eq!(Role::from_name(r.name()), Some(r));
+            assert_eq!(r.tag() as usize, i);
+            assert_eq!(Role::from_tag(r.tag()), Some(r));
+        }
+        assert_eq!(Role::from_name("root"), None);
+        assert_eq!(Role::from_tag(Role::ALL.len() as u8), None);
     }
 }

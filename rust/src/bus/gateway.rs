@@ -1,0 +1,609 @@
+//! The bus gateway: one process owns the epoch-fenced append lease and
+//! coordinates many remote clients (ROADMAP "Cross-process leases → a real
+//! bus gateway").
+//!
+//! Request lifecycle, per connection (the connector-oss VĀKYA shape):
+//!
+//! 1. **Authenticate** — the first frame must be a [`Request::Hello`]
+//!    naming a client identity and [`Role`]. The gateway appends a
+//!    `gateway_session` Policy marker recording the identity, so every
+//!    later remote append is attributable offline (the lint gateway-audit
+//!    pass checks exactly this).
+//! 2. **Policy** — the role's [`Grant`] (paper Table 2) gates every
+//!    append and read at type granularity; denials answer
+//!    [`Response::Denied`] without killing the connection.
+//! 3. **Append** — intents flow through the leased [`DurableBackend`]
+//!    under a gateway-wide append gate, authored `gw:<client>`.
+//! 4. **Receipt** — the committed append's Merkle [`Receipt`] (position,
+//!    leaf, chain root, lease epoch) goes back over the wire; it verifies
+//!    offline via `logact verify-receipt` with no trust in the gateway.
+//!
+//! Reads and polls are served off committed records without touching the
+//! lease; a gateway restart bumps the lease epoch, so a reconnecting
+//! client can see takeover in its receipts.
+
+use super::acl::{AclError, Grant, Role};
+use super::backend::LogBackend;
+use super::durable::DurableBackend;
+use super::entry::{Entry, Payload, PayloadType};
+use super::wire::{
+    recv_request, send_response, Conn, Request, Response, MAX_CLIENT_NAME,
+};
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Author prefix on every remote append: `gw:<client>`.
+pub const REMOTE_AUTHOR_PREFIX: &str = "gw:";
+
+/// Author of `gateway_session` Policy markers.
+pub const SESSION_AUTHOR: &str = "gateway";
+
+/// `kind` of the Policy marker that opens a remote session.
+pub const SESSION_KIND: &str = "gateway_session";
+
+/// Running totals, readable while the gateway serves.
+#[derive(Debug, Default)]
+pub struct GatewayStats {
+    pub sessions: AtomicU64,
+    pub appends: AtomicU64,
+    pub denials: AtomicU64,
+    pub reads: AtomicU64,
+}
+
+/// A multi-client append coordinator over one leased durable log.
+pub struct Gateway {
+    backend: Arc<DurableBackend>,
+    clock: Clock,
+    /// Serializes tail-read → append → receipt so each client's receipt is
+    /// provably its own append (the gateway is the log's only writer).
+    append_gate: Mutex<()>,
+    pub stats: GatewayStats,
+}
+
+impl Gateway {
+    pub fn new(backend: Arc<DurableBackend>, clock: Clock) -> Gateway {
+        Gateway { backend, clock, append_gate: Mutex::new(()), stats: GatewayStats::default() }
+    }
+
+    /// Open the log at `path` (acquiring its append lease) and build a
+    /// gateway over it.
+    pub fn open(path: &std::path::Path) -> io::Result<Gateway> {
+        Ok(Gateway::new(Arc::new(DurableBackend::open(path)?), Clock::real()))
+    }
+
+    pub fn backend(&self) -> &Arc<DurableBackend> {
+        &self.backend
+    }
+
+    /// The lease epoch this gateway holds.
+    pub fn epoch(&self) -> u64 {
+        self.backend.lease_epoch()
+    }
+
+    /// Serve one client connection until it closes cleanly (`Ok`) or the
+    /// transport / protocol fails (`Err`). Each connection gets its own
+    /// thread; all state the handler touches is behind `&self`.
+    pub fn serve_conn(&self, conn: &mut dyn Conn) -> io::Result<()> {
+        // Authenticate: the first frame must be a well-formed Hello.
+        let (client, grant) = match recv_request(conn)? {
+            None => return Ok(()), // connected and left: fine
+            Some(Request::Hello { client, role }) => match validate_client_name(&client) {
+                Ok(()) => {
+                    self.open_session(&client, role)?;
+                    (client, Grant::for_role(role))
+                }
+                Err(why) => {
+                    send_response(conn, &Response::Denied { reason: why.to_string() })?;
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, why));
+                }
+            },
+            Some(other) => {
+                let detail = format!("not authenticated: first request must be hello, got {other:?}");
+                send_response(conn, &Response::Error { detail: detail.clone() })?;
+                return Err(io::Error::new(io::ErrorKind::InvalidData, detail));
+            }
+        };
+        send_response(
+            conn,
+            &Response::HelloOk { epoch: self.backend.lease_epoch(), tail: self.backend.tail() },
+        )?;
+        self.stats.sessions.fetch_add(1, Ordering::Relaxed);
+        while let Some(req) = recv_request(conn)? {
+            self.handle(&client, &grant, req, conn)?;
+        }
+        Ok(())
+    }
+
+    /// Append the session marker attributing `client` before any of its
+    /// appends can land. Appended under the gate so the marker's position
+    /// strictly precedes every entry of the session it opens.
+    fn open_session(&self, client: &str, role: Role) -> io::Result<()> {
+        let body = Json::obj(vec![
+            ("kind", Json::str(SESSION_KIND)),
+            ("client", Json::str(client)),
+            ("role", Json::str(role.name())),
+        ]);
+        let _gate = self.append_gate.lock().unwrap();
+        let entry = Entry {
+            position: self.backend.tail(),
+            realtime_ts: self.clock.realtime_ms(),
+            payload: Payload::new(PayloadType::Policy, SESSION_AUTHOR, body),
+        };
+        self.backend.append(&entry.to_bytes())?;
+        Ok(())
+    }
+
+    fn handle(
+        &self,
+        client: &str,
+        grant: &Grant,
+        req: Request,
+        conn: &mut dyn Conn,
+    ) -> io::Result<()> {
+        let resp = match req {
+            Request::Hello { .. } => {
+                Response::Error { detail: "already authenticated".to_string() }
+            }
+            Request::Append { ptype, body } => self.append(client, grant, ptype, &body)?,
+            Request::Read { start, end } => {
+                self.stats.reads.fetch_add(1, Ordering::Relaxed);
+                let records = self.playable(grant, self.backend.read(start, end)?);
+                Response::Records { records }
+            }
+            Request::Poll { start, ptype } => {
+                self.stats.reads.fetch_add(1, Ordering::Relaxed);
+                self.poll(client, grant, start, ptype)?
+            }
+        };
+        send_response(conn, &resp)
+    }
+
+    /// Append one entry for `client` and pair it with its receipt.
+    fn append(
+        &self,
+        client: &str,
+        grant: &Grant,
+        ptype: PayloadType,
+        body: &str,
+    ) -> io::Result<Response> {
+        if !grant.can_append(ptype) {
+            self.stats.denials.fetch_add(1, Ordering::Relaxed);
+            let err = AclError { client: client.to_string(), op: "append", ptype };
+            return Ok(Response::Denied { reason: err.to_string() });
+        }
+        let body = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => {
+                return Ok(Response::Error { detail: format!("append body is not valid JSON: {e:?}") })
+            }
+        };
+        let author = format!("{REMOTE_AUTHOR_PREFIX}{client}");
+        let _gate = self.append_gate.lock().unwrap();
+        let entry = Entry {
+            position: self.backend.tail(),
+            realtime_ts: self.clock.realtime_ms(),
+            payload: Payload::new(ptype, author, body),
+        };
+        self.backend.append(&entry.to_bytes())?;
+        self.stats.appends.fetch_add(1, Ordering::Relaxed);
+        // The gate is still held: last_receipt() is this append's receipt.
+        let receipt = self.backend.last_receipt().ok_or_else(|| {
+            io::Error::new(io::ErrorKind::Other, "append committed but produced no receipt")
+        })?;
+        debug_assert_eq!(receipt.position + receipt.count, entry.position + 1);
+        Ok(Response::Receipt(receipt))
+    }
+
+    /// Typed poll from `start` to the tail, grant-filtered.
+    fn poll(
+        &self,
+        client: &str,
+        grant: &Grant,
+        start: u64,
+        ptype: Option<PayloadType>,
+    ) -> io::Result<Response> {
+        if let Some(t) = ptype {
+            if !grant.can_play(t) {
+                self.stats.denials.fetch_add(1, Ordering::Relaxed);
+                let err = AclError { client: client.to_string(), op: "play", ptype: t };
+                return Ok(Response::Denied { reason: err.to_string() });
+            }
+        }
+        let tail = self.backend.tail();
+        if start >= tail {
+            return Ok(Response::Records { records: Vec::new() });
+        }
+        let records = if let Some(t) = ptype {
+            // The per-type position index gives O(matches) point reads.
+            match self.backend.positions_for_type(t, start, tail) {
+                Some(positions) => {
+                    let mut out = Vec::with_capacity(positions.len());
+                    for p in positions {
+                        out.extend(self.backend.read(p, p + 1)?);
+                    }
+                    out
+                }
+                None => {
+                    let all = self.backend.read(start, tail)?;
+                    all.into_iter()
+                        .filter(|(_, b)| Entry::peek_type(b) == Some(t))
+                        .collect()
+                }
+            }
+        } else {
+            self.playable(grant, self.backend.read(start, tail)?)
+        };
+        Ok(Response::Records { records })
+    }
+
+    /// Keep only records whose type the grant may play.
+    fn playable(&self, grant: &Grant, records: Vec<(u64, Vec<u8>)>) -> Vec<(u64, Vec<u8>)> {
+        records
+            .into_iter()
+            .filter(|(_, b)| Entry::peek_type(b).is_some_and(|t| grant.can_play(t)))
+            .collect()
+    }
+}
+
+fn validate_client_name(client: &str) -> Result<(), &'static str> {
+    if client.is_empty() {
+        return Err("client identity must not be empty");
+    }
+    if client.len() > MAX_CLIENT_NAME {
+        return Err("client identity too long");
+    }
+    if !client.chars().all(|c| c.is_ascii_graphic()) {
+        return Err("client identity must be printable ASCII without spaces");
+    }
+    if client == SESSION_AUTHOR || client.starts_with(REMOTE_AUTHOR_PREFIX) {
+        return Err("client identity impersonates the gateway");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client half
+// ---------------------------------------------------------------------------
+
+/// A connected, authenticated gateway client over any [`Conn`].
+pub struct GatewayClient {
+    conn: Box<dyn Conn>,
+    /// Lease epoch the gateway reported at hello.
+    pub epoch: u64,
+    /// Log tail at hello time.
+    pub hello_tail: u64,
+}
+
+impl GatewayClient {
+    /// Send `Hello` and wait for `HelloOk`.
+    pub fn connect(mut conn: Box<dyn Conn>, client: &str, role: Role) -> io::Result<GatewayClient> {
+        super::wire::send_request(
+            &mut *conn,
+            &Request::Hello { client: client.to_string(), role },
+        )?;
+        match super::wire::recv_response(&mut *conn)? {
+            Some(Response::HelloOk { epoch, tail }) => {
+                Ok(GatewayClient { conn, epoch, hello_tail: tail })
+            }
+            Some(Response::Denied { reason }) => {
+                Err(io::Error::new(io::ErrorKind::PermissionDenied, reason))
+            }
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected hello response: {other:?}"),
+            )),
+        }
+    }
+
+    fn round_trip(&mut self, req: &Request) -> io::Result<Response> {
+        super::wire::send_request(&mut *self.conn, req)?;
+        super::wire::recv_response(&mut *self.conn)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "gateway closed mid-request")
+        })
+    }
+
+    /// Append `body` (JSON text) as `ptype`. `Ok(Ok(receipt))` on commit,
+    /// `Ok(Err(reason))` on an ACL denial, `Err` on transport failure.
+    pub fn append(
+        &mut self,
+        ptype: PayloadType,
+        body: &str,
+    ) -> io::Result<Result<super::merkle::Receipt, String>> {
+        match self.round_trip(&Request::Append { ptype, body: body.to_string() })? {
+            Response::Receipt(r) => Ok(Ok(r)),
+            Response::Denied { reason } => Ok(Err(reason)),
+            Response::Error { detail } => Err(io::Error::new(io::ErrorKind::Other, detail)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected append response: {other:?}"),
+            )),
+        }
+    }
+
+    fn expect_records(resp: Response) -> io::Result<Vec<(u64, Vec<u8>)>> {
+        match resp {
+            Response::Records { records } => Ok(records),
+            Response::Denied { reason } => {
+                Err(io::Error::new(io::ErrorKind::PermissionDenied, reason))
+            }
+            Response::Error { detail } => Err(io::Error::new(io::ErrorKind::Other, detail)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected read response: {other:?}"),
+            )),
+        }
+    }
+
+    /// Raw range read `[start, end)` (grant-filtered server-side).
+    pub fn read(&mut self, start: u64, end: u64) -> io::Result<Vec<(u64, Vec<u8>)>> {
+        let resp = self.round_trip(&Request::Read { start, end })?;
+        Self::expect_records(resp)
+    }
+
+    /// Typed poll from `start` to the tail.
+    pub fn poll(
+        &mut self,
+        start: u64,
+        ptype: Option<PayloadType>,
+    ) -> io::Result<Vec<(u64, Vec<u8>)>> {
+        let resp = self.round_trip(&Request::Poll { start, ptype })?;
+        Self::expect_records(resp)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unix-domain-socket server (process boundary)
+// ---------------------------------------------------------------------------
+
+/// Accept loop over a Unix-domain socket. Serves each connection on its
+/// own thread; with `max_conns` set it stops accepting after that many
+/// connections and joins them (the CI smoke session uses this to
+/// terminate deterministically). Socket files are endpoints, not
+/// durability state, so their creation/cleanup is allowlisted in the seam
+/// lint rather than routed through `SegmentIo`.
+#[cfg(unix)]
+pub fn serve_unix(
+    gateway: Arc<Gateway>,
+    socket: &std::path::Path,
+    max_conns: Option<u64>,
+) -> io::Result<()> {
+    use std::os::unix::net::UnixListener;
+    if socket.exists() {
+        std::fs::remove_file(socket)?;
+    }
+    let listener = UnixListener::bind(socket)?;
+    let mut served = 0u64;
+    let mut workers = Vec::new();
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        let gw = Arc::clone(&gateway);
+        workers.push(std::thread::spawn(move || {
+            // Connection-level failures (client vanished, torn frame) are
+            // that connection's problem, not the gateway's.
+            let _ = gw.serve_conn(&mut stream);
+        }));
+        served += 1;
+        if max_conns.is_some_and(|m| served >= m) {
+            break;
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let _ = std::fs::remove_file(socket);
+    Ok(())
+}
+
+/// Connect to a gateway's Unix-domain socket.
+#[cfg(unix)]
+pub fn connect_unix(socket: &std::path::Path) -> io::Result<Box<dyn Conn>> {
+    Ok(Box::new(std::os::unix::net::UnixStream::connect(socket)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::wire::pipe;
+    use std::thread;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("logact-gateway-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{}-{}.log", name, std::process::id()));
+        cleanup(&p);
+        p
+    }
+
+    fn cleanup(p: &std::path::Path) {
+        let mut paths = vec![p.to_path_buf()];
+        for suffix in ["ckpt", "lease", "manifest"] {
+            paths.push(p.with_extension(suffix));
+        }
+        for i in 0..20 {
+            paths.push(p.with_extension(format!("{i:04}")));
+            paths.push(p.with_extension(format!("{i:04}.ckpt")));
+        }
+        for q in paths {
+            let _ = std::fs::remove_file(q);
+        }
+    }
+
+    fn spawn_gateway(p: &std::path::Path) -> (Arc<Gateway>, Vec<thread::JoinHandle<()>>) {
+        let gw = Arc::new(Gateway::new(
+            Arc::new(DurableBackend::open(p).unwrap()),
+            Clock::sim(),
+        ));
+        (gw, Vec::new())
+    }
+
+    /// One served in-process connection; returns the client end connected.
+    fn connect(
+        gw: &Arc<Gateway>,
+        workers: &mut Vec<thread::JoinHandle<()>>,
+        name: &str,
+        role: Role,
+    ) -> GatewayClient {
+        let (client_end, mut server_end) = pipe();
+        let g = Arc::clone(gw);
+        workers.push(thread::spawn(move || {
+            let _ = g.serve_conn(&mut server_end);
+        }));
+        GatewayClient::connect(Box::new(client_end), name, role).unwrap()
+    }
+
+    #[test]
+    fn hello_append_receipt_lifecycle() {
+        let p = tmp("lifecycle");
+        let (gw, mut workers) = spawn_gateway(&p);
+        let mut c = connect(&gw, &mut workers, "driver-1", Role::Driver);
+        assert_eq!(c.epoch, gw.epoch());
+        assert_eq!(c.hello_tail, 1); // the session marker landed first
+        let r = c.append(PayloadType::Intent, "{\"action\":\"send\"}").unwrap().unwrap();
+        assert_eq!(r.position, 1);
+        assert_eq!(r.epoch, gw.epoch());
+        assert!(gw.backend().verify_receipt(&r));
+        // The appended entry is authored gw:<client>.
+        let records = gw.backend().read(1, 2).unwrap();
+        let e = Entry::from_bytes(&records[0].1).unwrap();
+        assert_eq!(&*e.payload.author, "gw:driver-1");
+        drop(c);
+        for w in workers {
+            w.join().unwrap();
+        }
+        cleanup(&p);
+    }
+
+    #[test]
+    fn acl_denial_keeps_the_connection_up() {
+        let p = tmp("acl");
+        let (gw, mut workers) = spawn_gateway(&p);
+        let mut c = connect(&gw, &mut workers, "ext-1", Role::External);
+        // Externals may not append Intent (paper Table 2)...
+        let denied = c.append(PayloadType::Intent, "{}").unwrap().unwrap_err();
+        assert!(denied.contains("may not append"), "{denied}");
+        assert!(denied.contains("ext-1"), "{denied}");
+        // ...but the connection survives and Mail goes through.
+        let r = c.append(PayloadType::Mail, "{\"to\":\"driver\"}").unwrap().unwrap();
+        assert!(gw.backend().verify_receipt(&r));
+        assert_eq!(gw.stats.denials.load(std::sync::atomic::Ordering::Relaxed), 1);
+        drop(c);
+        for w in workers {
+            w.join().unwrap();
+        }
+        cleanup(&p);
+    }
+
+    #[test]
+    fn first_request_must_be_hello() {
+        let p = tmp("nohello");
+        let (gw, _) = spawn_gateway(&p);
+        let (mut client_end, mut server_end) = pipe();
+        let t = thread::spawn(move || gw.serve_conn(&mut server_end));
+        super::super::wire::send_request(
+            &mut client_end,
+            &Request::Append { ptype: PayloadType::Mail, body: "{}".into() },
+        )
+        .unwrap();
+        match super::super::wire::recv_response(&mut client_end).unwrap() {
+            Some(Response::Error { detail }) => assert!(detail.contains("hello"), "{detail}"),
+            other => panic!("expected error, got {other:?}"),
+        }
+        assert!(t.join().unwrap().is_err());
+        cleanup(&p);
+    }
+
+    #[test]
+    fn forged_identities_rejected() {
+        let p = tmp("forge");
+        let (gw, _) = spawn_gateway(&p);
+        for bad in ["", "gateway", "gw:sneaky", "has space", "ctl\u{7}"] {
+            let (client_end, mut server_end) = pipe();
+            let g = Arc::clone(&gw);
+            let t = thread::spawn(move || g.serve_conn(&mut server_end));
+            let err = GatewayClient::connect(Box::new(client_end), bad, Role::External)
+                .err()
+                .unwrap_or_else(|| panic!("identity {bad:?} accepted"));
+            assert_eq!(err.kind(), std::io::ErrorKind::PermissionDenied, "{bad:?}");
+            assert!(t.join().unwrap().is_err());
+        }
+        // No session marker was appended for any rejected hello.
+        assert_eq!(gw.backend().tail(), 0);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn poll_serves_only_playable_types() {
+        let p = tmp("poll");
+        let (gw, mut workers) = spawn_gateway(&p);
+        let mut driver = connect(&gw, &mut workers, "d", Role::Driver);
+        driver.append(PayloadType::Intent, "{\"n\":1}").unwrap().unwrap();
+        driver.append(PayloadType::Intent, "{\"n\":2}").unwrap().unwrap();
+        let mut exec = connect(&gw, &mut workers, "x", Role::Executor);
+        // Executors play Commit/Intent/Policy but not Mail; a typed poll
+        // for Mail is denied outright.
+        let err = exec.poll(0, Some(PayloadType::Mail)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::PermissionDenied);
+        // A typed Intent poll returns exactly the two intents.
+        let intents = exec.poll(0, Some(PayloadType::Intent)).unwrap();
+        assert_eq!(intents.len(), 2);
+        for (_, bytes) in &intents {
+            assert_eq!(Entry::peek_type(bytes), Some(PayloadType::Intent));
+        }
+        // An untyped poll filters to the playable set (markers are Policy,
+        // which executors may play; Mail would be dropped).
+        let all = exec.poll(0, None).unwrap();
+        assert!(all.len() >= 4); // 2 session markers + 2 intents
+        drop(driver);
+        drop(exec);
+        for w in workers {
+            w.join().unwrap();
+        }
+        cleanup(&p);
+    }
+
+    #[test]
+    fn concurrent_clients_get_dense_disjoint_receipts() {
+        let p = tmp("concurrent");
+        let (gw, mut workers) = spawn_gateway(&p);
+        const N: usize = 8;
+        const M: usize = 5;
+        let mut clients = Vec::new();
+        for i in 0..N {
+            clients.push(connect(&gw, &mut workers, &format!("c{i}"), Role::Driver));
+        }
+        let handles: Vec<_> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut c)| {
+                thread::spawn(move || {
+                    (0..M)
+                        .map(|j| {
+                            c.append(PayloadType::Intent, &format!("{{\"c\":{i},\"j\":{j}}}"))
+                                .unwrap()
+                                .unwrap()
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut positions = Vec::new();
+        for h in handles {
+            for r in h.join().unwrap() {
+                assert_eq!(r.count, 1);
+                assert!(gw.backend().verify_receipt(&r));
+                positions.push(r.position);
+            }
+        }
+        positions.sort_unstable();
+        positions.dedup();
+        assert_eq!(positions.len(), N * M, "duplicate or lost receipt positions");
+        assert_eq!(gw.backend().tail(), (N + N * M) as u64);
+        for w in workers {
+            w.join().unwrap();
+        }
+        cleanup(&p);
+    }
+}

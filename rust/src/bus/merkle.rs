@@ -201,6 +201,83 @@ impl MerkleTree {
         }
         Some(out)
     }
+
+    /// `MTH` over the leaf range `[lo, hi)`. Aligned complete subtrees
+    /// come from the cached levels; everything else recurses by the RFC
+    /// 6962 split (largest power of two strictly below the range size).
+    fn range_root(&self, lo: u64, hi: u64) -> [u8; 32] {
+        debug_assert!(lo < hi && hi <= self.len());
+        let n = hi - lo;
+        if n.is_power_of_two() && lo % n == 0 {
+            let k = n.trailing_zeros() as usize;
+            if let Some(h) = self.levels.get(k).and_then(|l| l.get((lo >> k) as usize)) {
+                return *h; // complete aligned subtree: cached
+            }
+        }
+        if n == 1 {
+            return self.levels[0][lo as usize];
+        }
+        let k = split_point(n);
+        node_hash(&self.range_root(lo, lo + k), &self.range_root(lo + k, hi))
+    }
+
+    /// `MTH` of the first `m` leaves — the root this tree had when it was
+    /// `m` leaves long. `None` if `m` exceeds the current size.
+    pub fn prefix_root(&self, m: u64) -> Option<[u8; 32]> {
+        if m > self.len() {
+            return None;
+        }
+        if m == 0 {
+            return Some(empty_root());
+        }
+        Some(self.range_root(0, m))
+    }
+
+    /// RFC 6962 §2.1.2 consistency proof `PROOF(m, D[n])`: the node
+    /// hashes that let a verifier holding the size-`m` root check it is a
+    /// prefix commitment of this size-`n` tree (see
+    /// [`verify_consistency`]). `None` if `m == 0` or `m > n`; `m == n`
+    /// yields the RFC's empty proof.
+    pub fn consistency_path(&self, m: u64) -> Option<Vec<[u8; 32]>> {
+        let n = self.len();
+        if m == 0 || m > n {
+            return None;
+        }
+        let mut out = Vec::new();
+        self.subproof(m, 0, n, true, &mut out);
+        Some(out)
+    }
+
+    /// RFC 6962 `SUBPROOF(m, D[lo..hi], complete)`; `complete` tracks
+    /// whether the old root is derivable from the recursion so far (the
+    /// RFC's `true` flag: the subtree *is* the old tree).
+    fn subproof(&self, m: u64, lo: u64, hi: u64, complete: bool, out: &mut Vec<[u8; 32]>) {
+        let n = hi - lo;
+        debug_assert!(m >= 1 && m <= n);
+        if m == n {
+            if !complete {
+                out.push(self.range_root(lo, hi));
+            }
+            return;
+        }
+        let k = split_point(n);
+        if m <= k {
+            self.subproof(m, lo, lo + k, complete, out);
+            out.push(self.range_root(lo + k, hi));
+        } else {
+            self.subproof(m - k, lo + k, hi, false, out);
+            out.push(self.range_root(lo, lo + k));
+        }
+    }
+}
+
+/// Largest power of two strictly less than `n` (RFC 6962's split point;
+/// `n >= 2`).
+fn split_point(n: u64) -> u64 {
+    debug_assert!(n >= 2);
+    let k = 1u64 << (63 - (n - 1).leading_zeros());
+    debug_assert!(k < n && k * 2 >= n);
+    k
 }
 
 /// Verify an RFC 6962 audit path (the RFC 9162 §2.1.3.2 algorithm):
@@ -238,6 +315,67 @@ pub fn verify_path(
         snode >>= 1;
     }
     snode == 0 && r == *root
+}
+
+/// Verify an RFC 6962 consistency proof (the RFC 9162 §2.1.4.2
+/// algorithm): is the tree of `m` leaves with root `old` a prefix of the
+/// tree of `n` leaves with root `new`, given
+/// [`MerkleTree::consistency_path`] output in `path`? Rejects `m == 0`
+/// (nothing to prove), size inversions, wrong-length paths, and any
+/// flipped bit in either root or the path.
+pub fn verify_consistency(
+    m: u64,
+    n: u64,
+    path: &[[u8; 32]],
+    old: &[u8; 32],
+    new: &[u8; 32],
+) -> bool {
+    if m == 0 || m > n {
+        return false;
+    }
+    if m == n {
+        // The RFC's empty proof: identical sizes must mean identical roots.
+        return path.is_empty() && old == new;
+    }
+    // Step 2: when the old tree was a complete subtree its root is not in
+    // the path — it seeds the walk directly.
+    let mut iter = path.iter();
+    let (mut fr, mut sr) = if m.is_power_of_two() {
+        (*old, *old)
+    } else {
+        match iter.next() {
+            Some(first) => (*first, *first),
+            None => return false,
+        }
+    };
+    // Step 3/4: node indices of the seed in each tree, right-shifted past
+    // the complete low end of the old tree.
+    let mut fnode = m - 1;
+    let mut snode = n - 1;
+    while fnode & 1 == 1 {
+        fnode >>= 1;
+        snode >>= 1;
+    }
+    for c in iter {
+        if snode == 0 {
+            return false; // path longer than the new tree is tall
+        }
+        if fnode & 1 == 1 || fnode == snode {
+            fr = node_hash(c, &fr);
+            sr = node_hash(c, &sr);
+            if fnode & 1 == 0 {
+                while fnode & 1 == 0 && fnode != 0 {
+                    fnode >>= 1;
+                    snode >>= 1;
+                }
+            }
+        } else {
+            sr = node_hash(&sr, c);
+        }
+        fnode >>= 1;
+        snode >>= 1;
+    }
+    snode == 0 && fr == *old && sr == *new
 }
 
 /// What a durable append hands back: a cryptographic commitment to the
@@ -300,6 +438,69 @@ impl InclusionProof {
     /// out of band (a receipt, a published checkpoint).
     pub fn verify_record(&self, payload: &[u8], trusted_root: &[u8; 32]) -> bool {
         self.verify() && leaf_hash(payload) == self.leaf && self.root == *trusted_root
+    }
+}
+
+/// Proof that the chain root published at tail `old_tail` is a prefix
+/// commitment of the chain root at tail `new_tail` — i.e. the log only
+/// appended between the two publications, never rewrote (the PR 9
+/// leftover: consistency between two published roots).
+///
+/// Segments seal append-only, so the chain decomposes as: every segment
+/// wholly before the boundary is byte-identical in both views (its sealed
+/// root is shared), and only the segment containing `old_tail` needs a
+/// real RFC 6962 consistency path between its `boundary_m`-leaf prefix
+/// and its `boundary_n`-leaf present. A forked log fails the in-segment
+/// path, the chain refold, or both.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConsistencyProof {
+    /// Global tail the old root was published at.
+    pub old_tail: u64,
+    /// Global tail of the log the proof was built from.
+    pub new_tail: u64,
+    /// Chain index of the segment containing `old_tail`.
+    pub boundary_seg: usize,
+    /// Leaves of the boundary segment at `old_tail` / at `new_tail`.
+    pub boundary_m: u64,
+    pub boundary_n: u64,
+    /// The boundary segment's root when it held `boundary_m` leaves.
+    pub boundary_old_root: [u8; 32],
+    /// RFC 6962 consistency path inside the boundary segment.
+    pub path: Vec<[u8; 32]>,
+    /// Every current segment root in chain order; entry `boundary_seg`
+    /// must be consistent with `boundary_old_root`.
+    pub seg_roots: Vec<[u8; 32]>,
+    /// Chain root at `old_tail` (what was published then).
+    pub old_root: [u8; 32],
+    /// Chain root at `new_tail` (what is published now).
+    pub new_root: [u8; 32],
+}
+
+impl ConsistencyProof {
+    /// Structural verification, offline: the old chain root refolds from
+    /// the shared sealed prefix + the boundary segment's old subtree
+    /// root, that subtree is RFC 6962-consistent with the boundary
+    /// segment today, and today's segment roots refold to the new chain
+    /// root. Any rewrite under `old_tail` breaks at least one link.
+    pub fn verify(&self) -> bool {
+        let Some(boundary_now) = self.seg_roots.get(self.boundary_seg) else {
+            return false;
+        };
+        if self.old_tail > self.new_tail || self.boundary_m == 0 || self.boundary_m > self.boundary_n
+        {
+            return false;
+        }
+        let mut old_chain: Vec<[u8; 32]> = self.seg_roots[..self.boundary_seg].to_vec();
+        old_chain.push(self.boundary_old_root);
+        chain_root(&old_chain) == self.old_root
+            && verify_consistency(
+                self.boundary_m,
+                self.boundary_n,
+                &self.path,
+                &self.boundary_old_root,
+                boundary_now,
+            )
+            && chain_root(&self.seg_roots) == self.new_root
     }
 }
 
@@ -582,6 +783,166 @@ mod tests {
         ] {
             assert!(!bad.verify(), "tampered {name} must fail");
         }
+    }
+
+    /// Reference consistency proof straight from RFC 6962 §2.1.2:
+    /// `SUBPROOF(m, D[n], true)` by recursive slicing, no caching.
+    fn ref_consistency(m: u64, leaves: &[[u8; 32]], complete: bool) -> Vec<[u8; 32]> {
+        let n = leaves.len() as u64;
+        if m == n {
+            return if complete { vec![] } else { vec![mth(leaves)] };
+        }
+        let mut k = 1usize;
+        while (k * 2) < n as usize {
+            k *= 2;
+        }
+        if m <= k as u64 {
+            let mut p = ref_consistency(m, &leaves[..k], complete);
+            p.push(mth(&leaves[k..]));
+            p
+        } else {
+            let mut p = ref_consistency(m - k as u64, &leaves[k..], false);
+            p.push(mth(&leaves[..k]));
+            p
+        }
+    }
+
+    #[test]
+    fn prefix_root_matches_a_freshly_built_prefix_tree() {
+        let ls = leaves(37);
+        let t = MerkleTree::from_leaves(ls.iter().copied());
+        assert_eq!(t.prefix_root(0), Some(empty_root()));
+        for m in 1..=37u64 {
+            assert_eq!(t.prefix_root(m), Some(mth(&ls[..m as usize])), "m={m}");
+        }
+        assert_eq!(t.prefix_root(38), None);
+    }
+
+    #[test]
+    fn consistency_path_matches_rfc_reference_at_every_size_and_split() {
+        // Exhaustive over small trees: every (m, n) with 1 <= m <= n.
+        for n in 1..=32u64 {
+            let ls = leaves(n);
+            let t = MerkleTree::from_leaves(ls.iter().copied());
+            for m in 1..=n {
+                let path = t.consistency_path(m).unwrap();
+                assert_eq!(path, ref_consistency(m, &ls, true), "m={m} n={n}");
+                let old = mth(&ls[..m as usize]);
+                assert!(verify_consistency(m, n, &path, &old, &t.root()), "m={m} n={n}");
+            }
+            assert_eq!(t.consistency_path(0), None);
+            assert_eq!(t.consistency_path(n + 1), None);
+        }
+    }
+
+    #[test]
+    fn property_random_sizes_and_splits_verify_and_reject_tamper() {
+        let mut rng = Rng::new(0xC0_0151);
+        for case in 0..60 {
+            let n = 2 + rng.gen_range(400);
+            let m = 1 + rng.gen_range(n); // 1..=n
+            let ls: Vec<[u8; 32]> =
+                (0..n).map(|i| leaf_hash(format!("c{case}-{i}").as_bytes())).collect();
+            let t = MerkleTree::from_leaves(ls.iter().copied());
+            let path = t.consistency_path(m).unwrap();
+            assert_eq!(path, ref_consistency(m, &ls, true), "case {case} m={m} n={n}");
+            let old = t.prefix_root(m).unwrap();
+            let new = t.root();
+            assert!(verify_consistency(m, n, &path, &old, &new), "case {case}");
+            // Tamper: flip one random bit of one random path element (when
+            // the path is non-empty), or of either root.
+            if !path.is_empty() {
+                let mut bad = path.clone();
+                let el = rng.gen_range(bad.len() as u64) as usize;
+                let bit = rng.gen_range(256) as usize;
+                bad[el][bit / 8] ^= 1 << (bit % 8);
+                assert!(!verify_consistency(m, n, &bad, &old, &new), "case {case} path tamper");
+            }
+            let mut bad_old = old;
+            bad_old[3] ^= 0x10;
+            assert!(!verify_consistency(m, n, &path, &bad_old, &new));
+            let mut bad_new = new;
+            bad_new[30] ^= 0x01;
+            assert!(!verify_consistency(m, n, &path, &old, &bad_new));
+            // Size games fail: claiming the proof is for a different split.
+            if m > 1 {
+                assert!(!verify_consistency(m - 1, n, &path, &t.prefix_root(m - 1).unwrap(), &new));
+            }
+            assert!(!verify_consistency(0, n, &path, &old, &new));
+            assert!(!verify_consistency(n + 1, n, &path, &old, &new));
+        }
+    }
+
+    #[test]
+    fn a_forked_history_is_refused() {
+        // Publish the size-8 root, then *rewrite* record 5 and grow to 12:
+        // no consistency path can reconcile the published root with the
+        // forked tree.
+        let ls = leaves(12);
+        let honest = MerkleTree::from_leaves(ls.iter().copied());
+        let old = honest.prefix_root(8).unwrap();
+        let mut forked_leaves = ls.clone();
+        forked_leaves[5] = leaf_hash(b"rewritten-history");
+        let forked = MerkleTree::from_leaves(forked_leaves.iter().copied());
+        // The forked tree happily *produces* a path for m=8 — but it
+        // proves consistency with its own rewritten prefix, never with
+        // the honestly published root.
+        let path = forked.consistency_path(8).unwrap();
+        assert!(!verify_consistency(8, 12, &path, &old, &forked.root()));
+        assert!(verify_consistency(8, 12, &path, &forked.prefix_root(8).unwrap(), &forked.root()));
+    }
+
+    #[test]
+    fn chain_consistency_proof_verifies_and_rejects_fork_and_tamper() {
+        // Segments of 5 + 4 + 3 leaves, roots published at tail 7 (mid
+        // segment 1) and tail 12.
+        let all = leaves(12);
+        let seg_bounds = [(0usize, 5usize), (5, 9), (9, 12)];
+        let segs: Vec<MerkleTree> = seg_bounds
+            .iter()
+            .map(|&(lo, hi)| MerkleTree::from_leaves(all[lo..hi].iter().copied()))
+            .collect();
+        let seg_roots: Vec<[u8; 32]> = segs.iter().map(|t| t.root()).collect();
+        // At tail 7 the chain was [seg0 root, first-2-leaves-of-seg1 root].
+        let boundary_old_root = segs[1].prefix_root(2).unwrap();
+        let old_root = chain_root(&[seg_roots[0], boundary_old_root]);
+        let proof = ConsistencyProof {
+            old_tail: 7,
+            new_tail: 12,
+            boundary_seg: 1,
+            boundary_m: 2,
+            boundary_n: 4,
+            boundary_old_root,
+            path: segs[1].consistency_path(2).unwrap(),
+            seg_roots: seg_roots.clone(),
+            old_root,
+            new_root: chain_root(&seg_roots),
+        };
+        assert!(proof.verify());
+        for (name, bad) in [
+            ("boundary_m", ConsistencyProof { boundary_m: 3, ..proof.clone() }),
+            ("boundary_seg", ConsistencyProof { boundary_seg: 0, ..proof.clone() }),
+            ("old_root", ConsistencyProof { old_root: seg_roots[0], ..proof.clone() }),
+            ("new_root", ConsistencyProof { new_root: old_root, ..proof.clone() }),
+            (
+                "boundary_old_root",
+                ConsistencyProof { boundary_old_root: seg_roots[1], ..proof.clone() },
+            ),
+        ] {
+            assert!(!bad.verify(), "tampered {name} must fail");
+        }
+        // A fork under the old tail: swap seg0's root for a rewritten one.
+        let rewritten = MerkleTree::from_leaves(
+            (0..5).map(|i| leaf_hash(format!("fork-{i}").as_bytes())),
+        );
+        let mut forked_roots = seg_roots.clone();
+        forked_roots[0] = rewritten.root();
+        let forked = ConsistencyProof {
+            seg_roots: forked_roots.clone(),
+            new_root: chain_root(&forked_roots),
+            ..proof.clone()
+        };
+        assert!(!forked.verify(), "forked sealed segment must be refused");
     }
 
     #[test]

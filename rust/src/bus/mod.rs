@@ -50,7 +50,17 @@
 //! [`merkle::Receipt`], any record gets an O(log n)
 //! [`merkle::InclusionProof`], and [`DurableBackend::verify`] is
 //! root-check-first with a full per-frame scan only as the localization
-//! fallback.
+//! fallback. Consistency between two published chain roots is provable
+//! offline ([`merkle::ConsistencyProof`], RFC 6962 §2.1.2).
+//!
+//! Remote clients reach the log through the **[`gateway`]**: one process
+//! owns the append lease and serves many concurrent clients over a
+//! length-prefixed, CRC-guarded binary [`wire`] protocol (Unix-domain
+//! socket or in-process duplex behind the [`wire::Conn`] seam, with a
+//! [`wire::FaultTransport`] double mirroring [`io::FaultIo`]). Each
+//! authenticated append comes back as a [`merkle::Receipt`] the client
+//! can verify offline; [`remote`] remains the in-process latency
+//! simulator for backend benchmarks.
 
 pub mod acl;
 pub mod backend;
@@ -58,6 +68,7 @@ pub mod bus;
 pub mod checkpoint;
 pub mod durable;
 pub mod entry;
+pub mod gateway;
 pub mod io;
 pub mod lease;
 pub mod manifest;
@@ -65,6 +76,7 @@ pub mod mem;
 pub mod merkle;
 pub mod registry;
 pub mod remote;
+pub mod wire;
 
 pub use acl::{AclError, Grant, Role};
 pub use backend::{BackendStats, LogBackend, TypeIndex};
@@ -72,10 +84,12 @@ pub use bus::{AgentBus, BusBackendKind, BusClient, BusError, DecodeStats};
 pub use checkpoint::{Checkpoint, CheckpointStats, PREAMBLE_LEN};
 pub use durable::DurableBackend;
 pub use entry::{DeciderPolicy, Entry, Payload, PayloadType, Vote, VoteKind};
+pub use gateway::{Gateway, GatewayClient};
 pub use io::{FaultIo, FaultMode, FsIo, IoOp, SegmentIo};
 pub use lease::{Fenced, LeaseConfig, LeaseRecord};
 pub use manifest::{Manifest, SegmentMeta};
+pub use merkle::{ConsistencyProof, InclusionProof, MerkleTree, Receipt};
 pub use mem::MemBackend;
-pub use merkle::{InclusionProof, MerkleTree, Receipt};
 pub use registry::{BusRegistry, NamespacedBackend, DEFAULT_REGISTRY_SHARDS};
 pub use remote::{LatencyProfile, RemoteBackend};
+pub use wire::{Conn, FaultTransport, Request, Response, WireFault, WireOp};

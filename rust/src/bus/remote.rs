@@ -7,6 +7,11 @@
 //! conditional-put for append, get for reads. Profiles mirror the paper's
 //! deployment modes: same-host, same-region, and geo-distributed
 //! ("AnonDB").
+//!
+//! This module is the *latency simulator* only. The real remote path — a
+//! process boundary, authenticated identities, ACL gating, and wire-level
+//! receipts — lives in [`super::gateway`] over the [`super::wire`]
+//! protocol.
 
 use super::backend::{BackendStats, LogBackend};
 use super::entry::PayloadType;

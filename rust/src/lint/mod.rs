@@ -47,7 +47,7 @@ pub mod source;
 pub use protocol::lint_entries;
 pub use scrub::{
     chain_root_at, collect_chain_leaves, lint_log_file, lint_log_file_with_io,
-    lint_registry_file, offline_prove, scan_frames, SegmentLeaves,
+    lint_registry_file, offline_consistency, offline_prove, scan_frames, SegmentLeaves,
 };
 pub use source::lint_sources;
 

@@ -25,7 +25,13 @@
 //!   every takeover bumps the epoch before its marker lands, so a repeat
 //!   or regression means a forked or replayed log (`epoch-regression`).
 //!   Markers without the field (predating the lease, or purely
-//!   in-process elections) are skipped.
+//!   in-process elections) are skipped;
+//! * **gateway audit**: every remote append (author `gw:<client>`,
+//!   written only by [`crate::bus::gateway`]) must be preceded by a
+//!   `gateway_session` Policy marker attributing that client identity —
+//!   an unattributed remote append means the audit trail was bypassed or
+//!   rewritten (`unattributed-remote-append`); a session marker without a
+//!   client identity is `malformed-gateway-session` (warn).
 //!
 //! The executor's reboot marker (`Result` with body `reboot: true`, no
 //! `intent_pos`) is part of the protocol and produces no finding. The
@@ -35,7 +41,8 @@
 
 use super::Finding;
 use crate::bus::entry::{DeciderPolicy, Entry, PayloadType, Vote, VoteKind};
-use std::collections::BTreeMap;
+use crate::bus::gateway::{REMOTE_AUTHOR_PREFIX, SESSION_KIND};
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Default)]
 struct IntentState {
@@ -56,10 +63,30 @@ pub fn lint_entries(entries: &[(u64, Entry)]) -> Vec<Finding> {
     let mut seen: BTreeMap<u64, PayloadType> = BTreeMap::new();
     let mut policy: Option<DeciderPolicy> = None;
     let mut lease_epoch: Option<(u64, u64)> = None; // (marker position, attested epoch)
+    let mut gw_sessions: BTreeSet<String> = BTreeSet::new();
 
     for (pos, e) in entries {
         let pos = *pos;
         let t = e.payload.ptype;
+        // Gateway audit: a remote append is only trustworthy if a session
+        // marker already attributed its client identity.
+        if let Some(client) = e.payload.author.strip_prefix(REMOTE_AUTHOR_PREFIX) {
+            if !gw_sessions.contains(client) {
+                findings.push(
+                    Finding::error(
+                        "unattributed-remote-append",
+                        format!(
+                            "remote append at {pos} is authored '{}' but no gateway_session \
+                             marker attributed client '{client}' before it — the gateway \
+                             always logs the session first, so this entry bypassed \
+                             authentication or the marker was rewritten",
+                            e.payload.author
+                        ),
+                    )
+                    .at(pos),
+                );
+            }
+        }
         match t {
             PayloadType::Intent => {
                 intents.insert(pos, IntentState::default());
@@ -173,6 +200,20 @@ pub fn lint_entries(entries: &[(u64, Entry)]) -> Vec<Finding> {
                                 "Policy entry of kind 'decider' without a parseable policy \
                                  body — the live decider ignores it, so the quorum rule did \
                                  not change where the author probably meant it to",
+                            )
+                            .at(pos),
+                        ),
+                    }
+                } else if e.payload.body.get_str("kind") == Some(SESSION_KIND) {
+                    match e.payload.body.get_str("client") {
+                        Some(client) if !client.is_empty() => {
+                            gw_sessions.insert(client.to_string());
+                        }
+                        _ => findings.push(
+                            Finding::warn(
+                                "malformed-gateway-session",
+                                "gateway_session marker without a client identity — the \
+                                 session it opened cannot be attributed to anyone",
                             )
                             .at(pos),
                         ),
@@ -554,5 +595,77 @@ mod tests {
             mk(3, Result, ipos(0)),
         ];
         assert_eq!(codes(&lint_entries(&log)), vec!["malformed-body"]);
+    }
+
+    fn mk_by(pos: u64, ptype: PayloadType, author: &str, body: Json) -> (u64, Entry) {
+        (
+            pos,
+            Entry {
+                position: pos,
+                realtime_ts: 1000 + pos,
+                payload: Payload::new(ptype, author.to_string(), body),
+            },
+        )
+    }
+
+    fn session_marker(pos: u64, client: &str) -> (u64, Entry) {
+        mk_by(
+            pos,
+            PayloadType::Policy,
+            "gateway",
+            Json::obj(vec![
+                ("kind", Json::str(SESSION_KIND)),
+                ("client", Json::str(client)),
+                ("role", Json::str("driver")),
+            ]),
+        )
+    }
+
+    #[test]
+    fn attributed_remote_appends_are_silent() {
+        use PayloadType::*;
+        let log = vec![
+            session_marker(0, "c1"),
+            mk_by(1, Intent, "gw:c1", Json::obj(vec![("action", Json::str("x"))])),
+            mk_by(2, Commit, "t", ipos(1)),
+            mk_by(3, Result, "t", ipos(1)),
+        ];
+        assert_eq!(codes(&lint_entries(&log)), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn unattributed_remote_append_is_an_error() {
+        use PayloadType::*;
+        // No session marker at all.
+        let log = vec![mk_by(0, Mail, "gw:ghost", Json::obj(vec![]))];
+        assert_eq!(codes(&lint_entries(&log)), vec!["unattributed-remote-append"]);
+        // A marker for a *different* client does not cover it, and a
+        // marker *after* the append is too late.
+        let log = vec![
+            session_marker(0, "c1"),
+            mk_by(1, Mail, "gw:c2", Json::obj(vec![])),
+            session_marker(2, "c2"),
+            mk_by(3, Mail, "gw:c2", Json::obj(vec![])), // now attributed
+        ];
+        assert_eq!(codes(&lint_entries(&log)), vec!["unattributed-remote-append"]);
+    }
+
+    #[test]
+    fn session_marker_without_client_warns() {
+        let log = vec![mk_by(
+            0,
+            PayloadType::Policy,
+            "gateway",
+            Json::obj(vec![("kind", Json::str(SESSION_KIND))]),
+        )];
+        assert_eq!(codes(&lint_entries(&log)), vec!["malformed-gateway-session"]);
+    }
+
+    #[test]
+    fn local_authors_are_never_audited() {
+        // Authors without the gw: prefix (in-process components) are out
+        // of the gateway audit's scope entirely.
+        let log = vec![mk_by(0, PayloadType::Mail, "user-7", Json::obj(vec![]))];
+        assert_eq!(codes(&lint_entries(&log)), Vec::<&str>::new());
     }
 }

@@ -1042,3 +1042,54 @@ pub fn offline_prove(
     };
     Ok(Ok((proof, payload, total)))
 }
+
+/// Build a [`merkle::ConsistencyProof`] between the chain root published
+/// at `old_tail` and the log's current root, straight off the files —
+/// read-only, no lease (the PR 9 leftover: consistency between two
+/// published roots). The outer `Err` is an I/O failure; the inner `Err`
+/// an audit verdict (`old_tail` out of range, corrupt chain).
+pub fn offline_consistency(
+    io: &dyn SegmentIo,
+    path: &Path,
+    old_tail: u64,
+) -> io::Result<Result<merkle::ConsistencyProof, String>> {
+    let segs = match collect_chain_leaves(io, path)? {
+        Ok(s) => s,
+        Err(e) => return Ok(Err(e)),
+    };
+    let new_tail: u64 = segs.iter().map(|s| s.frames.len() as u64).sum();
+    if old_tail == 0 || old_tail > new_tail {
+        return Ok(Err(format!(
+            "old tail {old_tail} is out of range (log tail is {new_tail}; a root is only \
+             published from tail 1 on)"
+        )));
+    }
+    // The segment the old tail lands in: the last one starting below it.
+    // Trailing empty active segments contribute no roots in either view.
+    let live: Vec<&SegmentLeaves> = segs.iter().filter(|s| !s.tree.is_empty()).collect();
+    let boundary_seg = live
+        .iter()
+        .rposition(|s| s.base < old_tail)
+        .expect("old_tail >= 1 lands in some non-empty segment");
+    let s = live[boundary_seg];
+    let boundary_m = old_tail - s.base;
+    let boundary_n = s.tree.len();
+    let boundary_old_root =
+        s.tree.prefix_root(boundary_m).expect("boundary_m <= segment leaf count");
+    let path_nodes = s.tree.consistency_path(boundary_m).expect("1 <= boundary_m <= leaves");
+    let seg_roots: Vec<[u8; 32]> = live.iter().map(|s| s.tree.root()).collect();
+    let mut old_chain: Vec<[u8; 32]> = seg_roots[..boundary_seg].to_vec();
+    old_chain.push(boundary_old_root);
+    Ok(Ok(merkle::ConsistencyProof {
+        old_tail,
+        new_tail,
+        boundary_seg,
+        boundary_m,
+        boundary_n,
+        boundary_old_root,
+        path: path_nodes,
+        seg_roots,
+        old_root: merkle::chain_root(&old_chain),
+        new_root: merkle::chain_root(&seg_roots),
+    }))
+}

@@ -13,6 +13,11 @@
 //!   prove <log> <pos>       O(log n) Merkle inclusion proof for a record
 //!   verify-receipt <log> --position P --count N --leaf H --root H
 //!                           re-check an append receipt against the log
+//!   consistency <log> --tail M [--root H]   RFC 6962 consistency proof
+//!                           between the root published at tail M and now
+//!   gateway <log> [--socket S] [--conns N]  serve the log to remote clients
+//!   client <socket> --name C --role R [--type T --body JSON | --poll P]
+//!                           one authenticated gateway session
 //!
 //! (clap is unavailable offline; argument parsing is hand-rolled.)
 
@@ -45,8 +50,11 @@ fn main() {
         Some("segments") => segments_cmd(&args),
         Some("prove") => prove_cmd(&args),
         Some("verify-receipt") => verify_receipt_cmd(&args),
+        Some("consistency") => consistency_cmd(&args),
+        Some("gateway") => gateway_cmd(&args),
+        Some("client") => client_cmd(&args),
         _ => {
-            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease|segments|prove|verify-receipt> [flags]");
+            eprintln!("usage: logact <demo|dojo|recover|swarm|serve|kernel-demo|lint|lease|segments|prove|verify-receipt|consistency|gateway|client> [flags]");
             eprintln!("  dojo    --defense <none|rule|dual>  --model <frontier|target>");
             eprintln!("  recover --folders N --kill K");
             eprintln!("  swarm   --seed S [--shared] [--log <path>] [--rotate-bytes N]");
@@ -72,6 +80,17 @@ fn main() {
             eprintln!("          re-check an append_batch receipt: the batch's last record");
             eprintln!("          must still hash to --leaf and the chain root as of");
             eprintln!("          P+N must reproduce --root; exits 1 on any mismatch");
+            eprintln!("  consistency <log> --tail M [--root HEX] [--json]   prove the chain");
+            eprintln!("          root published at tail M is a prefix commitment of the");
+            eprintln!("          current root (RFC 6962 consistency, read-only); with --root,");
+            eprintln!("          the proof's old root must also equal it; exits 1 if the");
+            eprintln!("          histories are inconsistent (a fork) or --root mismatches");
+            eprintln!("  gateway <log> [--socket PATH] [--conns N]   own the append lease and");
+            eprintln!("          serve remote clients over a unix socket (default");
+            eprintln!("          <log>.sock); with --conns, stop after N connections");
+            eprintln!("  client  <socket> --name C --role R (--type T --body JSON | --poll P");
+            eprintln!("          [--type T]) [--json]   one authenticated session: append one");
+            eprintln!("          entry (prints the receipt) or poll from position P");
             std::process::exit(2);
         }
     }
@@ -520,6 +539,273 @@ fn verify_receipt_cmd(args: &[String]) {
             std::process::exit(1);
         }
     }
+}
+
+/// `consistency <log> --tail M [--root HEX] [--json]` — prove the chain
+/// root published at tail M is a prefix commitment of the log's current
+/// root (RFC 6962 §2.1.2), entirely read-only. With `--root` the proof's
+/// reconstructed old root must also equal the caller's trusted copy —
+/// that is the real audit: "the root I saved then is consistent with the
+/// log now". Exit codes: 0 consistent, 1 fork/mismatch/audit failure,
+/// 2 usage/IO.
+fn consistency_cmd(args: &[String]) {
+    use logact::bus::merkle::{hex32, parse_hex32};
+    use logact::bus::FsIo;
+    use logact::util::json::Json;
+    let json = args.iter().any(|a| a == "--json");
+    let Some(log) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("consistency: pass a log path");
+        std::process::exit(2);
+    };
+    let Some(tail) = flag(args, "--tail").and_then(|s| s.parse::<u64>().ok()) else {
+        eprintln!("consistency: pass --tail <records> (the tail the old root was published at)");
+        std::process::exit(2);
+    };
+    let trusted = flag(args, "--root").map(|s| match parse_hex32(&s) {
+        Some(h) => h,
+        None => {
+            eprintln!("consistency: --root must be 64 hex digits");
+            std::process::exit(2);
+        }
+    });
+    let proof = match logact::lint::offline_consistency(&FsIo, std::path::Path::new(log), tail) {
+        Err(e) => {
+            eprintln!("consistency: cannot read {log}: {e}");
+            std::process::exit(2);
+        }
+        Ok(Err(verdict)) => {
+            eprintln!("consistency: {verdict}");
+            std::process::exit(1);
+        }
+        Ok(Ok(p)) => p,
+    };
+    let ok = proof.verify();
+    let root_ok = trusted.map_or(true, |t| t == proof.old_root);
+    if json {
+        let hashes = |hs: &[[u8; 32]]| Json::Arr(hs.iter().map(|h| Json::str(hex32(h))).collect());
+        println!(
+            "{}",
+            Json::obj(vec![(
+                "consistency",
+                Json::obj(vec![
+                    ("old_tail", Json::Int(proof.old_tail as i64)),
+                    ("new_tail", Json::Int(proof.new_tail as i64)),
+                    ("boundary_seg", Json::Int(proof.boundary_seg as i64)),
+                    ("boundary_m", Json::Int(proof.boundary_m as i64)),
+                    ("boundary_n", Json::Int(proof.boundary_n as i64)),
+                    ("path", hashes(&proof.path)),
+                    ("seg_roots", hashes(&proof.seg_roots)),
+                    ("old_root", Json::str(hex32(&proof.old_root))),
+                    ("new_root", Json::str(hex32(&proof.new_root))),
+                    ("verified", Json::Bool(ok)),
+                    ("trusted_root_matches", Json::Bool(root_ok)),
+                ]),
+            )])
+        );
+    } else {
+        println!("consistency of {log} between tail {} and tail {}:", proof.old_tail, proof.new_tail);
+        println!(
+            "  boundary    segment {} ({} of {} leaves were sealed under the old root)",
+            proof.boundary_seg, proof.boundary_m, proof.boundary_n
+        );
+        for (i, h) in proof.path.iter().enumerate() {
+            println!("  path[{i}]     {}", hex32(h));
+        }
+        println!("  old root    {}", hex32(&proof.old_root));
+        println!("  new root    {}", hex32(&proof.new_root));
+        println!("  verified    {}", if ok { "yes" } else { "NO — the histories fork" });
+        if let Some(t) = trusted {
+            println!(
+                "  trusted     {} ({})",
+                hex32(&t),
+                if root_ok { "matches the reconstructed old root" } else { "MISMATCH" }
+            );
+        }
+    }
+    if !ok || !root_ok {
+        std::process::exit(1);
+    }
+}
+
+/// `gateway <log> [--socket PATH] [--conns N]` — open the log (acquiring
+/// its epoch-fenced append lease) and serve remote clients over a
+/// unix-domain socket. With `--conns N` the gateway stops accepting after
+/// N connections and drains them — the deterministic-shutdown mode CI
+/// uses. Exit codes: 0 served and drained, 2 cannot open/bind.
+#[cfg(unix)]
+fn gateway_cmd(args: &[String]) {
+    use logact::bus::gateway::{serve_unix, Gateway};
+    let Some(log) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("gateway: pass a log path");
+        std::process::exit(2);
+    };
+    let socket = flag(args, "--socket")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(format!("{log}.sock")));
+    let conns = flag(args, "--conns").and_then(|s| s.parse::<u64>().ok());
+    let gw = match Gateway::open(std::path::Path::new(log)) {
+        Ok(g) => Arc::new(g),
+        Err(e) => {
+            eprintln!("gateway: cannot open {log}: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "gateway: serving {log} on {} (lease epoch {}, tail {}{})",
+        socket.display(),
+        gw.epoch(),
+        gw.backend().tail(),
+        conns.map_or(String::new(), |n| format!(", stopping after {n} conns"))
+    );
+    if let Err(e) = serve_unix(Arc::clone(&gw), &socket, conns) {
+        eprintln!("gateway: serve failed: {e}");
+        std::process::exit(2);
+    }
+    let s = &gw.stats;
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "gateway: drained — {} session(s), {} append(s), {} denial(s), {} read(s)",
+        s.sessions.load(Relaxed),
+        s.appends.load(Relaxed),
+        s.denials.load(Relaxed),
+        s.reads.load(Relaxed)
+    );
+}
+
+#[cfg(not(unix))]
+fn gateway_cmd(_args: &[String]) {
+    eprintln!("gateway: unix-domain sockets are unavailable on this platform");
+    std::process::exit(2);
+}
+
+/// `client <socket> --name C --role R (--type T --body JSON | --poll P
+/// [--type T]) [--json]` — one authenticated gateway session. An append
+/// prints the returned receipt (as JSON with `--json`, ready for
+/// `verify-receipt`); a poll prints the matching records. Exit codes:
+/// 0 ok, 1 denied by ACL, 2 usage/transport error.
+#[cfg(unix)]
+fn client_cmd(args: &[String]) {
+    use logact::bus::gateway::{connect_unix, GatewayClient};
+    use logact::bus::merkle::hex32;
+    use logact::bus::{PayloadType, Role};
+    use logact::util::json::Json;
+    let json = args.iter().any(|a| a == "--json");
+    let Some(socket) = args.iter().skip(1).find(|a| !a.starts_with("--")) else {
+        eprintln!("client: pass the gateway socket path");
+        std::process::exit(2);
+    };
+    let name = flag(args, "--name").unwrap_or_else(|| "cli".to_string());
+    let role_name = flag(args, "--role").unwrap_or_else(|| "external".to_string());
+    let Some(role) = Role::from_name(&role_name) else {
+        eprintln!(
+            "client: unknown role '{role_name}' (one of: {})",
+            Role::ALL.map(|r| r.name()).join(", ")
+        );
+        std::process::exit(2);
+    };
+    let ptype = match flag(args, "--type") {
+        None => None,
+        Some(t) => match PayloadType::from_name(&t) {
+            Some(p) => Some(p),
+            None => {
+                eprintln!("client: unknown entry type '{t}'");
+                std::process::exit(2);
+            }
+        },
+    };
+    let conn = match connect_unix(std::path::Path::new(socket)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client: cannot connect to {socket}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut client = match GatewayClient::connect(conn, &name, role) {
+        Ok(c) => c,
+        Err(e) if e.kind() == std::io::ErrorKind::PermissionDenied => {
+            eprintln!("client: {e}");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("client: hello failed: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(body) = flag(args, "--body") {
+        let ptype = ptype.unwrap_or(PayloadType::Mail);
+        match client.append(ptype, &body) {
+            Ok(Ok(r)) => {
+                if json {
+                    println!(
+                        "{}",
+                        Json::obj(vec![(
+                            "receipt",
+                            Json::obj(vec![
+                                ("position", Json::Int(r.position as i64)),
+                                ("count", Json::Int(r.count as i64)),
+                                ("leaf", Json::str(hex32(&r.leaf))),
+                                ("root", Json::str(hex32(&r.root))),
+                                ("epoch", Json::Int(r.epoch as i64)),
+                            ]),
+                        )])
+                    );
+                } else {
+                    println!("appended {} at position {} (lease epoch {})", ptype.name(), r.position, r.epoch);
+                    println!("  leaf  {}", hex32(&r.leaf));
+                    println!("  root  {}", hex32(&r.root));
+                }
+            }
+            Ok(Err(denied)) => {
+                eprintln!("client: {denied}");
+                std::process::exit(1);
+            }
+            Err(e) => {
+                eprintln!("client: append failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    } else if let Some(start) = flag(args, "--poll") {
+        let Ok(start) = start.parse::<u64>() else {
+            eprintln!("client: --poll takes a start position");
+            std::process::exit(2);
+        };
+        match client.poll(start, ptype) {
+            Ok(records) => {
+                println!("{} record(s) from position {start}:", records.len());
+                for (pos, bytes) in records {
+                    match logact::bus::Entry::from_bytes(&bytes) {
+                        Some(e) => println!(
+                            "  [{pos}] {:<8} {} {}",
+                            e.payload.ptype.name(),
+                            e.payload.author,
+                            e.payload.body.to_string().chars().take(60).collect::<String>()
+                        ),
+                        None => println!("  [{pos}] (undecodable frame, {} bytes)", bytes.len()),
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::PermissionDenied => {
+                eprintln!("client: {e}");
+                std::process::exit(1);
+            }
+            Err(e) => {
+                eprintln!("client: poll failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        println!(
+            "client: connected as '{name}' ({role_name}) — lease epoch {}, tail {} (pass \
+             --body to append or --poll to read)",
+            client.epoch, client.hello_tail
+        );
+    }
+}
+
+#[cfg(not(unix))]
+fn client_cmd(_args: &[String]) {
+    eprintln!("client: unix-domain sockets are unavailable on this platform");
+    std::process::exit(2);
 }
 
 fn kernel_demo() {
